@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, CSV rows, key generation.
+
+Methodology (paper §5.1 analog, adapted to CPU): jit + warmup (compile
+excluded), repeat until the median stabilizes, report median; keys are
+unique random uint64 (key distribution does not affect throughput). The
+roles of the paper's nvbench/Nsight are played by block_until_ready timing
+and the dry-run HLO inspection respectively.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import numpy as np
+import jax
+
+from repro.core import hashing as H
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, reps: int = 5,
+            min_reps: int = 3) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(reps, min_reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def keys_u64x2(n: int, seed: int = 0):
+    import jax.numpy as jnp
+    return jnp.asarray(H.random_u64x2(n, seed=seed))
+
+
+class Csv:
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        row = f"{name},{us_per_call:.3f},{derived}"
+        self.rows.append(row)
+        print(row, flush=True)
+
+    def header(self):
+        print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,31 @@
+"""Framework-integration benchmark: dedup-pipeline throughput (docs/s).
+
+Not a paper table — measures the paper's technique at its integration point:
+streaming document dedup (signature -> bulk contains -> bulk add) ahead of
+batch packing, as run by the training driver.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv
+from repro.data import dedup as D
+from repro.data import pipeline as DP
+
+
+def run(csv: Csv):
+    cfg = DP.CorpusConfig(n_docs=3000, dup_fraction=0.25, seed=11)
+    docs = list(DP.synthetic_corpus(cfg))
+    dd = D.DedupFilter(expected_docs=1 << 15, bits_per_key=16, batch_docs=256)
+    t0 = time.perf_counter()
+    kept = sum(1 for _ in dd.filter_stream(iter(docs)))
+    dt = time.perf_counter() - t0
+    csv.add("dedup/stream", dt * 1e6,
+            f"docs/s={len(docs)/dt:.0f} kept={kept} "
+            f"dropped={dd.stats.dropped} fill={dd.bf.fill_fraction():.3f}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

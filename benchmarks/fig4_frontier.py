@@ -1,0 +1,67 @@
+"""Paper Figure 4 analogue: throughput vs false-positive-rate frontier.
+
+For every variant (CBF / BBF / RBBF / SBF / CSBF at several block sizes and
+z), measures BOTH empirical FPR (space-optimal load, paper §5.1 protocol:
+insert n* keys solving Eq.(3), probe with disjoint keys) and bulk lookup /
+construction throughput. Reproduces the paper's qualitative frontier:
+CBF = accurate+slow corner, RBBF = fast+inaccurate corner, optimized
+SBF/CSBF dominating the middle.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, keys_u64x2, time_fn
+from repro.core import hashing as H
+from repro.core import variants as V
+
+M_BITS = 1 << 23
+N_KEYS = 1 << 18
+N_PROBE = 1 << 17
+
+CONFIGS = [
+    ("cbf", dict(k=11)),
+    ("bbf_B256", dict(variant="bbf", k=11, block_bits=256)),
+    ("rbbf", dict(variant="rbbf", k=6)),
+    ("sbf_B64", dict(variant="sbf", k=8, block_bits=64)),
+    ("sbf_B128", dict(variant="sbf", k=8, block_bits=128)),
+    ("sbf_B256", dict(variant="sbf", k=16, block_bits=256)),
+    ("sbf_B512", dict(variant="sbf", k=16, block_bits=512)),
+    ("csbf_B512_z2", dict(variant="csbf", k=12, block_bits=512, z=2)),
+    ("csbf_B1024_z4", dict(variant="csbf", k=16, block_bits=1024, z=4)),
+]
+
+
+def run(csv: Csv):
+    probe = keys_u64x2(N_PROBE, seed=999)
+    bench_keys = keys_u64x2(N_KEYS, seed=1)
+    for name, kw in CONFIGS:
+        variant = kw.pop("variant", "cbf")
+        spec = V.FilterSpec(variant, M_BITS, kw["k"],
+                            block_bits=kw.get("block_bits", 256),
+                            z=kw.get("z", 1))
+        # space-optimal load per paper §5.1 (solve Eq. 3 for n)
+        n_opt = V.space_optimal_n(spec)
+        ins = jnp.asarray(H.random_u64x2(min(n_opt, 1 << 20), seed=5))
+        filt = V.add_scatter(spec, V.init(spec), ins)
+        fpr = float(np.asarray(V.contains(spec, filt, probe)).mean())
+        contains = jax.jit(lambda f, k, spec=spec: V.contains(spec, f, k))
+        add = jax.jit(lambda f, k, spec=spec: V.add_loop(spec, f, k))
+        add_keys = bench_keys[: 1 << 14]
+        t_c = time_fn(contains, filt, bench_keys)
+        t_a = time_fn(add, filt, add_keys, warmup=1, reps=3)
+        csv.add(f"fig4/{name}/contains", t_c * 1e6,
+                f"GElem/s={N_KEYS/t_c/1e9:.4f} fpr={fpr:.2e} "
+                f"fpr_theory={V.fpr_theory(spec, len(ins)):.2e}")
+        csv.add(f"fig4/{name}/add", t_a * 1e6,
+                f"GElem/s={len(add_keys)/t_a/1e9:.4f}")
+        # restore k for reuse of CONFIGS on repeated run() calls
+        kw["k"] = spec.k
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,41 @@
+"""Paper Figures 5-8 analogue: cross-accelerator projection.
+
+The paper compares B200 / H200 / RTX PRO 6000 using measured GUPS bounds.
+Off-GPU we PROJECT the equivalent table for TPU generations from their
+public HBM bandwidths and the roofline model validated by our dry-run:
+DRAM-regime filter ops are random-sector-access bound, so
+
+    bound(chip, B) = HBM_bw / bytes_touched_per_op(B)
+
+with bytes_touched_per_op = max(B/8, 32) per lookup (min 32B transaction —
+the same granularity argument as the paper's 256-bit sector floor; TPU DMA
+granularity taken as 32B) and 2x for read-modify-write adds.
+Derived numbers, clearly labelled as projections.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Csv
+
+CHIPS = {
+    "tpu_v5e": {"hbm_gbs": 819},
+    "tpu_v5p": {"hbm_gbs": 2765},
+    "tpu_v6e": {"hbm_gbs": 1640},
+}
+MIN_TXN = 32                     # bytes
+
+
+def run(csv: Csv):
+    for chip, c in CHIPS.items():
+        for B in (64, 128, 256, 512, 1024):
+            per_op = max(B // 8, MIN_TXN)
+            g_c = c["hbm_gbs"] * 1e9 / per_op / 1e9
+            g_a = c["hbm_gbs"] * 1e9 / (2 * per_op) / 1e9
+            csv.add(f"fig5_8/{chip}/B{B}", 0.0,
+                    f"proj_contains_GElem/s={g_c:.1f} "
+                    f"proj_add_GElem/s={g_a:.1f} (derived)")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

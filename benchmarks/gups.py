@@ -1,0 +1,44 @@
+"""Random-access speed-of-light microbenchmark (GUPS) — paper §5.2 SOL line.
+
+The paper bounds DRAM-regime filter throughput by the GPU's random 64-bit
+load/store rate (HPCC RandomAccess). Our host analogue measures random
+gather (read) and scatter (update) over a working set far larger than LLC —
+every filter benchmark reports its throughput as a fraction of this bound,
+reproducing the paper's "fraction of speed-of-light" framing on this host.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, time_fn
+
+WORDS = 1 << 24          # 64 MiB of u32 — beyond LLC
+N_OPS = 1 << 20
+
+
+def run(csv: Csv):
+    rng = np.random.RandomState(0)
+    table = jnp.asarray(rng.randint(0, 2**31, WORDS, dtype=np.int64)
+                        .astype(np.uint32))
+    idx = jnp.asarray(rng.randint(0, WORDS, N_OPS).astype(np.int32))
+    vals = jnp.asarray(rng.randint(0, 2**31, N_OPS, dtype=np.int64)
+                       .astype(np.uint32))
+
+    gather = jax.jit(lambda t, i: t[i])
+    scatter = jax.jit(lambda t, i, v: t.at[i].max(v))
+
+    t_r = time_fn(gather, table, idx)
+    t_w = time_fn(scatter, table, idx, vals)
+    gups_r = N_OPS / t_r / 1e9
+    gups_w = N_OPS / t_w / 1e9
+    csv.add("gups/random_read", t_r * 1e6, f"GUPS={gups_r:.4f}")
+    csv.add("gups/random_update", t_w * 1e6, f"GUPS={gups_w:.4f}")
+    return {"read": gups_r, "write": gups_w}
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

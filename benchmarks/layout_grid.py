@@ -1,0 +1,71 @@
+"""Paper Table 1/2 (Θ, Φ) layout grid on the Pallas kernels.
+
+This container is CPU-only, so the kernels execute in interpret mode; the
+grid therefore measures the SCHEDULE STRUCTURE (loads issued, loop trip
+counts, per-step vector widths) rather than TPU wall-clock. Two artifacts:
+
+  * structural metrics per layout: loads per block, unrolled steps,
+    vector width per compare — derived analytically from (Θ, Φ, s) exactly
+    as the paper's Section 4.1 derivations;
+  * interpret-mode relative times (same engine overhead for all layouts, so
+    ratios indicate schedule cost on the traced graph).
+
+The paper's empirically-optimal picks (Θ̂_c = max(1, B/256), Θ̂_a = s) are
+encoded in kernels.sbf.default_layout; this bench verifies the defaults lie
+on the structural-cost frontier.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, keys_u64x2, time_fn
+from repro.core import variants as V
+from repro.kernels import ops
+from repro.kernels.sbf import Layout, default_layout
+
+M_BITS = 1 << 20
+N_KEYS = 2048
+K = 16
+
+
+def structural_cost(s: int, theta: int, phi: int, op: str) -> dict:
+    """Analytical schedule metrics (paper §4.1 reasoning, S=32 words)."""
+    loads_per_block = s // phi                       # wide loads issued
+    steps = max(s // (theta * phi), 1)               # strided loop trips
+    vec_width = theta * phi                          # lanes per compare
+    return {"loads": loads_per_block, "steps": steps, "vec_width": vec_width}
+
+
+def run(csv: Csv, measure: bool = True):
+    for B in (128, 256, 512):
+        spec = V.FilterSpec("sbf", M_BITS, K, block_bits=B)
+        s = spec.s
+        keys = keys_u64x2(N_KEYS, seed=3)
+        filt = V.add_scatter(spec, V.init(spec), keys)
+        layouts = sorted({(t, p) for t in (1, 2, 4, 8) for p in (1, 2, 4, 8)
+                          if p <= s and t * p <= max(s, 8)})
+        base_t = None
+        for theta, phi in layouts:
+            lay = Layout(theta, phi)
+            sc = structural_cost(s, theta, phi, "contains")
+            derived = (f"loads={sc['loads']} steps={sc['steps']} "
+                       f"vec={sc['vec_width']}")
+            if measure:
+                t = time_fn(
+                    lambda f, k, lay=lay, spec=spec:
+                        ops.bloom_contains(spec, f, k, layout=lay, tile=256),
+                    filt, keys, warmup=1, reps=3)
+                base_t = base_t or t
+                derived += f" rel_time={t/base_t:.2f}"
+            csv.add(f"layout/B{B}/Θ{theta}Φ{phi}", (t * 1e6) if measure else 0,
+                    derived)
+        d = default_layout(spec, "contains")
+        csv.add(f"layout/B{B}/default", 0,
+                f"picked=Θ{d.theta}Φ{d.phi} (paper rule Θ̂=max(1,B/256))")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

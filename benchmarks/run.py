@@ -1,0 +1,61 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+    gups          -> §5.2 random-access speed-of-light bound
+    table1_dram   -> Table 1 (DRAM-resident sweep over block size)
+    table2_cache  -> Table 2 (cache-resident sweep)
+    layout_grid   -> Tables 1/2 (Θ, Φ) dimension (structural, Pallas kernels)
+    fig4_frontier -> Figure 4 (throughput vs FPR frontier, measured FPR)
+    fig5_8_archs  -> Figures 5-8 (cross-accelerator projection, derived)
+    fig9_breakdown-> Figure 9 (incremental optimization breakdown)
+    dedup         -> framework integration (paper technique in the pipeline)
+"""
+import argparse
+import sys
+
+from benchmarks.common import Csv
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of bench names")
+    ap.add_argument("--skip-layout", action="store_true",
+                    help="skip the interpret-mode layout grid (slow)")
+    args = ap.parse_args(argv)
+
+    csv = Csv()
+    csv.header()
+
+    from benchmarks import (dedup_pipeline, fig4_frontier, fig5_8_archs,
+                            fig9_breakdown, gups, layout_grid, table1_dram,
+                            table2_cache)
+
+    benches = {
+        "gups": lambda: gups.run(csv),
+        "table1_dram": None,
+        "table2_cache": None,
+        "fig4_frontier": lambda: fig4_frontier.run(csv),
+        "fig5_8_archs": lambda: fig5_8_archs.run(csv),
+        "fig9_breakdown": lambda: fig9_breakdown.run(csv),
+        "layout_grid": lambda: layout_grid.run(csv),
+        "dedup": lambda: dedup_pipeline.run(csv),
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    sol = None
+    if only is None or "gups" in only:
+        sol = gups.run(csv)
+    if only is None or "table1_dram" in only:
+        table1_dram.run(csv, sol_gups=sol)
+    if only is None or "table2_cache" in only:
+        table2_cache.run(csv)
+    for name in ("fig4_frontier", "fig5_8_archs", "fig9_breakdown", "dedup"):
+        if only is None or name in only:
+            benches[name]()
+    if (only is None and not args.skip_layout) or (only and "layout_grid" in only):
+        layout_grid.run(csv)
+
+
+if __name__ == "__main__":
+    main()

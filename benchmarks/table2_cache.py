@@ -1,0 +1,21 @@
+"""Paper Table 2 analogue: cache-resident filter (fits this host's LLC).
+
+Same sweep as table1_dram with a 1 MiB filter — the regime where the paper
+shows compute-bound behaviour and the largest optimization gains.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Csv
+from benchmarks import table1_dram
+
+M_BITS = 1 << 23          # 1 MiB
+
+
+def run(csv: Csv, sol_gups=None):
+    table1_dram.run(csv, m_bits=M_BITS, tag="cache", sol_gups=None)
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,35 @@
+"""Quickstart: build, fill and query a TPU-native Bloom filter.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import BloomFilter
+from repro.core.hashing import random_u64x2
+
+
+def main():
+    # Size for 100k items at 16 bits/key; sectorized layout, 256-bit blocks
+    bf = BloomFilter.for_n_items(100_000, bits_per_key=16,
+                                 variant="sbf", block_bits=256)
+    print(f"created {bf.spec} ({bf.nbytes/1024:.0f} KiB)")
+
+    keys = random_u64x2(100_000, seed=42)
+    bf.add(keys)                                  # bulk insert
+    hits = np.asarray(bf.contains(keys))          # bulk lookup
+    print(f"inserted 100k keys; all found: {hits.all()}")
+
+    fpr = bf.measure_fpr(100_000)
+    print(f"measured FPR {fpr:.2e}  (theory {bf.fpr_theory(100_000):.2e})")
+    print(f"fill fraction {bf.fill_fraction():.3f}")
+
+    # the same API runs the Pallas TPU kernels when a TPU is attached:
+    bf_kernel = BloomFilter.create("sbf", m_bits=1 << 20, k=8,
+                                   block_bits=256, backend="pallas")
+    bf_kernel.add(keys[:1000])
+    print("pallas kernel path (interpret off-TPU):",
+          bool(np.asarray(bf_kernel.contains(keys[:1000])).all()))
+
+
+if __name__ == "__main__":
+    main()

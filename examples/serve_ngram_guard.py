@@ -1,0 +1,62 @@
+"""Serve a small model with batched requests + Bloom n-gram repetition guard.
+
+Shows the paper's filter in the decode loop: a greedy decoder that would
+loop forever gets broken out of the cycle by the guard's bulk n-gram
+membership tests.
+
+    PYTHONPATH=src python examples/serve_ngram_guard.py
+"""
+import dataclasses
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.ngram_guard import NGramGuard
+
+
+def tiny_model():
+    cfg = get_config("mistral-nemo-12b")
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab=512, max_seq_len=256)
+
+
+def main():
+    cfg = tiny_model()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 4
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=rng.randint(2, cfg.vocab, 16).astype(np.int32),
+                    max_new_tokens=24) for _ in range(B)]
+
+    # without guard: a random-init greedy decoder usually falls into a cycle
+    plain = Engine(model, params, batch=B, max_len=128)
+    outs = plain.generate(list(reqs))
+
+    def cycle_len(seq):
+        for p in range(1, len(seq) // 2 + 1):
+            if seq[-p:] == seq[-2 * p: -p]:
+                return p
+        return 0
+
+    cycles = [cycle_len(o) for o in outs]
+    print(f"[no guard]   outputs: {outs[0][:12]}... cycle lengths {cycles}")
+
+    guard = NGramGuard(batch=B, n=3, m_bits=1 << 16, top_k=64)
+    guarded = Engine(model, params, batch=B, max_len=128, guard=guard)
+    outs_g = guarded.generate(list(reqs))
+    cycles_g = [cycle_len(o) for o in outs_g]
+    print(f"[with guard] outputs: {outs_g[0][:12]}... cycle lengths {cycles_g}")
+    print(f"guard stats: {guard.stats.observed} n-grams recorded, "
+          f"{guard.stats.penalized} candidates penalized, "
+          f"filter fill {guard.bf.fill_fraction():.4f}")
+    broke = sum(1 for a, b in zip(cycles, cycles_g) if b == 0 or b > a)
+    print(f"repetition reduced/broken on {broke}/{B} sequences")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on CPU,
+with the Bloom-dedup data pipeline, checkpointing and the fault-tolerant
+driver — the full framework loop at laptop scale.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+
+Expected: loss drops from ~ln(vocab)≈9.2 to well below 7 within 300 steps
+(small zipf-synthetic corpus is easy to model).
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data import dedup as D
+from repro.data import pipeline as DP
+from repro.models.model import build_model
+from repro.runtime.fault_tolerance import DriverConfig, TrainingDriver
+from repro.training.train_step import make_train_step, train_state_init
+
+
+def build_100m():
+    """mistral-nemo family scaled to ~100M params (measured 97M)."""
+    cfg = get_config("mistral-nemo-12b")
+    return dataclasses.replace(
+        cfg, n_layers=10, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab=16384, max_seq_len=512)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = build_100m()
+    model = build_model(cfg)
+    print(f"model: {model.param_count()/1e6:.1f}M params")
+
+    # ---- data: synthetic corpus -> bloom dedup -> packed batches ----------
+    corpus = DP.CorpusConfig(n_docs=20_000, vocab=cfg.vocab,
+                             dup_fraction=0.25, seed=0)
+    dd = D.DedupFilter(expected_docs=1 << 16, bits_per_key=16)
+    packed = list(DP.batches(dd.filter_stream(DP.synthetic_corpus(corpus)),
+                             batch_size=args.batch, seq_len=args.seq))
+    print(f"data: kept {dd.stats.seen - dd.stats.dropped}/{dd.stats.seen} "
+          f"docs after dedup -> {len(packed)} batches")
+
+    def batch_fn(step):
+        return {"tokens": jnp.asarray(packed[step % len(packed)])}
+
+    # ---- train with the fault-tolerant driver ------------------------------
+    tc = TrainConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps,
+                     compute_dtype="bfloat16")
+    state = train_state_init(model, jax.random.PRNGKey(0), tc)
+    step_fn = jax.jit(make_train_step(model, tc))
+    ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="repro_e2e_")
+    drv = TrainingDriver(step_fn, state, batch_fn,
+                         DriverConfig(ckpt_dir=ckpt_dir, ckpt_every=100))
+
+    t0 = time.time()
+    drv.run(args.steps)
+    dt = time.time() - t0
+    first = drv.metrics_log[0]["loss"]
+    last = np.mean([m["loss"] for m in drv.metrics_log[-10:]])
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"steps={args.steps} loss {first:.3f} -> {last:.3f} "
+          f"({tok_s:,.0f} tok/s on CPU; ckpts in {ckpt_dir})")
+    assert last < first - 1.0, "loss should drop substantially"
+
+
+if __name__ == "__main__":
+    main()

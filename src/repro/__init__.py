@@ -1,0 +1,6 @@
+"""Sieve-JAX: TPU-native Bloom-filter substrate + multi-pod LM framework.
+
+Reproduction + beyond-paper optimization of
+'Optimizing Bloom Filters for Modern GPU Architectures' (CS.DC 2025).
+"""
+__version__ = "0.1.0"

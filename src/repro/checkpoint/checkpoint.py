@@ -1,0 +1,138 @@
+"""Sharded, atomic, async-capable checkpointing with reshard-on-restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json      {key: {file, shape, dtype}}, step, extra metadata
+        000000.npy ...     one .npy per pytree leaf
+        DONE               commit marker (atomicity: written last)
+
+* **Atomic**: writers fill ``step_X.tmp`` then rename; readers only trust
+  directories containing DONE. A crash mid-save never corrupts the latest
+  good checkpoint (exercised by runtime.fault_tolerance tests).
+* **Async**: ``save(..., sync=False)`` snapshots device arrays to host
+  memory, then writes on a background thread — the train loop keeps going
+  (the standard hide-the-checkpoint-latency trick).
+* **Resharding**: ``restore(..., shardings=...)`` device_puts each leaf with
+  the *target* sharding, so a job can restart on a different mesh shape
+  (elastic scaling) or device count. On a multi-host pod each process would
+  write its addressable shards; the manifest format already carries
+  per-leaf metadata to support that split.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import ml_dtypes
+import numpy as np
+import jax
+
+# numpy can't serialize bf16 etc. natively; store bit patterns + logical dtype
+_EXTENDED = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+             "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+             "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8)}
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    return keys, [l for _, l in flat], treedef
+
+
+def save(ckpt_dir: str, step: int, state: Any, *, sync: bool = True,
+         keep: int = 3, extra: Optional[Dict] = None):
+    """Write ``state`` (any pytree of arrays) atomically under ckpt_dir."""
+    keys, leaves, _ = _flatten(state)
+    # snapshot to host BEFORE going async — device buffers may be donated
+    host_leaves = [np.asarray(l) for l in leaves]
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+        for i, (k, arr) in enumerate(zip(keys, host_leaves)):
+            fname = f"{i:06d}.npy"
+            logical = str(arr.dtype)
+            if logical in _EXTENDED:
+                arr = arr.view(_EXTENDED[logical][1])
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][k] = {"file": fname,
+                                     "shape": list(arr.shape),
+                                     "dtype": logical}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    if sync:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(_list_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _list_steps(ckpt_dir: str):
+    out = []
+    if not os.path.isdir(ckpt_dir):
+        return out
+    for d in os.listdir(ckpt_dir):
+        full = os.path.join(ckpt_dir, d)
+        if (d.startswith("step_") and not d.endswith(".tmp")
+                and os.path.exists(os.path.join(full, "DONE"))):
+            out.append(int(d[5:]))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _list_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
+            shardings: Any = None):
+    """Load into the structure of ``template``; returns (step, state).
+
+    ``shardings``: optional pytree (matching template) of Sharding objects —
+    leaves are device_put with them (reshard-on-restore / elastic restart).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    keys, leaves, treedef = _flatten(template)
+    shard_leaves = (jax.tree.leaves(shardings,
+                                    is_leaf=lambda x: hasattr(x, "device_set"))
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for k, tmpl, shd in zip(keys, leaves, shard_leaves):
+        meta = manifest["leaves"].get(k)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {k!r}")
+        arr = np.load(os.path.join(d, meta["file"]))
+        if meta["dtype"] in _EXTENDED:
+            arr = arr.view(_EXTENDED[meta["dtype"]][0])
+        assert list(arr.shape) == list(tmpl.shape), (k, arr.shape, tmpl.shape)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.device_put(arr))
+    return step, jax.tree_util.tree_unflatten(treedef, out)

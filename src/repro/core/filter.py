@@ -1,0 +1,139 @@
+"""User-facing Bloom filter facade.
+
+``BloomFilter`` wraps a ``FilterSpec`` + the uint32 word array and dispatches
+bulk operations to the best available execution path:
+
+* ``backend="jnp"``    — the vectorized pure-jnp reference (CPU-friendly);
+* ``backend="pallas"`` — the TPU Pallas kernels (``repro.kernels``), run in
+  interpret mode off-TPU; layout (Θ, Φ) selectable / autotuned;
+* ``backend="auto"``   — pallas when the spec is kernel-compatible, else jnp.
+
+The object is immutable-functional under the hood (JAX arrays), but exposes a
+mutating convenience API because that is what data-pipeline call sites want.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import variants as V
+from repro.core.variants import FilterSpec
+
+
+@functools.lru_cache(maxsize=256)
+def _jit_contains(spec: FilterSpec):
+    return jax.jit(lambda f, k: V.contains_rows(spec, f, k))
+
+
+@functools.lru_cache(maxsize=256)
+def _jit_add(spec: FilterSpec):
+    return jax.jit(lambda f, k: V.add_rows(spec, f, k))
+
+
+def _as_keys(keys) -> jnp.ndarray:
+    """Accept u64x2 uint32 (n,2), np.uint64 (n,), or uint32 (n,)."""
+    if isinstance(keys, np.ndarray) and keys.dtype == np.uint64:
+        from repro.core.hashing import u64x2_from_u64
+        keys = u64x2_from_u64(keys)
+    keys = jnp.asarray(keys)
+    if keys.dtype != jnp.uint32:
+        keys = keys.astype(jnp.uint32)
+    return keys
+
+
+@dataclasses.dataclass
+class BloomFilter:
+    spec: FilterSpec
+    words: jnp.ndarray
+    backend: str = "auto"
+    layout: Optional[object] = None   # kernels.sbf.Layout for the pallas path
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def create(cls, variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
+               block_bits: int = 256, z: int = 1, backend: str = "auto",
+               layout=None) -> "BloomFilter":
+        spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
+                          block_bits=block_bits, z=z)
+        return cls(spec=spec, words=V.init(spec), backend=backend, layout=layout)
+
+    @classmethod
+    def for_n_items(cls, n: int, bits_per_key: float = 16.0,
+                    variant: str = "sbf", block_bits: int = 256,
+                    k: Optional[int] = None, **kw) -> "BloomFilter":
+        """Size a filter for ~n items at c = bits_per_key (m rounded to pow2)."""
+        m = 1 << max(int(np.ceil(np.log2(max(n, 1) * bits_per_key))), 10)
+        if k is None:
+            k = max(int(round(V.optimal_k(m / max(n, 1)))), 1)
+            if variant == "csbf":
+                z = kw.get("z", 1)
+                k = max(z, (k // z) * z)
+            if variant == "sbf":
+                s = block_bits // V.WORD_BITS
+                k = max(s, (k // s) * s) if k >= s else k
+            k = min(k, 32)
+        return cls.create(variant=variant, m_bits=m, k=k,
+                          block_bits=block_bits, **kw)
+
+    # -- dispatch -------------------------------------------------------------
+    def _use_pallas(self) -> bool:
+        if self.backend == "jnp":
+            return False
+        from repro.kernels import ops
+        ok = ops.kernel_supported(self.spec)
+        if self.backend == "pallas" and not ok:
+            raise ValueError(f"no pallas kernel for {self.spec}")
+        if self.backend == "auto":
+            # interpret-mode kernels are for validation, not speed: off-TPU
+            # the vectorized jnp engine is the fast path.
+            return ok and jax.default_backend() == "tpu"
+        return ok
+
+    def add(self, keys) -> "BloomFilter":
+        keys = _as_keys(keys)
+        if keys.shape[0] == 0:
+            return self
+        if self._use_pallas():
+            from repro.kernels import ops
+            self.words = ops.bloom_add(self.spec, self.words, keys,
+                                       layout=self.layout)
+        else:
+            self.words = _jit_add(self.spec)(self.words, keys)
+        return self
+
+    def contains(self, keys) -> jnp.ndarray:
+        keys = _as_keys(keys)
+        if keys.shape[0] == 0:
+            return jnp.zeros((0,), jnp.bool_)
+        if self._use_pallas():
+            from repro.kernels import ops
+            return ops.bloom_contains(self.spec, self.words, keys,
+                                      layout=self.layout)
+        return _jit_contains(self.spec)(self.words, keys)
+
+    # -- introspection --------------------------------------------------------
+    def fill_fraction(self) -> float:
+        return float(V.fill_fraction(self.words))
+
+    def fpr_theory(self, n: int) -> float:
+        return V.fpr_theory(self.spec, n)
+
+    def measure_fpr(self, n_inserted: int, n_probe: int = 1 << 16,
+                    seed: int = 1234) -> float:
+        """Empirical FPR: probe keys disjoint from any realistic insert set."""
+        from repro.core.hashing import random_u64x2
+        probes = random_u64x2(n_probe, seed=seed)
+        hits = np.asarray(self.contains(probes))
+        return float(hits.mean())
+
+    @property
+    def nbytes(self) -> int:
+        return self.spec.m_bits // 8
+
+    def __repr__(self):
+        return f"BloomFilter({self.spec}, fill={self.fill_fraction():.3f}, backend={self.backend})"

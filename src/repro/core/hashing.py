@@ -1,0 +1,172 @@
+"""Key hashing + branchless multiplicative pattern generation (paper §4.2).
+
+TPU adaptation notes
+--------------------
+The paper hashes 64-bit keys with xxHash64 and derives fingerprint bits by
+multiplying the base hash with compile-time-inlined odd constants ("salts").
+The TPU VPU is a 32-bit machine (no native u64), so:
+
+* keys are carried in ``u64x2`` format — an array of shape ``(..., 2)`` of
+  ``uint32`` holding ``[hi, lo]`` words of the conceptual 64-bit key;
+* the base hash is an *exact* xxHash32 of the 8-byte little-endian key
+  (the specialization of xxHash32 for inputs < 16 bytes), evaluated twice
+  with independent seeds to recover 64 bits of fingerprint entropy
+  (one stream selects the block, the other generates bit patterns);
+* fingerprint bits use multiplicative (mul-shift) hashing
+  [Dietzfelbinger et al. 1997], i.e. ``bit = (h * salt) >> (32 - log2(S))``.
+
+Salts live in a module-level table and are indexed with *Python* integers at
+trace time, so XLA sees them as literal constants folded into the kernel —
+the exact analogue of the paper's C++ template-metaprogramming trick that
+inlines multipliers into the generated SASS.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# xxHash32 constants
+# ---------------------------------------------------------------------------
+_P1 = np.uint32(2654435761)
+_P2 = np.uint32(2246822519)
+_P3 = np.uint32(3266489917)
+_P4 = np.uint32(668265263)
+_P5 = np.uint32(374761393)
+
+# Independent hash streams (seeds) for block selection vs. pattern generation.
+SEED_PATTERN = np.uint32(0xCAFEBABE)
+SEED_BLOCK = np.uint32(0xDEADBEEF)
+SEED_AUX = np.uint32(0x9E3779B9)
+
+# ---------------------------------------------------------------------------
+# Salt table — odd 32-bit multiplicative constants, fixed at import time.
+# ---------------------------------------------------------------------------
+MAX_SALTS = 96
+
+
+def _make_salts(n: int, seed: int = 0xB100F) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    salts = rng.randint(0, 2**31, size=n, dtype=np.int64).astype(np.uint64)
+    salts = (salts * 2 + 1).astype(np.uint32)  # force odd
+    # make sure high bits are well mixed: xor-fold a second stream
+    salts ^= rng.randint(0, 2**31, size=n, dtype=np.int64).astype(np.uint32) << np.uint32(1)
+    return salts | np.uint32(1)
+
+
+SALTS = _make_salts(MAX_SALTS)                      # fingerprint bit salts
+WORD_SALTS = _make_salts(MAX_SALTS, seed=0x5EC70)   # BBF word-selection salts
+GROUP_SALTS = _make_salts(MAX_SALTS, seed=0x6709)   # CSBF group->word salts
+
+
+def _u32(x) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def rotl32(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Rotate-left on uint32 (r is a Python int — static)."""
+    r = int(r) % 32
+    if r == 0:
+        return x
+    x = _u32(x)
+    return (x << np.uint32(r)) | (x >> np.uint32(32 - r))
+
+
+def xxh32_u64x2(keys: jnp.ndarray, seed=SEED_PATTERN) -> jnp.ndarray:
+    """Exact xxHash32 of an 8-byte (u64) key held as uint32 ``[hi, lo]`` pairs.
+
+    ``keys``: (..., 2) uint32. Returns (...,) uint32.
+
+    This is the xxHash32 algorithm specialized for len==8: the accumulator
+    starts at ``seed + PRIME5 + len`` and consumes the two 4-byte lanes of
+    the little-endian u64 (lo word first), followed by the final avalanche.
+    """
+    keys = _u32(keys)
+    hi = keys[..., 0]
+    lo = keys[..., 1]
+    acc = _u32(seed) + _P5 + np.uint32(8)
+    for lane in (lo, hi):  # little-endian order: low word first
+        acc = acc + lane * _P3
+        acc = rotl32(acc, 17) * _P4
+    # avalanche
+    acc = acc ^ (acc >> np.uint32(15))
+    acc = acc * _P2
+    acc = acc ^ (acc >> np.uint32(13))
+    acc = acc * _P3
+    acc = acc ^ (acc >> np.uint32(16))
+    return acc
+
+
+def xxh32_u32(keys: jnp.ndarray, seed=SEED_PATTERN) -> jnp.ndarray:
+    """Exact xxHash32 of a 4-byte key (single uint32 lane)."""
+    keys = _u32(keys)
+    acc = _u32(seed) + _P5 + np.uint32(4)
+    acc = acc + keys * _P3
+    acc = rotl32(acc, 17) * _P4
+    acc = acc ^ (acc >> np.uint32(15))
+    acc = acc * _P2
+    acc = acc ^ (acc >> np.uint32(13))
+    acc = acc * _P3
+    acc = acc ^ (acc >> np.uint32(16))
+    return acc
+
+
+def mulshift(h: jnp.ndarray, salt: np.uint32, bits: int) -> jnp.ndarray:
+    """Multiplicative hash: top ``bits`` bits of ``h * salt`` (universal family).
+
+    ``salt`` and ``bits`` are Python-level constants — folded into the
+    generated code at trace time (the paper's salt-inlining analogue).
+    """
+    if bits == 0:
+        return jnp.zeros_like(_u32(h))
+    return (_u32(h) * np.uint32(salt)) >> np.uint32(32 - bits)
+
+
+def block_index(h_block: jnp.ndarray, n_blocks: int) -> jnp.ndarray:
+    """Map the block-stream hash to ``[0, n_blocks)``; n_blocks must be pow2."""
+    assert n_blocks & (n_blocks - 1) == 0, "n_blocks must be a power of two"
+    return _u32(h_block) & np.uint32(n_blocks - 1)
+
+
+def hash_keys(keys: jnp.ndarray):
+    """Return the (pattern, block) hash-stream pair for u64x2 or u32 keys."""
+    if keys.ndim >= 1 and keys.shape[-1] == 2 and keys.dtype == jnp.uint32:
+        return (xxh32_u64x2(keys, SEED_PATTERN), xxh32_u64x2(keys, SEED_BLOCK))
+    return (xxh32_u32(keys, SEED_PATTERN), xxh32_u32(keys, SEED_BLOCK))
+
+
+# ---------------------------------------------------------------------------
+# Host-side reference (numpy, used by tests to cross-check the jnp path)
+# ---------------------------------------------------------------------------
+
+def xxh32_u64_numpy(keys_u64: np.ndarray, seed: int = int(SEED_PATTERN)) -> np.ndarray:
+    keys_u64 = keys_u64.astype(np.uint64)
+    lo = (keys_u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (keys_u64 >> np.uint64(32)).astype(np.uint32)
+    with np.errstate(over="ignore"):
+        acc = np.uint32(seed) + _P5 + np.uint32(8)
+        for lane in (lo, hi):
+            acc = acc + lane * _P3
+            acc = ((acc << np.uint32(17)) | (acc >> np.uint32(15))) * _P4
+        acc = acc ^ (acc >> np.uint32(15))
+        acc = acc * _P2
+        acc = acc ^ (acc >> np.uint32(13))
+        acc = acc * _P3
+        acc = acc ^ (acc >> np.uint32(16))
+    return acc
+
+
+def u64x2_from_u64(keys_u64: np.ndarray) -> np.ndarray:
+    """Host helper: pack np.uint64 keys into (n, 2) uint32 [hi, lo]."""
+    keys_u64 = np.asarray(keys_u64, dtype=np.uint64)
+    hi = (keys_u64 >> np.uint64(32)).astype(np.uint32)
+    lo = (keys_u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return np.stack([hi, lo], axis=-1)
+
+
+def random_u64x2(n: int, seed: int = 0) -> np.ndarray:
+    """Host helper: n distinct-ish random u64 keys in u64x2 format."""
+    rng = np.random.RandomState(seed)
+    lo = rng.randint(0, 2**32, size=n, dtype=np.uint64)
+    hi = rng.randint(0, 2**32, size=n, dtype=np.uint64)
+    return u64x2_from_u64((hi << np.uint64(32)) | lo)

@@ -1,0 +1,88 @@
+"""(Θ, Φ) layout autotuner — the paper's Table 1/2 grid search as a library.
+
+The paper's headline empirical result is that the optimal vectorization
+layout depends on (operation, block size, residency). ``tune_layout`` sweeps
+the valid (Θ, Φ) grid for a spec and returns the fastest layout:
+
+* ``mode="measure"`` times the Pallas kernels (meaningful on real TPU;
+  in interpret mode the ratios reflect schedule structure);
+* ``mode="structural"`` scores layouts analytically (loads per block,
+  strided steps, vector width — the §4.1 derivations) and applies the
+  paper's empirical tie-breaks (Θ̂_c = max(1, B/256), Θ̂_a = s), giving a
+  deterministic offline choice for dry-run/compile-only environments.
+
+Results are cached per (spec, op, mode).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing as H
+from repro.core.variants import FilterSpec
+from repro.kernels.sbf import Layout, default_layout
+
+
+def valid_layouts(spec: FilterSpec, tile: int = 256) -> List[Layout]:
+    s = spec.s
+    out = []
+    for theta in (1, 2, 4, 8, 16):
+        if tile % theta:
+            continue
+        for phi in (1, 2, 4, 8, 16, 32):
+            if phi <= s and s % phi == 0 and theta * phi <= max(s, 8):
+                out.append(Layout(theta, phi))
+    return out
+
+
+def structural_score(spec: FilterSpec, lay: Layout, op: str) -> float:
+    """Lower is better. Mirrors §4.1: wide loads amortize issue cost; too
+    much Θ under-utilizes lanes for lookups but tightens RMW windows for
+    adds (the paper's Θ̂ rules, encoded as a soft preference)."""
+    s = spec.s
+    loads = s // lay.phi                      # load instructions per block
+    steps = max(s // (lay.theta * lay.phi), 1)
+    score = loads + 0.5 * steps
+    if op == "contains":
+        target = max(1, spec.block_bits // 256)
+        score += 0.25 * abs(lay.theta - target)
+    else:                                     # add: fully horizontal wins
+        score += 0.25 * (s - min(lay.theta * lay.phi, s)) / max(s, 1)
+        score += 0.1 * loads
+    return score
+
+
+def _measure(spec: FilterSpec, lay: Layout, op: str, n_keys: int) -> float:
+    from repro.kernels import ops
+    keys = jnp.asarray(H.random_u64x2(n_keys, seed=7))
+    filt = jnp.zeros((spec.n_words,), jnp.uint32)
+    if op == "contains":
+        fn = lambda: ops.bloom_contains(spec, filt, keys, layout=lay)
+    else:
+        fn = lambda: ops.bloom_add(spec, filt, keys, layout=lay)
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+@functools.lru_cache(maxsize=128)
+def tune_layout(spec: FilterSpec, op: str = "contains",
+                mode: str = "structural", n_keys: int = 1024
+                ) -> Tuple[Layout, List[Tuple[str, float]]]:
+    """Returns (best layout, [(layout-name, score/time) ...])."""
+    assert op in ("contains", "add")
+    cands = valid_layouts(spec)
+    if not cands:
+        return default_layout(spec, op), []
+    if mode == "structural":
+        scored = [(str(l), structural_score(spec, l, op)) for l in cands]
+    else:
+        scored = [(str(l), _measure(spec, l, op, n_keys)) for l in cands]
+    best_name, _ = min(scored, key=lambda kv: kv[1])
+    best = next(l for l in cands if str(l) == best_name)
+    return best, sorted(scored, key=lambda kv: kv[1])

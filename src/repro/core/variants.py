@@ -1,0 +1,434 @@
+"""Bloom filter variants (paper §2.1): CBF, BBF, RBBF, SBF, CSBF.
+
+Pure-jnp reference semantics, vectorized over keys. These definitions are the
+single source of truth: the Pallas kernels in ``repro.kernels`` are verified
+against the functions here, and the distributed filters in
+``repro.core.distributed`` compose them.
+
+Layout conventions (TPU adaptation, see DESIGN.md §2):
+
+* word size S = 32 bits (the TPU VPU's native word);
+* the filter is a flat ``(n_words,)`` uint32 array;
+* blocked variants view it as ``n_blocks`` blocks of ``s = B/32`` words;
+* all sizes (m, B) are powers of two so index extraction is mask/shift —
+  mirroring the paper's practice of power-of-two block counts.
+
+Variant semantics
+-----------------
+CBF    k bit positions anywhere in the m-bit array (double hashing +
+       multiplicative salts; Kirsch–Mitzenmacher index derivation).
+BBF    k bit positions anywhere within one B-bit block (word chosen per bit
+       by multiplicative hash — the WarpCore-style layout).
+RBBF   BBF with B = 32 (one machine word).
+SBF    bit i lives in word ``i mod s`` of the block — even spread, whole-word
+       test, vectorizable (the paper's main subject).
+CSBF   the s words are split into z groups of g = s/z; one word per group is
+       selected by hash and receives k/z bits (Lang et al. layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing as H
+
+WORD_BITS = 32
+_LOG2_WORD = 5
+
+VARIANTS = ("cbf", "bbf", "rbbf", "sbf", "csbf")
+
+
+def _log2i(x: int) -> int:
+    assert x > 0 and (x & (x - 1)) == 0, f"{x} must be a power of two"
+    return x.bit_length() - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterSpec:
+    """Static description of a Bloom filter instance."""
+
+    variant: str                 # one of VARIANTS
+    m_bits: int                  # total size in bits (power of two)
+    k: int                       # fingerprint bits per key
+    block_bits: int = 256        # B — block size in bits (blocked variants)
+    z: int = 1                   # CSBF: number of sector groups
+
+    def __post_init__(self):
+        assert self.variant in VARIANTS, self.variant
+        _log2i(self.m_bits)
+        assert 1 <= self.k <= H.MAX_SALTS
+        if self.variant == "cbf":
+            object.__setattr__(self, "block_bits", self.m_bits)
+        if self.variant == "rbbf":
+            object.__setattr__(self, "block_bits", WORD_BITS)
+        _log2i(self.block_bits)
+        assert WORD_BITS <= self.block_bits <= self.m_bits
+        if self.variant == "csbf":
+            assert self.z >= 1 and self.s % self.z == 0, "z must divide s"
+            assert self.k % self.z == 0, "k must be a multiple of z"
+
+    # -- derived geometry ---------------------------------------------------
+    @property
+    def n_words(self) -> int:
+        return self.m_bits // WORD_BITS
+
+    @property
+    def s(self) -> int:
+        """Words per block."""
+        return self.block_bits // WORD_BITS
+
+    @property
+    def n_blocks(self) -> int:
+        return self.m_bits // self.block_bits
+
+    @property
+    def g(self) -> int:
+        """CSBF: words per group."""
+        return self.s // self.z
+
+    @property
+    def bits_per_element(self) -> float:
+        return float(self.m_bits)
+
+    def __str__(self):
+        return (f"{self.variant}(m=2^{_log2i(self.m_bits)}b, B={self.block_bits}, "
+                f"k={self.k}" + (f", z={self.z}" if self.variant == "csbf" else "") + ")")
+
+
+def init(spec: FilterSpec) -> jnp.ndarray:
+    return jnp.zeros((spec.n_words,), dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Pattern generation (paper §4.2) — trace-time-unrolled multiplicative hashing
+# ---------------------------------------------------------------------------
+
+def block_patterns(spec: FilterSpec, h_pattern: jnp.ndarray,
+                   batched: bool = True) -> jnp.ndarray:
+    """Per-key word masks for blocked variants.
+
+    ``h_pattern``: (n,) uint32 base hashes. Returns (n, s) uint32 masks; the
+    bitwise OR of mask[j] into word j of the key's block realizes an add, and
+    ``(word & mask) == mask`` for all j realizes a membership test.
+
+    The loops below run at *trace time* (Python), so every salt index is a
+    compile-time constant and XLA sees inlined literals — the analogue of the
+    paper's template-metaprogramming salt inlining.
+    """
+    n = h_pattern.shape[0]
+    s = spec.s
+    masks = jnp.zeros((n, s), dtype=jnp.uint32)
+
+    if spec.variant in ("sbf",):
+        # `batched=False` keeps every salt a scalar literal — required inside
+        # Pallas kernel bodies, which may not capture array constants.
+        if spec.k % s == 0 and batched:
+            # §Perf B4 — the paper-recommended k ≡ 0 (mod s) configuration
+            # admits a fully-batched pattern build: ONE broadcast multiply
+            # against the salt vector, one shift, one OR-fold over the k/s
+            # rounds. Replaces 2k sequential vector ops with ~4.
+            salts = jnp.asarray(H.SALTS[: spec.k], dtype=jnp.uint32)
+            bits = (h_pattern[:, None] * salts[None, :]) >> jnp.uint32(
+                32 - _LOG2_WORD)                              # (n, k)
+            layers = (jnp.uint32(1) << bits).reshape(n, spec.k // s, s)
+            masks = layers[:, 0]
+            for j in range(1, spec.k // s):   # k/s <= 2 in practice
+                masks = masks | layers[:, j]
+            return masks
+        cols = [jnp.zeros((n,), jnp.uint32) for _ in range(s)]
+        for i in range(spec.k):
+            bit = H.mulshift(h_pattern, H.SALTS[i], _LOG2_WORD)
+            cols[i % s] = cols[i % s] | (jnp.uint32(1) << bit)
+        return jnp.stack(cols, axis=1)
+
+    if spec.variant in ("bbf", "rbbf"):
+        log2s = _log2i(s)
+        cols = jnp.arange(s, dtype=jnp.uint32)[None, :]
+        for i in range(spec.k):
+            bit = H.mulshift(h_pattern, H.SALTS[i], _LOG2_WORD)
+            bitval = (jnp.uint32(1) << bit)[:, None]
+            if log2s == 0:
+                masks = masks | bitval
+            else:
+                w = H.mulshift(h_pattern, H.WORD_SALTS[i], log2s)[:, None]
+                masks = masks | jnp.where(cols == w, bitval, jnp.uint32(0))
+        return masks
+
+    if spec.variant == "csbf":
+        g, z, kz = spec.g, spec.z, spec.k // spec.z
+        log2g = _log2i(g)
+        cols = jnp.arange(s, dtype=jnp.uint32)[None, :]
+        for j in range(z):
+            # select the word within group j that receives this key's bits
+            if log2g == 0:
+                w = jnp.full_like(h_pattern, j * g)
+            else:
+                w = jnp.uint32(j * g) + H.mulshift(h_pattern, H.GROUP_SALTS[j], log2g)
+            gmask = jnp.zeros_like(h_pattern)
+            for t in range(kz):
+                bit = H.mulshift(h_pattern, H.SALTS[j * kz + t], _LOG2_WORD)
+                gmask = gmask | (jnp.uint32(1) << bit)
+            masks = masks | jnp.where(cols == w[:, None], gmask[:, None], jnp.uint32(0))
+        return masks
+
+    raise ValueError(f"block_patterns undefined for variant {spec.variant}")
+
+
+def cbf_positions(spec: FilterSpec, h_pattern: jnp.ndarray,
+                  h_block: jnp.ndarray) -> jnp.ndarray:
+    """(n, k) global bit positions for the classical filter.
+
+    Kirsch–Mitzenmacher double hashing (h1 + i*h2) re-mixed per index with a
+    multiplicative salt, masked to the power-of-two filter size.
+    """
+    log2m = _log2i(spec.m_bits)
+    pos = []
+    for i in range(spec.k):
+        hi = h_pattern + jnp.uint32(i) * h_block
+        pos.append(H.mulshift(hi, H.SALTS[i], min(log2m, 32)) & jnp.uint32(spec.m_bits - 1))
+    return jnp.stack(pos, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# contains / add — vectorized reference implementations
+# ---------------------------------------------------------------------------
+
+def _hashes(keys: jnp.ndarray):
+    return H.hash_keys(keys)
+
+
+def contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized bulk membership test. Returns (n,) bool."""
+    h1, h2 = _hashes(keys)
+    if spec.variant == "cbf":
+        pos = cbf_positions(spec, h1, h2)                       # (n, k)
+        words = filt[(pos >> np.uint32(_LOG2_WORD)).astype(jnp.int32)]
+        bits = jnp.uint32(1) << (pos & jnp.uint32(WORD_BITS - 1))
+        return jnp.all((words & bits) != 0, axis=-1)
+    blk = H.block_index(h2, spec.n_blocks)                      # (n,)
+    masks = block_patterns(spec, h1)                            # (n, s)
+    word_idx = (blk[:, None] * jnp.uint32(spec.s)
+                + jnp.arange(spec.s, dtype=jnp.uint32)[None, :]).astype(jnp.int32)
+    words = filt[word_idx]                                      # (n, s) gather
+    return jnp.all((words & masks) == masks, axis=-1)
+
+
+def add_loop(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Sequential (fori_loop) bulk insert — the exact-ownership reference.
+
+    One dynamic-slice read-modify-write per key; no scatter collisions by
+    construction. This is the semantics the Pallas add kernel reproduces.
+    """
+    h1, h2 = _hashes(keys)
+    if spec.variant == "cbf":
+        pos = cbf_positions(spec, h1, h2)                       # (n, k)
+        widx = (pos >> np.uint32(_LOG2_WORD)).astype(jnp.int32)
+        bits = jnp.uint32(1) << (pos & jnp.uint32(WORD_BITS - 1))
+
+        def body(i, f):
+            for j in range(spec.k):   # static unroll over k
+                f = f.at[widx[i, j]].set(f[widx[i, j]] | bits[i, j])
+            return f
+
+        return jax.lax.fori_loop(0, h1.shape[0], body, filt)
+
+    blk = H.block_index(h2, spec.n_blocks)
+    masks = block_patterns(spec, h1)                            # (n, s)
+    s = spec.s
+
+    def body(i, f):
+        start = (blk[i] * jnp.uint32(s)).astype(jnp.int32)
+        words = jax.lax.dynamic_slice(f, (start,), (s,))
+        return jax.lax.dynamic_update_slice(f, words | masks[i], (start,))
+
+    return jax.lax.fori_loop(0, h1.shape[0], body, filt)
+
+
+def add_scatter(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized bulk insert via bit-plane scatter-add.
+
+    Bitwise-OR is not a JAX scatter combiner, so each of the 32 bit planes is
+    scattered with ``add`` and re-thresholded — duplicate-index safe because
+    OR is idempotent. Memory stays O(n_words) per plane.
+    """
+    h1, h2 = _hashes(keys)
+    if spec.variant == "cbf":
+        pos = cbf_positions(spec, h1, h2).reshape(-1)
+        widx = (pos >> np.uint32(_LOG2_WORD)).astype(jnp.int32)
+        vals = jnp.uint32(1) << (pos & jnp.uint32(WORD_BITS - 1))
+    else:
+        blk = H.block_index(h2, spec.n_blocks)
+        masks = block_patterns(spec, h1)
+        widx = ((blk[:, None] * jnp.uint32(spec.s)
+                 + jnp.arange(spec.s, dtype=jnp.uint32)[None, :])
+                .astype(jnp.int32).reshape(-1))
+        vals = masks.reshape(-1)
+    acc = filt
+    for b in range(WORD_BITS):
+        plane = ((vals >> np.uint32(b)) & jnp.uint32(1))
+        cnt = jnp.zeros((spec.n_words,), jnp.uint32).at[widx].add(plane)
+        acc = acc | ((cnt > 0).astype(jnp.uint32) << np.uint32(b))
+    return acc
+
+
+def contains_rows(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Row-gather membership test (§Perf iteration B1).
+
+    Hypothesis: ``filt[word_idx]`` with (n, s) scattered indices issues s
+    independent random accesses per key; viewing the filter as
+    (n_blocks, s) and gathering ONE row per key touches each block once —
+    the paper's one-cache-line-per-query property, restored at the XLA
+    gather level. Semantics identical to ``contains``.
+    """
+    if spec.variant == "cbf":
+        return contains(spec, filt, keys)
+    h1, h2 = _hashes(keys)
+    blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
+    masks = block_patterns(spec, h1)
+    rows = filt.reshape(spec.n_blocks, spec.s)[blk]          # one gather/key
+    return jnp.all((rows & masks) == masks, axis=-1)
+
+
+def add_rows(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray
+             ) -> jnp.ndarray:
+    """Sorted segmented-OR bulk insert (§Perf iteration B2).
+
+    Hypothesis: per-key RMW loops pay XLA while-loop overhead (~10 us/key)
+    and bit-plane scatters pay 32 full-filter passes. Instead: sort keys by
+    block, OR the masks of same-block keys with a segmented associative
+    scan (no filter traffic), then ONE row gather + ONE row scatter.
+    Duplicate scatter indices carry identical values, so ``set`` is
+    deterministic. This is the ownership/partitioning idea executed at the
+    vector-engine level.
+    """
+    if spec.variant == "cbf":
+        return add_scatter(spec, filt, keys)
+    h1, h2 = _hashes(keys)
+    blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
+    masks = block_patterns(spec, h1)
+    order = jnp.argsort(blk)
+    sb = blk[order]
+    sm = masks[order]
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+
+    def combine(a, b):
+        m1, f1 = a
+        m2, f2 = b
+        return jnp.where(f2[:, None], m2, m1 | m2), f1 | f2
+
+    scanned, _ = jax.lax.associative_scan(combine, (sm, seg_start), axis=0)
+    # last row of each segment holds the full OR; broadcast it back
+    end_idx = jnp.searchsorted(sb, sb, side="right") - 1
+    or_full = scanned[end_idx]                                # (n, s)
+    filt2d = filt.reshape(spec.n_blocks, spec.s)
+    rows = filt2d[sb]
+    new = filt2d.at[sb].set(rows | or_full)                   # identical dups
+    return new.reshape(-1)
+
+
+def add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+        method: str = "rows") -> jnp.ndarray:
+    if method == "loop":
+        return add_loop(spec, filt, keys)
+    if method == "scatter":
+        return add_scatter(spec, filt, keys)
+    if method == "rows":
+        return add_rows(spec, filt, keys)
+    raise ValueError(method)
+
+
+def fill_fraction(filt: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of set bits (useful health metric for dedup filters)."""
+    pop = jax.lax.population_count(filt.view(jnp.int32) if filt.dtype != jnp.uint32 else filt)
+    return jnp.sum(pop.astype(jnp.float32)) / (filt.shape[0] * WORD_BITS)
+
+
+# ---------------------------------------------------------------------------
+# FPR theory (paper Eq. 1–3 + blocked/sectorized extensions)
+# ---------------------------------------------------------------------------
+
+def fpr_cbf(m: int, n: int, k: int) -> float:
+    """Paper Eq. (1)."""
+    return float((1.0 - math.exp(-k * n / m)) ** k)
+
+
+def optimal_k(c: float) -> float:
+    """Paper Eq. (2): k* = c ln 2."""
+    return c * math.log(2.0)
+
+
+def fpr_min(c: float) -> float:
+    """Paper Eq. (3)."""
+    return 0.5 ** (c * math.log(2.0))
+
+
+def _poisson_pmf(lam: float, i: np.ndarray) -> np.ndarray:
+    # exp(i log lam - lam - lgamma(i+1)) — stable for the ranges we use
+    from math import lgamma
+    logp = i * math.log(max(lam, 1e-300)) - lam - np.array([lgamma(x + 1) for x in i])
+    return np.exp(logp)
+
+
+def _poisson_support(lam: float):
+    hi = int(lam + 10 * math.sqrt(lam) + 16)
+    return np.arange(0, hi + 1)
+
+
+def fpr_bbf(B: int, c: float, k: int) -> float:
+    """Blocked filter FPR: Poisson mixture over per-block load (Putze et al.)."""
+    lam = B / c
+    i = _poisson_support(lam)
+    p = _poisson_pmf(lam, i)
+    f = np.array([fpr_cbf(B, int(x), k) if x > 0 else 0.0 for x in i])
+    return float(np.sum(p * f))
+
+
+def fpr_sbf(B: int, S: int, c: float, k: int) -> float:
+    """Sectorized filter FPR: each word receives k/s of the key's bits."""
+    s = B // S
+    kw = max(k // s, 1)
+    lam = B / c  # keys per block
+    i = _poisson_support(lam)
+    p = _poisson_pmf(lam, i)
+    # P(all kw bits of one word set | i keys in block), word fill from i*kw draws
+    f_word = (1.0 - (1.0 - 1.0 / S) ** (i * kw)) ** kw
+    return float(np.sum(p * f_word ** s))
+
+
+def fpr_csbf(B: int, S: int, c: float, k: int, z: int) -> float:
+    """Cache-sectorized FPR: z groups, one word of g=s/z selected per group."""
+    s = B // S
+    g = s // z
+    kz = k // z
+    lam = (B / c) / g  # keys landing in a given *word* of a group (uniform choice)
+    i = _poisson_support(lam)
+    p = _poisson_pmf(lam, i)
+    f_word = (1.0 - (1.0 - 1.0 / S) ** (i * kz)) ** kz
+    return float(np.sum(p * f_word) ** z)
+
+
+def fpr_theory(spec: FilterSpec, n: int) -> float:
+    c = spec.m_bits / max(n, 1)
+    if spec.variant == "cbf":
+        return fpr_cbf(spec.m_bits, n, spec.k)
+    if spec.variant in ("bbf", "rbbf"):
+        return fpr_bbf(spec.block_bits, c, spec.k)
+    if spec.variant == "sbf":
+        return fpr_sbf(spec.block_bits, WORD_BITS, c, spec.k)
+    if spec.variant == "csbf":
+        return fpr_csbf(spec.block_bits, WORD_BITS, c, spec.k, spec.z)
+    raise ValueError(spec.variant)
+
+
+def space_optimal_n(spec: FilterSpec, target_fpr: float = None) -> int:
+    """Solve Eq. (3) for n: the space-error-rate-optimal load (paper §5.1)."""
+    # k = c ln2  =>  c = k / ln2  =>  n = m / c
+    c = spec.k / math.log(2.0)
+    return max(int(spec.m_bits / c), 1)

@@ -1,0 +1,104 @@
+"""jit'd dispatch wrappers around the Pallas Bloom kernels.
+
+``bloom_contains`` / ``bloom_add`` pick the right kernel for the spec:
+
+* variant: blocked variants -> ``kernels.sbf`` (layout-parameterized);
+  classical -> ``kernels.cbf``;
+* regime: filter words <= VMEM budget -> ``*_vmem`` (cache-resident
+  analogue), else ``*_hbm`` (DMA streaming) — mirroring the paper's §5.3/§5.2
+  split;
+* ``bloom_add_bulk`` additionally offers the partitioned ownership path
+  (sort keys by segment, then a PARALLEL-grid kernel) — our beyond-paper
+  TPU-native optimization.
+
+On non-TPU backends the kernels run in interpret mode (kernel body executed
+with jnp semantics) — bit-exact, which is what the test sweeps rely on.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition as P
+from repro.core.variants import FilterSpec
+from repro.kernels import cbf as cbf_k
+from repro.kernels import sbf as sbf_k
+from repro.kernels.sbf import (DEFAULT_TILE, Layout, VMEM_FILTER_BYTES,
+                               default_layout)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def kernel_supported(spec: FilterSpec) -> bool:
+    return spec.variant in ("cbf", "bbf", "rbbf", "sbf", "csbf")
+
+
+def _regime(spec: FilterSpec, regime: str) -> str:
+    if regime != "auto":
+        return regime
+    return "vmem" if spec.n_words * 4 <= VMEM_FILTER_BYTES else "hbm"
+
+
+def _pad_keys(keys: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """Pad to a tile multiple by repeating the last key — OR-idempotent, and
+    a repeated *contains* result is simply discarded."""
+    n = keys.shape[0]
+    pad = (-n) % tile
+    if pad == 0:
+        return keys
+    return jnp.concatenate([keys, jnp.broadcast_to(keys[-1:], (pad, 2))])
+
+
+def bloom_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                   layout: Optional[Layout] = None, regime: str = "auto",
+                   tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    tile = min(tile, max(8, 1 << int(np.ceil(np.log2(n)))))
+    padded = _pad_keys(keys, tile)
+    interp = _interpret()
+    if spec.variant == "cbf":
+        out = cbf_k.contains_vmem(spec, filt, padded, tile=tile, interpret=interp)
+    elif _regime(spec, regime) == "vmem":
+        out = sbf_k.contains_vmem(spec, filt, padded,
+                                  layout or default_layout(spec, "contains"),
+                                  tile=tile, interpret=interp)
+    else:
+        out = sbf_k.contains_hbm(spec, filt, padded, tile=tile, interpret=interp)
+    return out[:n]
+
+
+def bloom_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+              layout: Optional[Layout] = None, regime: str = "auto",
+              tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    n = keys.shape[0]
+    if n == 0:
+        return filt
+    tile = min(tile, max(8, 1 << int(np.ceil(np.log2(n)))))
+    padded = _pad_keys(keys, tile)
+    interp = _interpret()
+    if spec.variant == "cbf":
+        return cbf_k.add_vmem(spec, filt, padded, tile=tile, interpret=interp)
+    if _regime(spec, regime) == "vmem":
+        return sbf_k.add_vmem(spec, filt, padded,
+                              layout or default_layout(spec, "add"),
+                              tile=tile, interpret=interp)
+    return sbf_k.add_hbm(spec, filt, padded, tile=tile, interpret=interp)
+
+
+def bloom_add_partitioned(spec: FilterSpec, filt: jnp.ndarray, keys,
+                          n_segments: int = 8) -> jnp.ndarray:
+    """Beyond-paper path: radix-partition keys by filter segment, then run a
+    PARALLEL-grid kernel where each step owns its segment exclusively."""
+    assert spec.variant != "cbf", "classical filter has no block locality"
+    keys_np = np.asarray(keys, dtype=np.uint32)
+    by_seg, valid, _ = P.partition_host(spec, keys_np, n_segments)
+    return sbf_k.add_partitioned(spec, filt, jnp.asarray(by_seg),
+                                 jnp.asarray(valid), n_segments,
+                                 interpret=_interpret())

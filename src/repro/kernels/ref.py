@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The reference semantics live in ``repro.core.variants``; these wrappers pin
+the exact (spec, filter, keys) -> result contract the kernels must reproduce
+bit-for-bit. Tests sweep shapes/layouts and ``assert_allclose`` (exact
+integer equality) against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import variants as V
+from repro.core.variants import FilterSpec
+
+
+def bloom_contains_ref(spec: FilterSpec, filt: jnp.ndarray,
+                       keys: jnp.ndarray) -> jnp.ndarray:
+    """(n,) bool — oracle for every contains kernel (all variants/regimes)."""
+    return V.contains(spec, filt, keys)
+
+
+def bloom_add_ref(spec: FilterSpec, filt: jnp.ndarray,
+                  keys: jnp.ndarray) -> jnp.ndarray:
+    """(n_words,) uint32 — oracle for every add kernel.
+
+    ``add_loop`` is the ownership-ordered sequential insert; because OR is
+    commutative/idempotent the result equals any execution order, so it is a
+    valid oracle for the tiled and partitioned kernels too.
+    """
+    return V.add_loop(spec, filt, keys)
+
+
+def hash_block_masks_ref(spec: FilterSpec, keys: jnp.ndarray):
+    """Oracle for the fingerprint-generation kernel: (blk, masks)."""
+    from repro.core import hashing as H
+    h1, h2 = H.hash_keys(keys)
+    blk = H.block_index(h2, spec.n_blocks)
+    masks = V.block_patterns(spec, h1)
+    return blk, masks

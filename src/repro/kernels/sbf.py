@@ -1,0 +1,406 @@
+"""Pallas TPU kernels for blocked Bloom filter variants (BBF/RBBF/SBF/CSBF).
+
+This is the TPU-native realization of the paper's §4 design space:
+
+* **(Θ, Φ) vectorization layout** (`Layout`): the inner loop over a tile of
+  keys processes Θ keys per step ("horizontal" — the cooperative-group
+  analogue: Θ separate address streams, one fused vector compare), fetching
+  Φ contiguous words per load ("vertical" — the wide-load analogue:
+  ``pl.load`` of Φ·32 contiguous bits). Both loops are unrolled at trace
+  time, so salts, word offsets and chunk indices are inlined constants —
+  the analogue of the paper's template-metaprogramming inlining.
+* **Adaptive cooperation** (§4.3): phase 1 hashes the whole key tile on the
+  8×128 VPU in lockstep (hash work is *never* replicated across the Θ
+  dimension); phase 2 switches granularity to per-block probes that read
+  the precomputed hash/mask vectors.
+* **Residency regimes** (§5.2/§5.3): ``*_vmem`` kernels pin the whole filter
+  in VMEM via its BlockSpec (the L2-cache-resident analogue); ``*_hbm``
+  kernels leave the filter in HBM (``pl.ANY``) and stream blocks through a
+  double-buffered DMA scratch (the DRAM-resident analogue — the explicit
+  version of the GPU's sector fetches, with the paper's "prefetch next
+  chunk while processing" pipelining).
+* **Ownership instead of atomics**: TPU Pallas grids execute sequentially on
+  a core, and the partitioned bulk path gives each grid step an exclusive
+  filter segment, so read-modify-write needs no atomics (DESIGN.md §2).
+
+All kernels are validated bit-exactly against ``repro.kernels.ref`` in
+interpret mode (this container is CPU-only; TPU is the target).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing as H
+from repro.core import variants as V
+from repro.core.variants import FilterSpec
+
+DEFAULT_TILE = 256
+# VMEM-regime budget for the filter words (bytes). Half of a ~16 MiB VMEM,
+# leaving room for key tiles, masks and scratch.
+VMEM_FILTER_BYTES = 4 * 1024 * 1024
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """(Θ, Φ) vectorization layout — the paper's two degrees of freedom.
+
+    theta: keys processed per inner step (horizontal; Θ address streams are
+           issued back-to-back and their word tests fuse into one vector op).
+    phi:   contiguous words fetched per load (vertical; one pl.load of Φ
+           words ≙ ld.global.v{Φ}.u32).
+    """
+    theta: int = 1
+    phi: int = 8
+
+    def validate(self, spec: FilterSpec, tile: int) -> "Layout":
+        s = spec.s
+        phi = min(self.phi, s)
+        assert _is_pow2(self.theta) and _is_pow2(phi), (self.theta, phi)
+        assert s % phi == 0, f"phi={phi} must divide s={s}"
+        assert tile % self.theta == 0, f"theta={self.theta} must divide tile={tile}"
+        return Layout(self.theta, phi)
+
+    def __str__(self):
+        return f"Θ{self.theta}Φ{self.phi}"
+
+
+def default_layout(spec: FilterSpec, op: str) -> Layout:
+    """The paper's empirically-optimal layouts (§5.2), re-expressed for S=32.
+
+    contains: Θ̂ = max(1, B/256) — one "thread" per 256-bit sector;
+    add:      Θ̂ = s — fully horizontal maximizes temporal locality of the
+              word updates (our analogue: tightest RMW grouping per block).
+    """
+    s = spec.s
+    if op == "contains":
+        theta = max(1, (spec.block_bits) // 256)
+        theta = min(theta, 8)
+        phi = max(1, min(8, s // theta))
+        return Layout(theta, phi)
+    theta = min(s, 8)
+    phi = max(1, s // theta)
+    return Layout(theta, phi)
+
+
+# ---------------------------------------------------------------------------
+# Phase 1 — lockstep fingerprint generation (shared by all kernels)
+# ---------------------------------------------------------------------------
+
+def _fingerprints(spec: FilterSpec, keys: jnp.ndarray):
+    """Vectorized hash + pattern phase: (starts[int32], masks[uint32 (n,s)]).
+
+    batched=False: inside a pallas_call the salts must stay scalar literals
+    (kernel bodies may not capture array constants) — this is also exactly
+    the paper's inlined-multiplier regime."""
+    h1 = H.xxh32_u64x2(keys, H.SEED_PATTERN)
+    h2 = H.xxh32_u64x2(keys, H.SEED_BLOCK)
+    blk = H.block_index(h2, spec.n_blocks)
+    masks = V.block_patterns(spec, h1, batched=False)
+    starts = (blk * jnp.uint32(spec.s)).astype(jnp.int32)
+    return starts, masks
+
+
+def _take_scalar(vec: jnp.ndarray, i) -> jnp.ndarray:
+    return jax.lax.dynamic_index_in_dim(vec, i, keepdims=False)
+
+
+def _mask_row(masks: jnp.ndarray, i, s: int) -> jnp.ndarray:
+    return jax.lax.dynamic_slice(masks, (i, 0), (1, s))[0]
+
+
+# ---------------------------------------------------------------------------
+# VMEM-resident kernels (cache-resident regime analogue)
+# ---------------------------------------------------------------------------
+
+def _contains_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
+                          layout: Layout, tile: int):
+    s, theta, phi = spec.s, layout.theta, layout.phi
+    n_chunks = s // phi
+    starts, masks = _fingerprints(spec, keys_ref[...])
+
+    def group_body(g, acc):
+        base = g * theta
+        # Θ address streams: one dynamic-slice load per cooperating "lane",
+        # Φ words each; chunk loop statically unrolled (trace-time).
+        ok_lanes = []
+        for t in range(theta):                      # static unroll over Θ
+            i = base + t
+            st = _take_scalar(starts, i)
+            mrow = _mask_row(masks, i, s)
+            chunk_ok = jnp.bool_(True)
+            words_t, masks_t = [], []
+            for c in range(n_chunks):               # static unroll over Φ chunks
+                words_t.append(pl.load(filt_ref, (pl.ds(st + c * phi, phi),)))
+                masks_t.append(jax.lax.dynamic_slice(mrow, (c * phi,), (phi,)))
+            w = jnp.concatenate(words_t)            # (s,)
+            m = jnp.concatenate(masks_t)
+            ok_lanes.append((w, m))
+        # fused vector test across the Θ×s tile — the "lockstep compare"
+        Wm = jnp.stack([w for w, _ in ok_lanes])    # (theta, s)
+        Mm = jnp.stack([m for _, m in ok_lanes])
+        ok = jnp.all((Wm & Mm) == Mm, axis=-1)      # (theta,)
+        return jax.lax.dynamic_update_slice(acc, ok, (base,))
+
+    out = jax.lax.fori_loop(0, tile // theta, group_body,
+                            jnp.zeros((tile,), jnp.bool_))
+    out_ref[...] = out
+
+
+def _add_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
+                     layout: Layout, tile: int):
+    s, theta, phi = spec.s, layout.theta, layout.phi
+    n_chunks = s // phi
+
+    # Grid steps execute sequentially on a TPU core; the first step seeds the
+    # output with the input filter, later steps accumulate into it (RMW —
+    # ownership replaces the GPU's atomicOr, see DESIGN.md §2).
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    starts, masks = _fingerprints(spec, keys_ref[...])
+
+    def group_body(g, carry):
+        base = g * theta
+        for t in range(theta):                      # static unroll over Θ
+            i = base + t
+            st = _take_scalar(starts, i)
+            mrow = _mask_row(masks, i, s)
+            for c in range(n_chunks):               # static unroll over Φ chunks
+                idx = (pl.ds(st + c * phi, phi),)
+                w = pl.load(out_ref, idx)
+                m = jax.lax.dynamic_slice(mrow, (c * phi,), (phi,))
+                pl.store(out_ref, idx, w | m)
+        return carry
+
+    jax.lax.fori_loop(0, tile // theta, group_body, jnp.int32(0))
+
+
+def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                  layout: Layout, tile: int = DEFAULT_TILE,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Bulk membership test, whole filter pinned in VMEM via BlockSpec."""
+    n = keys.shape[0]
+    assert n % tile == 0
+    grid = (n // tile,)
+    kern = functools.partial(_contains_vmem_kernel, spec=spec,
+                             layout=layout.validate(spec, tile), tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),          # key tile
+            pl.BlockSpec((spec.n_words,), lambda i: (0,)),      # whole filter in VMEM
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(keys, filt)
+
+
+def add_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+             layout: Layout, tile: int = DEFAULT_TILE,
+             interpret: bool = True) -> jnp.ndarray:
+    """Bulk insert, whole filter pinned in VMEM; sequential-grid RMW."""
+    n = keys.shape[0]
+    assert n % tile == 0
+    grid = (n // tile,)
+    kern = functools.partial(_add_vmem_kernel, spec=spec,
+                             layout=layout.validate(spec, tile), tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((spec.n_words,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((spec.n_words,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((spec.n_words,), jnp.uint32),
+        interpret=interpret,
+    )(keys, filt)
+
+
+# ---------------------------------------------------------------------------
+# HBM-resident kernels (DRAM-resident regime analogue) — explicit DMA
+# ---------------------------------------------------------------------------
+
+def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
+                         spec: FilterSpec, tile: int):
+    """Double-buffered block streaming: start DMA for key i+1 while testing
+    key i — the TPU-explicit version of the paper's load pipelining."""
+    s = spec.s
+    starts, masks = _fingerprints(spec, keys_ref[...])
+
+    def dma(i, slot):
+        st = _take_scalar(starts, i)
+        return pltpu.make_async_copy(
+            filt_hbm.at[pl.ds(st, s)], scratch.at[slot], sem.at[slot])
+
+    dma(0, 0).start()
+
+    def body(i, acc):
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < tile)
+        def _prefetch():
+            dma(i + 1, nxt).start()
+
+        dma(i, slot).wait()
+        words = pl.load(scratch, (pl.ds(slot, 1), slice(None)))[0]   # (s,)
+        m = _mask_row(masks, i, s)
+        ok = jnp.all((words & m) == m)
+        return jax.lax.dynamic_update_slice(acc, ok[None], (i,))
+
+    out = jax.lax.fori_loop(0, tile, body, jnp.zeros((tile,), jnp.bool_))
+    out_ref[...] = out
+
+
+def _add_hbm_kernel(keys_ref, filt_hbm, out_hbm, scratch, sem_r, sem_w, *,
+                    spec: FilterSpec, tile: int):
+    """HBM insert: DMA read block -> OR mask -> DMA write back.
+
+    Serialized per key: a double-buffered write-back would race when two
+    consecutive keys hash to the same block (the GPU resolves this with
+    atomicOr; our ownership model forbids overlapping RMW windows). The
+    partitioned bulk path in ops.py removes this serialization entirely.
+    """
+    s = spec.s
+
+    # Seed the output filter once (full-array DMA HBM->HBM).
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        cp = pltpu.make_async_copy(filt_hbm, out_hbm, sem_r.at[0])
+        cp.start()
+        cp.wait()
+
+    starts, masks = _fingerprints(spec, keys_ref[...])
+
+    def body(i, carry):
+        st = _take_scalar(starts, i)
+        rd = pltpu.make_async_copy(out_hbm.at[pl.ds(st, s)], scratch.at[0],
+                                   sem_r.at[0])
+        rd.start()
+        rd.wait()
+        m = _mask_row(masks, i, s)
+        new = pl.load(scratch, (pl.ds(0, 1), slice(None)))[0] | m
+        pl.store(scratch, (pl.ds(1, 1), slice(None)), new[None])
+        wr = pltpu.make_async_copy(scratch.at[1], out_hbm.at[pl.ds(st, s)],
+                                   sem_w.at[0])
+        wr.start()
+        wr.wait()
+        return carry
+
+    jax.lax.fori_loop(0, tile, body, jnp.int32(0))
+
+
+def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                 tile: int = DEFAULT_TILE, interpret: bool = True) -> jnp.ndarray:
+    n = keys.shape[0]
+    assert n % tile == 0
+    kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),                  # filter stays in HBM
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        scratch_shapes=[
+            pltpu.VMEM((2, spec.s), jnp.uint32),                # double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(keys, filt)
+
+
+def add_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+            tile: int = DEFAULT_TILE, interpret: bool = True) -> jnp.ndarray:
+    n = keys.shape[0]
+    assert n % tile == 0
+    kern = functools.partial(_add_hbm_kernel, spec=spec, tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((spec.n_words,), jnp.uint32),
+        scratch_shapes=[
+            pltpu.VMEM((2, spec.s), jnp.uint32),
+            pltpu.SemaphoreType.DMA((1,)),
+            pltpu.SemaphoreType.DMA((1,)),
+        ],
+        interpret=interpret,
+    )(keys, filt)
+
+
+# ---------------------------------------------------------------------------
+# Partitioned bulk add — the beyond-paper TPU-native path
+# ---------------------------------------------------------------------------
+
+def _add_partitioned_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
+                            spec: FilterSpec, seg_words: int, capacity: int):
+    """One grid step owns one filter segment exclusively (PARALLEL-safe).
+
+    Keys were pre-partitioned so every key in this step's tile lands in this
+    segment; invalid (padding) slots carry zero masks (OR no-op).
+    """
+    s = spec.s
+    out_ref[...] = filt_ref[...]
+    keys = pl.load(keys_ref, (pl.ds(0, 1), slice(None), slice(None)))[0]
+    valid = pl.load(valid_ref, (pl.ds(0, 1), slice(None)))[0]    # (capacity,)
+    starts, masks = _fingerprints(spec, keys)
+    masks = masks * valid[:, None].astype(jnp.uint32)
+    # local word offset within this segment
+    starts = jax.lax.rem(starts, jnp.int32(seg_words))
+
+    def body(i, carry):
+        st = _take_scalar(starts, i)
+        idx = (pl.ds(st, s),)
+        w = pl.load(out_ref, idx)
+        pl.store(out_ref, idx, w | _mask_row(masks, i, s))
+        return carry
+
+    jax.lax.fori_loop(0, capacity, body, jnp.int32(0))
+
+
+def add_partitioned(spec: FilterSpec, filt: jnp.ndarray,
+                    keys_by_seg: jnp.ndarray, valid: jnp.ndarray,
+                    n_segments: int, interpret: bool = True) -> jnp.ndarray:
+    """keys_by_seg: (n_segments, capacity, 2); valid: (n_segments, capacity)."""
+    assert spec.n_words % n_segments == 0
+    seg_words = spec.n_words // n_segments
+    capacity = keys_by_seg.shape[1]
+    kern = functools.partial(_add_partitioned_kernel, spec=spec,
+                             seg_words=seg_words, capacity=capacity)
+    return pl.pallas_call(
+        kern,
+        grid=(n_segments,),
+        in_specs=[
+            pl.BlockSpec((1, capacity, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, capacity), lambda i: (i, 0)),
+            pl.BlockSpec((seg_words,), lambda i: (i,)),          # own segment only
+        ],
+        out_specs=pl.BlockSpec((seg_words,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((spec.n_words,), jnp.uint32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),                  # segments are independent
+    )(keys_by_seg, valid, filt)

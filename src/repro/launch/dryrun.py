@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import: jax locks the device count on first init.
+# This module is the ONLY place the 512-device emulation is enabled.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds ShapeDtypeStruct stand-ins for the full-size state
+(params, optimizer, batch or KV caches — no allocation), jits the real
+train/prefill/serve step with production shardings, runs
+``.lower().compile()``, and records:
+
+    * memory_analysis()      — proves the cell fits (bytes per device);
+    * cost_analysis()        — per-chip FLOPs/bytes for §Roofline;
+    * collective schedule    — op counts + bytes parsed from optimized HLO.
+
+Single-pod mesh (16,16) is the roofline baseline; the multi-pod (2,16,16)
+pass proves the "pod" axis shards. Reports land in experiments/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.configs.base import ArchConfig, ShapeConfig, TrainConfig
+from repro.launch import shardings as SH
+from repro.launch.mesh import data_axis_names, make_production_mesh
+from repro.models.dist import DistContext
+from repro.models.model import build_model
+from repro.roofline import analysis as RA
+from repro.roofline import analytic as AN
+from repro.training.train_step import make_train_step, train_state_init
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../..", "experiments",
+                       "dryrun")
+
+
+def sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig, mesh) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    bspecs = SH.batch_specs(mesh, arch, shape)
+    B = shape.global_batch
+    if shape.kind == "decode":
+        toks = sds((B, 1), jnp.int32, mesh, bspecs["tokens"])
+    else:
+        toks = sds((B, shape.seq_len), jnp.int32, mesh, bspecs["tokens"])
+    out = {"tokens": toks}
+    if arch.is_encdec and shape.kind != "decode":
+        out["src"] = sds((B, shape.seq_len, arch.d_model), jnp.bfloat16,
+                         mesh, bspecs["src"])
+    if arch.frontend == "vision" and shape.kind != "decode":
+        out["prefix"] = sds((B, arch.prefix_len, arch.d_model), jnp.bfloat16,
+                            mesh, bspecs["prefix"])
+    return out
+
+
+def _tree_sds(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shapes_tree, shardings_tree)
+
+
+def lower_cell(arch_name: str, shape_name: str, mesh, *, mesh_name: str,
+               attn_schedule: str = "scan", remat: str = "block",
+               param_dtype: str = "float32",
+               serve_params_dtype: str = "float32",
+               sequence_parallel: bool = False,
+               attn_shard: bool = True,
+               zero1: bool = True, extra_tag: str = ""):
+    """Returns the report dict (also written to experiments/dryrun/)."""
+    arch = get_config(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    model = build_model(arch)
+    tc = TrainConfig(param_dtype=param_dtype, compute_dtype="bfloat16")
+    dist = DistContext(mesh=mesh, data_axes=data_axis_names(mesh),
+                       model_axis="model",
+                       sequence_parallel=sequence_parallel,
+                       attn_shard=attn_shard)
+    t0 = time.time()
+
+    inference_dt = jnp.dtype(serve_params_dtype)
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if shape.kind != "train" and inference_dt != jnp.float32:
+        params_shapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, inference_dt if l.dtype == jnp.float32 else l.dtype),
+            params_shapes)
+    p_shardings = SH.to_shardings(SH.param_specs(params_shapes), mesh)
+    params_sds = _tree_sds(params_shapes, p_shardings)
+
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: train_state_init(model, jax.random.PRNGKey(0), tc))
+        st_shardings = SH.to_shardings(
+            SH.state_specs(state_shapes, mesh), mesh)
+        state_sds = _tree_sds(state_shapes, st_shardings)
+        step = make_train_step(model, tc, dist=dist,
+                               attn_schedule=attn_schedule, remat=remat)
+        fn = jax.jit(step)
+        args = (state_sds, input_specs(arch, shape, mesh))
+    elif shape.kind == "prefill":
+        fn = jax.jit(partial(model.prefill, max_len=shape.seq_len, dist=dist))
+        args = (params_sds, input_specs(arch, shape, mesh))
+    else:  # decode
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     enc_len=shape.seq_len
+                                     if arch.is_encdec else 0))
+        c_shardings = SH.to_shardings(
+            SH.cache_specs(cache_shapes, mesh, shape.global_batch), mesh)
+        cache_sds = _tree_sds(cache_shapes, c_shardings)
+        fn = jax.jit(partial(model.decode_step, dist=dist),
+                     static_argnames=())
+        pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+        args = (params_sds, cache_sds, input_specs(arch, shape, mesh)["tokens"],
+                pos)
+
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo_text = compiled.as_text()
+    cost = RA.cost_summary(compiled)
+    mem = RA.memory_summary(compiled)
+    coll_static = RA.collective_bytes(hlo_text)
+    coll = RA.collective_bytes_tripcount(hlo_text)
+
+    # stash the HLO for re-analysis without recompiling
+    try:
+        import gzip
+        hlo_dir = os.path.join(os.path.dirname(OUT_DIR), "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag_sfx = f"__{extra_tag}" if extra_tag else ""
+        with gzip.open(os.path.join(
+                hlo_dir, f"{arch_name}__{shape_name}__{mesh_name}{tag_sfx}"
+                ".txt.gz"), "wt") as f:
+            f.write(hlo_text)
+    except Exception:
+        pass
+
+    counts = RA.active_param_count(
+        params_shapes,
+        top_k=arch.moe.top_k if arch.moe else 0,
+        num_experts=arch.moe.num_experts if arch.moe else 0)
+    embed_n = arch.padded_vocab * arch.d_model
+    mf = RA.model_flops(arch, shape, counts["active"], embed_params=embed_n)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    # primary roofline terms: analytic flops/bytes (the CPU backend's
+    # cost_analysis counts while bodies once — see roofline/analytic.py),
+    # trip-count-aware HLO parse for collectives.
+    pbytes = (jnp.dtype(param_dtype).itemsize if shape.kind == "train"
+              else inference_dt.itemsize)
+    fl = AN.analytic_flops(arch, shape, attn_schedule=attn_schedule,
+                           remat=remat)
+    by = AN.analytic_bytes_per_chip(arch, shape, counts["total"],
+                                    dict(mesh.shape), remat=remat,
+                                    param_bytes=pbytes)
+    co_an = AN.analytic_collective_bytes_per_chip(arch, shape,
+                                                  counts["total"],
+                                                  dict(mesh.shape),
+                                                  remat=remat,
+                                                  param_bytes=pbytes)
+    flops_chip = fl["total"] / n_chips
+    compute_s = flops_chip / RA.PEAK_FLOPS
+    memory_s = by["total"] / RA.HBM_BW
+    coll_chip = float(coll["total_bytes"])
+    collective_s = coll_chip / RA.ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf_chip = mf / n_chips
+    dom = max(terms.values())
+    roof = {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "flops_per_chip": flops_chip, "bytes_per_chip": by["total"],
+        "coll_bytes_per_chip": coll_chip,
+        "model_flops_per_chip": mf_chip,
+        "bottleneck": bottleneck,
+        "useful_ratio": mf_chip / flops_chip if flops_chip else 0.0,
+        "roofline_fraction": (mf_chip / RA.PEAK_FLOPS) / dom if dom else 0.0,
+    }
+
+    report = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "mesh_shape": dict(mesh.shape), "status": "ok",
+        "step_kind": shape.kind,
+        "tag": extra_tag or "baseline",
+        "attn_schedule": attn_schedule, "remat": remat,
+        "param_dtype": param_dtype, "serve_params_dtype": serve_params_dtype,
+        "attn_shard": attn_shard, "sequence_parallel": sequence_parallel,
+        "params_total": counts["total"], "params_active": counts["active"],
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_analysis": cost, "memory_analysis": mem,
+        "collectives": coll, "collectives_static": coll_static,
+        "analytic_flops": fl, "analytic_bytes": by,
+        "analytic_collectives": co_an,
+        "roofline": roof,
+    }
+    return report
+
+
+def run_and_save(arch, shape, mesh_name, out_dir, **kw):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    tag = kw.get("extra_tag", "")
+    try:
+        rep = lower_cell(arch, shape, mesh, mesh_name=mesh_name, **kw)
+    except Exception as e:
+        rep = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = f"{arch}__{shape}__{mesh_name}{suffix}.json"
+    RA.save_report(os.path.join(out_dir, fname), rep)
+    status = rep["status"]
+    extra = (f" compile={rep.get('compile_s')}s "
+             f"bottleneck={rep.get('roofline', {}).get('bottleneck')}"
+             if status == "ok" else rep.get("reason", rep.get("error", "")))
+    print(f"[dryrun] {arch:24s} {shape:12s} {mesh_name:6s} {status:8s}{extra}",
+          flush=True)
+    return rep
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-schedule", default="scan")
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--param-dtype", default="float32")
+    ap.add_argument("--serve-params-dtype", default="float32")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel activation sharding")
+    ap.add_argument("--no-attn-shard", action="store_true",
+                    help="disable explicit GQA attention constraints "
+                         "(reproduces the baseline sharding)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_err = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rep = run_and_save(arch, shape, mesh_name, args.out,
+                                   attn_schedule=args.attn_schedule,
+                                   remat=args.remat,
+                                   param_dtype=args.param_dtype,
+                                   serve_params_dtype=args.serve_params_dtype,
+                                   sequence_parallel=args.sp,
+                                   attn_shard=not args.no_attn_shard,
+                                   extra_tag=args.tag)
+                n_err += rep["status"] == "error"
+    print(f"[dryrun] done, {n_err} errors", flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — dryrun.py must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization, and smoke tests/benches must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (16, 16) = 256 chips over ("data", "model").
+    Multi-pod:  (2, 16, 16) = 512 chips over ("pod", "data", "model") —
+    DP across pods by default (DCN-friendly); PP-over-pods is available via
+    training.pipeline_parallel."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests, examples)."""
+    import numpy as np
+    devs = np.array(jax.devices()[: n_data * n_model])
+    return Mesh(devs.reshape(n_data, n_model), ("data", "model"))
+
+
+def data_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,176 @@
+"""PartitionSpec assignment for params, optimizer state, batches and caches.
+
+Megatron-style TP on the ``model`` axis, DP over ``("pod","data")``, ZeRO-1
+for optimizer moments. Specs are assigned by matching the pytree key path
+against suffix rules; stacked (scanned) layer groups get a leading None
+automatically (leaf rank = rule rank + 1).
+
+Replication decisions that are deliberate (documented hillclimb levers, see
+EXPERIMENTS.md §Perf):
+  * RG-LRU block weights replicated (rnn_width=2560 is small; sharding the
+    gate matmuls buys little and forces scan-carry resharding);
+  * RWKV time-mix square matrices replicated (40 heads % 16 != 0 — head-dim
+    sharding would split heads across devices); channel-mix IS sharded.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import data_axis_names
+
+M = "model"
+
+# (path-suffix regex, spec) — first match wins. Specs are for the UNSTACKED
+# leaf; stacked leaves get a leading None prepended.
+_RULES = [
+    (r"embed/table$", P(M, None)),
+    (r"lm_head/w$", P(None, M)),
+    (r"(attn|cross)/w[qkv]$", P(None, M)),
+    (r"(attn|cross)/wo$", P(M, None)),
+    (r"(attn|cross)/b[qkv]$", P(M)),
+    (r"moe/router$", P(None, None)),
+    (r"moe/(w_gate|w_up|w_down)$", P(M, None, None)),     # experts over model
+    (r"moe/shared/(w_gate|w_up)$", P(None, M)),
+    (r"moe/shared/w_down$", P(M, None)),
+    (r"mlp/(w_gate|w_up)$", P(None, M)),
+    (r"mlp/w_down$", P(M, None)),
+    (r"cmix/Wk$", P(None, M)),
+    (r"cmix/Wv$", P(M, None)),
+    # rec/* , tmix/* , norms, scalars -> replicated (see module docstring)
+]
+
+
+def _spec_for(path: str, ndim: int, stacked_prefix: int) -> P:
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            rank = len(spec)
+            if ndim == rank:
+                return spec
+            if ndim == rank + stacked_prefix:
+                return P(*([None] * stacked_prefix + list(spec)))
+            return P(*([None] * ndim))      # rank mismatch -> replicate
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_specs(params: Any) -> Any:
+    """Pytree of PartitionSpec matching ``params``. Stacked layer-group
+    leaves live under a 'groups' / 'enc' / 'dec' key -> leading None."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        stacked = 1 if re.search(r"(^|/)(groups|enc|dec)(/|$)", p) else 0
+        specs.append(_spec_for(p, leaf.ndim, stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero1_specs(params: Any, mesh: Mesh) -> Any:
+    """Optimizer-moment specs: param spec + shard the first free dim over the
+    data axes (ZeRO-1). Falls back to the param spec when nothing divides."""
+    d_axes = data_axis_names(mesh)
+    d_size = int(np.prod([mesh.shape[a] for a in d_axes]))
+    pspecs = param_specs(params)
+
+    def widen(leaf, spec):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (sz, cur) in enumerate(zip(leaf.shape, dims)):
+            if cur is None and sz % d_size == 0 and sz >= d_size:
+                dims[i] = d_axes if len(d_axes) > 1 else d_axes[0]
+                return P(*dims)
+        return spec
+
+    return jax.tree.map(widen, params, pspecs)
+
+
+def state_specs(state: Any, mesh: Mesh) -> Any:
+    """Specs for a TrainState {params, opt{step,mu,nu,master?}, ef?}."""
+    z1 = zero1_specs(state["params"], mesh)
+    out = {"params": param_specs(state["params"]),
+           "opt": {"step": P(), "mu": z1, "nu": z1}}
+    if "master" in state["opt"]:
+        out["opt"]["master"] = z1
+    if "ef" in state:
+        out["ef"] = z1
+    return out
+
+
+def batch_size_axes(mesh: Mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of the data axes that divides the batch (long_500k has
+    batch 1 -> replicated)."""
+    d_axes = data_axis_names(mesh)
+    usable = []
+    size = 1
+    for a in d_axes:
+        if global_batch % (size * mesh.shape[a]) == 0:
+            usable.append(a)
+            size *= mesh.shape[a]
+    return tuple(usable) if usable else None
+
+
+def batch_specs(mesh: Mesh, arch: ArchConfig, shape: ShapeConfig) -> Any:
+    bspec = batch_size_axes(mesh, shape.global_batch)
+    b = bspec if bspec else None
+    specs = {"tokens": P(b, None)}
+    if arch.is_encdec:
+        specs["src"] = P(b, None, None)
+    if arch.frontend == "vision":
+        specs["prefix"] = P(b, None, None)
+    return specs
+
+
+def cache_specs(cache: Any, mesh: Mesh, global_batch: int) -> Any:
+    """Decode-cache specs: batch over data axes; the long sequence dim of KV
+    caches over `model` (kv_heads may not divide 16; seq 32k/500k does)."""
+    bspec = batch_size_axes(mesh, global_batch)
+    b = bspec if bspec else None
+    m_size = mesh.shape[M]
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        if leaf.ndim == 4 and re.search(r"(^|/)(k|v|ck|cv)$", p):
+            seq = leaf.shape[1]
+            stacked = False
+        elif leaf.ndim == 5 and re.search(r"(^|/)(k|v|ck|cv)$", p):
+            seq = leaf.shape[2]        # stacked groups: (G, B, S, KV, hd)
+            stacked = True
+        else:
+            # states / rpos / shifts: batch-shard dim 0 (or dim 1 stacked)
+            dims = [None] * leaf.ndim
+            stacked_state = re.search(r"(^|/)(groups|dec)(/|$)", p) and leaf.ndim >= 2
+            bdim = 1 if stacked_state else 0
+            if leaf.ndim > bdim and b is not None and _div(leaf.shape[bdim], mesh, b):
+                dims[bdim] = b
+            return P(*dims)
+        sdim_ok = seq % m_size == 0
+        if stacked:
+            return P(None, b, M if sdim_ok else None, None, None)
+        return P(b, M if sdim_ok else None, None, None)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(path, leaf) for path, leaf in flat])
+
+
+def _div(size: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    if isinstance(axes, str):
+        axes = (axes,)
+    need = int(np.prod([mesh.shape[a] for a in axes]))
+    return size % need == 0
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

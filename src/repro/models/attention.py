@@ -1,0 +1,259 @@
+"""Attention: GQA (full/causal), sliding-window local, cross, decode-with-cache.
+
+Memory-safe by construction: training/prefill attention is an online-softmax
+over KV chunks inside a scan over Q chunks (flash-style at the XLA level), so
+peak activation memory is O(q_chunk * kv_chunk) per (batch, head) instead of
+O(S^2). Sliding-window layers slice exactly window+q_chunk keys per q chunk
+(linear in S — this is what makes recurrentgemma's long_500k cell lowerable).
+
+Two causal schedules are provided (see §Perf in EXPERIMENTS.md):
+  * "scan"     — compact HLO, full KV loop with masks (2x causal FLOPs waste);
+  * "unrolled" — Python-unrolled Q chunks; each q chunk only visits KV chunks
+                 j <= i (halves causal FLOPs at the cost of HLO size). This is
+                 a beyond-paper hillclimb lever.
+
+Decode uses the full cache (contiguous KV, seq shardable) or a ring buffer of
+size `window` for local layers (constant memory at 500k contexts).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _dense_init, apply_rope, rope_table
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qkv_bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {"wq": _dense_init(ks[0], (d_model, n_heads * head_dim), dtype=dtype),
+         "wk": _dense_init(ks[1], (d_model, n_kv * head_dim), dtype=dtype),
+         "wv": _dense_init(ks[2], (d_model, n_kv * head_dim), dtype=dtype),
+         "wo": _dense_init(ks[3], (n_heads * head_dim, d_model), dtype=dtype)}
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def qkv_project(params, x, n_heads: int, n_kv: int, head_dim: int):
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    return (q.reshape(B, S, n_heads, head_dim),
+            k.reshape(B, S, n_kv, head_dim),
+            v.reshape(B, S, n_kv, head_dim))
+
+
+def _chunk_sizes(S: int, want: int) -> int:
+    c = min(want, S)
+    while S % c != 0:
+        c //= 2
+    return max(c, 1)
+
+
+def _online_softmax_step(qc, kj, vj, mask, m, l, acc, scale):
+    """One KV-chunk update of the online softmax. qc (..., C, hd);
+    kj/vj (..., Ck, hd); mask (..., C, Ck) bool; stats in f32."""
+    s = jnp.einsum("...qd,...kd->...qk", qc, kj).astype(jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "...qk,...kd->...qd", p.astype(vj.dtype), vj).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def sdpa(q, k, v, *, causal: bool = True, q_offset=0,
+         q_chunk: int = 512, kv_chunk: int = 512,
+         schedule: str = "scan") -> jnp.ndarray:
+    """Grouped-query chunked attention.
+
+    q (B, Sq, H, hd); k/v (B, Skv, KV, hd); returns (B, Sq, H, hd).
+    q_offset: absolute position of q[0] (decode/prefill continuation).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qc_size = _chunk_sizes(Sq, q_chunk)
+    kc_size = _chunk_sizes(Skv, kv_chunk)
+    nq, nk = Sq // qc_size, Skv // kc_size
+
+    qr = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4)   # (B,KV,G,Sq,hd)
+    kr = k.transpose(0, 2, 1, 3)                                 # (B,KV,Skv,hd)
+    vr = v.transpose(0, 2, 1, 3)
+
+    kpos_all = jnp.arange(Skv)
+
+    def q_block(qi_idx, qblk):
+        """qblk (B,KV,G,C,hd); qi_idx may be traced (scan) or static (unrolled)."""
+        qpos = q_offset + qi_idx * qc_size + jnp.arange(qc_size)
+        m = jnp.full((B, KV, G, qc_size), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, KV, G, qc_size), jnp.float32)
+        acc = jnp.zeros((B, KV, G, qc_size, hd), jnp.float32)
+        n_kv_blocks = nk
+        if schedule == "unrolled" and causal and isinstance(qi_idx, int):
+            # static bound: only KV blocks that intersect the causal triangle
+            hi = q_offset + (qi_idx + 1) * qc_size
+            n_kv_blocks = min(nk, int(np.ceil(hi / kc_size)))
+        for j in range(n_kv_blocks):                             # static unroll
+            kj = jax.lax.dynamic_slice_in_dim(kr, j * kc_size, kc_size,
+                                              axis=2)[:, :, None]   # +G axis
+            vj = jax.lax.dynamic_slice_in_dim(vr, j * kc_size, kc_size,
+                                              axis=2)[:, :, None]
+            kpos = kpos_all[j * kc_size:(j + 1) * kc_size]
+            mask = jnp.ones((qc_size, kc_size), bool)
+            if causal:
+                mask = kpos[None, :] <= qpos[:, None]
+            m, l, acc = _online_softmax_step(qblk, kj, vj, mask, m, l, acc, scale)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    if schedule == "unrolled":
+        outs = []
+        for i in range(nq):
+            qblk = jax.lax.dynamic_slice_in_dim(qr, i * qc_size, qc_size, axis=3)
+            outs.append(q_block(i, qblk))
+        out = jnp.concatenate(outs, axis=3)
+    else:
+        qs = qr.reshape(B, KV, G, nq, qc_size, hd).transpose(3, 0, 1, 2, 4, 5)
+
+        def step(_, inp):
+            i, qblk = inp
+            return None, q_block(i, qblk)
+
+        _, out = jax.lax.scan(step, None, (jnp.arange(nq), qs))
+        out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, G, Sq, hd)
+
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+def sdpa_local(q, k, v, *, window: int, q_offset=0, q_chunk: int = 512
+               ) -> jnp.ndarray:
+    """Causal sliding-window attention, linear in S.
+
+    Each q chunk attends to exactly the previous `window` keys: k/v are
+    front-padded by `window`, so chunk i slices [i*C, i*C + window + C).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    C = _chunk_sizes(Sq, q_chunk)
+    nq = Sq // C
+
+    qr = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4)
+    pad = [(0, 0), (window, 0), (0, 0), (0, 0)]
+    kp = jnp.pad(k, pad).transpose(0, 2, 1, 3)                  # (B,KV,Skv+w,hd)
+    vp = jnp.pad(v, pad).transpose(0, 2, 1, 3)
+
+    qs = qr.reshape(B, KV, G, nq, C, hd).transpose(3, 0, 1, 2, 4, 5)
+
+    def step(_, inp):
+        i, qblk = inp
+        kj = jax.lax.dynamic_slice_in_dim(kp, i * C, window + C,
+                                          axis=2)[:, :, None]       # +G axis
+        vj = jax.lax.dynamic_slice_in_dim(vp, i * C, window + C,
+                                          axis=2)[:, :, None]
+        qpos = q_offset + i * C + jnp.arange(C)
+        kpos = q_offset + i * C + jnp.arange(window + C) - window  # absolute
+        mask = ((kpos[None, :] <= qpos[:, None])
+                & (kpos[None, :] > qpos[:, None] - window)
+                & (kpos[None, :] >= 0))
+        m = jnp.full((B, KV, G, C), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, KV, G, C), jnp.float32)
+        acc = jnp.zeros((B, KV, G, C, hd), jnp.float32)
+        m, l, acc = _online_softmax_step(qblk, kj, vj, mask, m, l, acc, scale)
+        return None, (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    _, out = jax.lax.scan(step, None, (jnp.arange(nq), qs))
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, G, Sq, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def sdpa_decode(q, cache_k, cache_v, cache_len) -> jnp.ndarray:
+    """q (B, 1, H, hd); cache_k/v (B, S, KV, hd); positions >= cache_len masked.
+
+    Plain softmax over the cache — per-token decode is linear; with the cache
+    sequence dim sharded over `model`, XLA inserts the flash-decode-style
+    partial-softmax collectives.
+    """
+    B, _, H, hd = q.shape
+    S, KV = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qr = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, cache_k).astype(jnp.float32) * scale
+    valid = (jnp.arange(S) < cache_len)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, cache_v)
+    return out.reshape(B, 1, H, hd)
+
+
+def sdpa_decode_ring(q, ring_k, ring_v, ring_pos, cur_pos, window: int
+                     ) -> jnp.ndarray:
+    """Decode against a ring-buffer window cache (local_attn layers).
+
+    ring_k/v (B, window, KV, hd); ring_pos (window,) absolute positions
+    (-1 = empty); cur_pos scalar — keys older than window are masked.
+    """
+    B, _, H, hd = q.shape
+    KV = ring_k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qr = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, ring_k).astype(jnp.float32) * scale
+    ok = ((ring_pos >= 0) & (ring_pos <= cur_pos)
+          & (ring_pos > cur_pos - window))[None, None, None, :]
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(ring_v.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, ring_v)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                    dtype=jnp.float32):
+    return attn_init(key, d_model, n_heads, n_kv, head_dim, dtype=dtype)
+
+
+def cross_attend(params, x, enc_k, enc_v, n_heads: int, n_kv: int,
+                 head_dim: int) -> jnp.ndarray:
+    """x (B, Sq, D) queries; enc_k/v (B, Senc, KV, hd) projected once."""
+    B, Sq, _ = x.shape
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, Sq, n_heads, head_dim)
+    out = sdpa(q, enc_k, enc_v, causal=False)
+    return out.reshape(B, Sq, n_heads * head_dim) @ params["wo"].astype(dt)
+
+
+def project_enc_kv(params, enc_out, n_kv: int, head_dim: int):
+    B, S, _ = enc_out.shape
+    dt = enc_out.dtype
+    k = (enc_out @ params["wk"].astype(dt)).reshape(B, S, n_kv, head_dim)
+    v = (enc_out @ params["wv"].astype(dt)).reshape(B, S, n_kv, head_dim)
+    return k, v

@@ -1,0 +1,157 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embeddings.
+
+Functional style: params are plain dicts of jnp arrays; every function takes
+(params, inputs) and returns outputs. Initializers take an explicit PRNG key.
+Compute runs in ``compute_dtype`` (bf16 by default); params stay in their
+stored dtype and are cast at use.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# NOTE (§Perf T2, kept as documentation): block-boundary cotangents are
+# already bf16 at the jaxpr level; the fp32 backward all-reduces observed on
+# qwen2-72b are created by XLA fusing the norm backward and reassociating
+# the AR across the dtype convert. A jax-level custom_vjp cast is therefore
+# a no-op — the fix belongs in the backend's convert-aware AR placement.
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_table(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (..., S) int32 -> (cos, sin) each (..., S, head_dim//2) f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (..., S, H, D); cos/sin broadcastable to (..., S, 1, D/2)."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+                "w_up": _dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+                "w_down": _dense_init(ks[2], (d_ff, d_model), dtype=dtype)}
+    if kind in ("relu2", "gelu"):
+        return {"w_up": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+                "w_down": _dense_init(ks[1], (d_ff, d_model), dtype=dtype)}
+    raise ValueError(kind)
+
+
+def mlp_apply(params, x, kind: str):
+    dt = x.dtype
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"].astype(dt)) * (x @ params["w_up"].astype(dt))
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"].astype(dt)) * (x @ params["w_up"].astype(dt))
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(x @ params["w_up"].astype(dt)))
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"].astype(dt))
+    else:
+        raise ValueError(kind)
+    return h @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    # 1/sqrt(d) scale keeps tied-head logits O(1); tied models scale the
+    # input embeddings back up by sqrt(d) (Gemma convention).
+    return {"table": _dense_init(key, (vocab, d_model), dtype=dtype)}
+
+
+def embed_lookup(params, ids: jnp.ndarray, compute_dtype):
+    return params["table"].astype(compute_dtype)[ids]
+
+
+def lm_head_init(key, d_model: int, vocab: int, dtype=jnp.float32):
+    return {"w": _dense_init(key, (d_model, vocab), dtype=dtype)}
+
+
+def logits_from(params_head, x, embed_params=None):
+    """Untied: x @ w. Tied: x @ table.T."""
+    if params_head is not None:
+        return x @ params_head["w"].astype(x.dtype)
+    return x @ embed_params["table"].astype(x.dtype).T
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  label_smoothing: float = 0.0):
+    """Mean token NLL in fp32; logits (..., V), labels (...,) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if label_smoothing > 0:
+        smooth = lse - jnp.mean(logits, axis=-1)
+        nll = (1 - label_smoothing) * nll + label_smoothing * smooth
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,129 @@
+"""Model facade: uniform init/loss/prefill/decode over every architecture.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions of
+(params, batch) — ready for jit/pjit. Batches:
+
+    decoder-only:  {"tokens": (B, S) int32}                (+ "prefix" (B,P,D))
+    enc-dec:       {"src": (B, S_src, D) float, "tokens": (B, S_tgt) int32}
+
+Loss is next-token NLL with the last position masked (targets are the
+left-shifted tokens), plus MoE auxiliary losses when applicable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.dist import DistContext
+from repro.models.layers import cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key, dtype=jnp.float32):
+        if self.cfg.is_encdec:
+            return ED.encdec_init(key, self.cfg, dtype=dtype)
+        return T.lm_init(key, self.cfg, dtype=dtype)
+
+    def param_count(self) -> int:
+        shapes = jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+    # -- training loss ----------------------------------------------------------
+    def loss(self, params, batch: Dict[str, Any], *,
+             dist: Optional[DistContext] = None,
+             compute_dtype=jnp.bfloat16, remat: str = "block",
+             attn_schedule: str = "scan"):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)],
+            axis=1)
+        if "mask" in batch:
+            mask = mask * batch["mask"].astype(jnp.float32)
+
+        if cfg.is_encdec:
+            logits, aux = ED.encdec_forward(
+                params, cfg, batch["src"], tokens, dist=dist,
+                compute_dtype=compute_dtype, remat=remat, mode="train",
+                attn_schedule=attn_schedule)
+        else:
+            prefix = batch.get("prefix")
+            logits, aux = T.lm_forward(
+                params, cfg, tokens, prefix=prefix, dist=dist,
+                compute_dtype=compute_dtype, remat=remat, mode="train",
+                attn_schedule=attn_schedule)
+            if prefix is not None:
+                P_len = prefix.shape[1]
+                logits = logits[:, P_len:]
+
+        nll = cross_entropy(logits, targets.astype(jnp.int32), mask)
+        loss = nll
+        metrics = {"nll": nll}
+        if cfg.moe is not None:
+            n_moe_layers = max(
+                cfg.n_layers - cfg.n_dense_head, 1)
+            lb = aux["load_balance"] / n_moe_layers
+            rz = aux["router_z"] / n_moe_layers
+            loss = (loss + cfg.moe.load_balance_loss * lb
+                    + cfg.moe.router_z_loss * rz)
+            metrics.update(load_balance=lb, router_z=rz)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # -- serving ----------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, Any], max_len: int, *,
+                dist: Optional[DistContext] = None,
+                compute_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            logits, _, cache = ED.encdec_forward(
+                params, cfg, batch["src"], batch["tokens"], dist=dist,
+                compute_dtype=compute_dtype, mode="prefill", max_len=max_len,
+                remat="none")
+        else:
+            logits, _, cache = T.lm_forward(
+                params, cfg, batch["tokens"], prefix=batch.get("prefix"),
+                dist=dist, compute_dtype=compute_dtype, mode="prefill",
+                max_len=max_len, remat="none")
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, tokens, pos, *,
+                    dist: Optional[DistContext] = None,
+                    compute_dtype=jnp.bfloat16):
+        """tokens (B, 1) int32; pos: current sequence length (scalar)."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            logits, cache = ED.encdec_forward(
+                params, cfg, None, tokens, dist=dist,
+                compute_dtype=compute_dtype, mode="decode", pos=pos,
+                cache=cache, remat="none")
+        else:
+            logits, cache = T.lm_forward(
+                params, cfg, tokens, dist=dist, compute_dtype=compute_dtype,
+                mode="decode", pos=pos, cache=cache, remat="none")
+        return logits[:, -1], cache
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0,
+                   dtype=jnp.bfloat16):
+        if self.cfg.is_encdec:
+            return ED.encdec_cache_init(self.cfg, batch, max_len, enc_len,
+                                        dtype)
+        return T.lm_cache_init(self.cfg, batch, max_len, enc_len, dtype)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg)

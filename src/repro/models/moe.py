@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN: sort-based capacity dispatch + expert parallelism.
+
+Design (TPU-native, shard-friendly — see DESIGN.md §6 EP):
+
+* Routing, top-k selection and capacity assignment happen **per data shard**
+  (inside shard_map) — no global sort, no (tokens, experts, capacity)
+  one-hot blow-up. Tokens are gathered into (E_local, C, D) expert batches
+  via a rank-within-expert scatter (same trick as core.partition).
+* Experts are sharded over the `model` axis: each rank computes only its
+  E/TP experts on its data shard's tokens; a single psum over `model`
+  combines expert outputs — the same collective volume as a Megatron MLP
+  all-reduce, so EP composes with TP at no extra schedule complexity.
+* Capacity overflow drops the lowest-rank assignments (standard GShard
+  semantics); the load-balance auxiliary loss keeps drops rare.
+
+Shared experts (DeepSeek-MoE / Llama-4 style) are a fused dense GLU of width
+num_shared * shared_d_ff, always on.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import _dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, mlp_kind: str = "swiglu",
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    E, F = cfg.num_experts, cfg.expert_d_ff
+    p = {"router": _dense_init(ks[0], (d_model, E), dtype=jnp.float32),
+         "w_gate": _dense_init(ks[1], (E, d_model, F), dtype=dtype),
+         "w_up": _dense_init(ks[2], (E, d_model, F), dtype=dtype),
+         "w_down": _dense_init(ks[3], (E, F, d_model), dtype=dtype)}
+    if cfg.num_shared > 0:
+        p["shared"] = mlp_init(ks[4], d_model,
+                               cfg.num_shared * cfg.shared_d_ff, mlp_kind,
+                               dtype=dtype)
+    return p
+
+
+def _rank_within(groups: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Stable rank of each element within its group value."""
+    order = jnp.argsort(groups, stable=True)
+    sorted_g = groups[order]
+    idx_in_run = jnp.arange(n) - jnp.searchsorted(sorted_g, sorted_g, side="left")
+    return jnp.zeros((n,), jnp.int32).at[order].set(idx_in_run.astype(jnp.int32))
+
+
+def moe_apply(params, x: jnp.ndarray, cfg: MoEConfig,
+              mlp_kind: str = "swiglu", ep_axis: Optional[str] = None
+              ) -> Tuple[jnp.ndarray, dict]:
+    """x (B, S, D) -> (out (B, S, D), aux-losses dict).
+
+    When ``ep_axis`` is set (inside shard_map), this rank owns experts
+    [rank*E_local, (rank+1)*E_local) and the combined output is psum'd.
+    """
+    B, S, D = x.shape
+    dt = x.dtype
+    N = B * S
+    E, K = cfg.num_experts, cfg.top_k
+    xf = x.reshape(N, D)
+
+    # ---- routing (fp32) -----------------------------------------------------
+    logits = xf.astype(jnp.float32) @ params["router"]            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                        # (N, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # aux: load-balance (Switch-style) + router z-loss
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(top_e, E, dtype=jnp.float32)).sum(1), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = {
+        "load_balance": E * jnp.sum(frac_tokens * frac_probs),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+
+    # ---- expert-parallel window --------------------------------------------
+    if ep_axis is not None:
+        tp = jax.lax.axis_size(ep_axis)
+        rank = jax.lax.axis_index(ep_axis)
+        assert E % tp == 0, (E, tp)
+        E_local = E // tp
+        e0 = rank * E_local
+    else:
+        E_local, e0 = E, 0
+
+    C = max(int(np.ceil(cfg.capacity_factor * K * N / E)), 1)
+
+    flat_e = top_e.reshape(-1)                                    # (N*K,)
+    flat_w = top_p.reshape(-1)
+    tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), K)
+
+    le = flat_e - e0
+    local = (le >= 0) & (le < E_local)
+    le_c = jnp.where(local, le, E_local)                          # overflow grp
+    rank_in_e = _rank_within(le_c + 0, N * K)
+    keep = local & (rank_in_e < C)
+    slot = jnp.where(keep, le_c * C + rank_in_e, E_local * C)
+
+    xin = jnp.zeros((E_local * C + 1, D), dt).at[slot].set(
+        xf[tok], mode="drop")[:-1].reshape(E_local, C, D)
+
+    # ---- expert FFN (grouped GLU) -------------------------------------------
+    wg = jax.lax.dynamic_slice_in_dim(params["w_gate"], e0, E_local, 0).astype(dt) \
+        if ep_axis is None else params["w_gate"].astype(dt)
+    wu = jax.lax.dynamic_slice_in_dim(params["w_up"], e0, E_local, 0).astype(dt) \
+        if ep_axis is None else params["w_up"].astype(dt)
+    wd = jax.lax.dynamic_slice_in_dim(params["w_down"], e0, E_local, 0).astype(dt) \
+        if ep_axis is None else params["w_down"].astype(dt)
+    # NOTE: under shard_map the caller passes the *local* expert slice already
+    # (E_local, D, F); without shard_map we slice the full stack (no-op e0=0).
+    act = jax.nn.silu if mlp_kind in ("swiglu",) else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", xin, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xin, wu)
+    y_exp = jnp.einsum("ecf,efd->ecd", h, wd).reshape(E_local * C, D)
+
+    # ---- combine -------------------------------------------------------------
+    contrib = jnp.where(keep[:, None], y_exp[jnp.minimum(slot, E_local * C - 1)]
+                        * flat_w[:, None].astype(dt), 0)
+    out = jnp.zeros((N, D), dt).at[tok].add(contrib)
+    # Shared expert: under EP its hidden dim is sharded over the same axis
+    # (Megatron MLP style), so its partial output folds into the expert psum
+    # — one collective covers both routed and shared paths.
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], xf, mlp_kind)
+    if ep_axis is not None:
+        out = jax.lax.psum(out, ep_axis)
+
+    return out.reshape(B, S, D), aux

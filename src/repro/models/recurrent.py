@@ -1,0 +1,346 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and RWKV6 (Finch).
+
+Both expose a parallel **train** path and an O(1)-state **decode** path:
+
+* RG-LRU: linear recurrence with data-dependent decay
+  h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * z_t), a_t = exp(-c softplus(L) r_t)
+  — parallelized with ``jax.lax.associative_scan`` (log-depth).
+* RWKV6: per-head matrix-state recurrence
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T,  y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+  — parallelized with the chunked linear-attention form (intra-chunk masked
+  matmuls + inter-chunk state carry), chunk length 32, fp32 internals.
+  The data-dependent decay w_t = exp(-exp(w0 + lora(x))) is the headline
+  Finch feature and is implemented exactly; the decay LoRA is zero-init so
+  fresh models start at the stable constant-decay point.
+
+Decode-path == train-path equivalence is covered by tests/test_recurrent.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _dense_init
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Temporal depthwise causal conv (Griffin block)
+# ---------------------------------------------------------------------------
+
+def causal_conv_init(key, width: int, channels: int, dtype=jnp.float32):
+    return {"w": _dense_init(key, (width, channels), scale=0.3, dtype=dtype),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv_apply(params, x, history: Optional[jnp.ndarray] = None):
+    """x (B, S, C): y_t = sum_j w_j x_{t-j} + b (width static unroll).
+
+    ``history`` (B, W-1, C): inputs preceding x[0] (zeros if None) — lets a
+    segmented prefill produce exactly the same outputs as one long pass.
+    """
+    W = params["w"].shape[0]
+    S = x.shape[1]
+    dt = x.dtype
+    if history is None:
+        ext = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        ext = jnp.concatenate([history.astype(dt), x], axis=1)
+    y = jnp.zeros_like(x)
+    for j in range(W):
+        y = y + ext[:, W - 1 - j: W - 1 - j + S] * params["w"][j].astype(dt)
+    return y + params["b"].astype(dt)
+
+
+def causal_conv_step(params, x_t, buf):
+    """x_t (B, C); buf (B, W-1, C) holds previous inputs (most recent last)."""
+    W = params["w"].shape[0]
+    dt = x_t.dtype
+    hist = jnp.concatenate([buf.astype(dt), x_t[:, None]], axis=1)   # (B, W, C)
+    # hist[-1] is x_t (lag 0) and w[j] multiplies x_{t-j} -> reverse the taps
+    y = jnp.einsum("bwc,wc->bc", hist,
+                   params["w"][::-1].astype(dt)) + params["b"].astype(dt)
+    return y, hist[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def rglru_block_init(key, d_model: int, rnn_width: int, conv_width: int,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    R = rnn_width
+    # Lambda init so a = exp(-c*softplus(L)) sits in (0.9, 0.999) at r=1
+    lam = jnp.asarray(
+        np.log(np.expm1(-np.log(np.random.RandomState(0).uniform(
+            0.9, 0.999, size=R)) / RGLRU_C)), jnp.float32)
+    return {
+        "w_x": _dense_init(ks[0], (d_model, R), dtype=dtype),
+        "w_gate": _dense_init(ks[1], (d_model, R), dtype=dtype),
+        "w_out": _dense_init(ks[2], (R, d_model), dtype=dtype),
+        "conv": causal_conv_init(ks[3], conv_width, R, dtype=dtype),
+        "w_a": _dense_init(ks[4], (R, R), dtype=dtype),
+        "b_a": jnp.zeros((R,), dtype),
+        "w_i": _dense_init(ks[5], (R, R), dtype=dtype),
+        "b_i": jnp.zeros((R,), dtype),
+        "lam": lam,
+    }
+
+
+def _rglru_gates(params, z):
+    dt = z.dtype
+    r = jax.nn.sigmoid((z @ params["w_a"].astype(dt)
+                        + params["b_a"].astype(dt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((z @ params["w_i"].astype(dt)
+                        + params["b_i"].astype(dt)).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))          # sqrt(1 - a^2), stable
+    return a, beta * i * z.astype(jnp.float32)
+
+
+def rglru_block_apply(params, x, state: Optional[Tuple] = None,
+                      return_state: bool = False):
+    """x (B, S, D) -> (B, S, D) [, state]. Parallel associative scan over S.
+
+    ``state`` = (h (B,R) f32, conv_buf (B, W-1, R)) — same tuple the decode
+    step carries, so prefill-then-decode is seamless.
+    """
+    dt = x.dtype
+    W = params["conv"]["w"].shape[0]
+    z_pre = x @ params["w_x"].astype(dt)
+    h0 = state[0] if state is not None else None
+    buf = state[1] if state is not None else None
+    z = causal_conv_apply(params["conv"], z_pre, history=buf)
+    a, b = _rglru_gates(params, z)                                # f32 (B,S,R)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(dt))
+    out = (h.astype(dt) * gate) @ params["w_out"].astype(dt)
+    if return_state:
+        new_buf = z_pre[:, -(W - 1):].astype(jnp.float32)
+        if z_pre.shape[1] < W - 1:   # very short segments: keep old history
+            keep = (buf if buf is not None
+                    else jnp.zeros((x.shape[0], W - 1, z_pre.shape[-1]), jnp.float32))
+            new_buf = jnp.concatenate([keep, z_pre.astype(jnp.float32)],
+                                      axis=1)[:, -(W - 1):]
+        return out, (h[:, -1], new_buf)
+    return out
+
+
+def rglru_block_step(params, x_t, h, conv_buf):
+    """One decode step. x_t (B, D); h (B, R) f32; conv_buf (B, W-1, R)."""
+    dt = x_t.dtype
+    z_pre = x_t @ params["w_x"].astype(dt)
+    z, conv_buf = causal_conv_step(params["conv"], z_pre, conv_buf)
+    a, b = _rglru_gates(params, z[:, None])
+    h = a[:, 0] * h + b[:, 0]
+    gate = jax.nn.gelu(x_t @ params["w_gate"].astype(dt))
+    out = (h.astype(dt) * gate) @ params["w_out"].astype(dt)
+    return out, h, conv_buf
+
+
+def rglru_init_state(batch: int, rnn_width: int, conv_width: int):
+    return (jnp.zeros((batch, rnn_width), jnp.float32),
+            jnp.zeros((batch, conv_width - 1, rnn_width), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+RWKV_LORA = 64
+RWKV_CHUNK = 32
+
+
+def rwkv_time_mix_init(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 10)
+    hd = d_model // n_heads
+    return {
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_v": jnp.full((d_model,), 0.5, dtype),
+        "mu_g": jnp.full((d_model,), 0.5, dtype),
+        "mu_w": jnp.full((d_model,), 0.5, dtype),
+        "w0": jnp.full((d_model,), -2.0, jnp.float32),
+        "lora_A": _dense_init(ks[0], (d_model, RWKV_LORA), dtype=jnp.float32),
+        "lora_B": jnp.zeros((RWKV_LORA, d_model), jnp.float32),  # zero-init
+        "Wr": _dense_init(ks[1], (d_model, d_model), dtype=dtype),
+        "Wk": _dense_init(ks[2], (d_model, d_model), dtype=dtype),
+        "Wv": _dense_init(ks[3], (d_model, d_model), dtype=dtype),
+        "Wg": _dense_init(ks[4], (d_model, d_model), dtype=dtype),
+        "Wo": _dense_init(ks[5], (d_model, d_model), dtype=dtype),
+        "u": _dense_init(ks[6], (n_heads, hd), scale=0.5, dtype=jnp.float32),
+        "gn_scale": jnp.ones((d_model,), dtype),
+        "gn_bias": jnp.zeros((d_model,), dtype),
+    }
+
+
+def _token_shift(x, last: Optional[jnp.ndarray]):
+    """Previous-token tensor; `last` (B, D) is the shift state for decode."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, : x.shape[1]]
+    return jnp.concatenate([last[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _head_groupnorm(y, scale, bias, n_heads: int, eps=64e-5):
+    B, S, D = y.shape
+    hd = D // n_heads
+    yh = y.reshape(B, S, n_heads, hd).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, S, D) * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(y.dtype)
+
+
+def _rwkv_projections(params, x, last_shift, n_heads: int):
+    B, S, D = x.shape
+    dt = x.dtype
+    hd = D // n_heads
+    sx = _token_shift(x, last_shift)
+    dx = sx - x
+    xr = x + dx * params["mu_r"].astype(dt)
+    xk = x + dx * params["mu_k"].astype(dt)
+    xv = x + dx * params["mu_v"].astype(dt)
+    xg = x + dx * params["mu_g"].astype(dt)
+    xw = x + dx * params["mu_w"].astype(dt)
+    r = (xr @ params["Wr"].astype(dt)).reshape(B, S, n_heads, hd)
+    k = (xk @ params["Wk"].astype(dt)).reshape(B, S, n_heads, hd)
+    v = (xv @ params["Wv"].astype(dt)).reshape(B, S, n_heads, hd)
+    g = jax.nn.silu(xg @ params["Wg"].astype(dt))
+    # data-dependent decay (the Finch contribution): logw <= 0 per channel
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["lora_A"]) @ params["lora_B"]
+    logw = -jnp.exp(jnp.clip(params["w0"] + lora, -8.0, 1.0))
+    logw = logw.reshape(B, S, n_heads, hd)
+    return r, k, v, g, logw
+
+
+def _wkv_chunked(r, k, v, logw, u, state0):
+    """Chunked linear-attention evaluation of the RWKV6 recurrence.
+
+    r/k/v/logw (B, S, H, hd) — fp32; u (H, hd); state0 (B, H, hd, hd).
+    Returns (y (B, S, H, hd), final state).
+    """
+    B, S, H, hd = r.shape
+    L = min(RWKV_CHUNK, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+    rs = r.reshape(B, nc, L, H, hd).astype(jnp.float32)
+    ks_ = k.reshape(B, nc, L, H, hd).astype(jnp.float32)
+    vs = v.reshape(B, nc, L, H, hd).astype(jnp.float32)
+    lw = logw.reshape(B, nc, L, H, hd).astype(jnp.float32)
+    clw = jnp.cumsum(lw, axis=2)                                  # inclusive
+    total = clw[:, :, -1]                                         # (B,nc,H,hd)
+    r_t = rs * jnp.exp(clw - lw)                                  # r ⊙ W_{t-1}
+    k_t = ks_ * jnp.exp(-clw)                                     # k / W_t
+    k_end = ks_ * jnp.exp(total[:, :, None] - clw)                # k ⊙ W_L/W_t
+
+    # intra-chunk attention matrix, strictly-lower + diagonal u-bonus
+    A = jnp.einsum("bclhd,bcmhd->bchlm", r_t, k_t)
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    diag = jnp.einsum("bclhd,hd,bclhd->bclh", rs, u, ks_)
+    A = A + jnp.einsum("lm,bclh->bchlm", jnp.eye(L), diag)
+    intra = jnp.einsum("bchlm,bcmhe->bclhe", A, vs)
+
+    def chunk_step(S0, xs):
+        r_tc, k_endc, vsc, totalc = xs
+        inter = jnp.einsum("blhd,bhde->blhe", r_tc, S0)
+        S_new = (jnp.exp(totalc)[..., None] * S0
+                 + jnp.einsum("blhd,blhe->bhde", k_endc, vsc))
+        return S_new, inter
+
+    xs = (r_t.transpose(1, 0, 2, 3, 4), k_end.transpose(1, 0, 2, 3, 4),
+          vs.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2, 3))
+    state_f, inter = jax.lax.scan(chunk_step, state0.astype(jnp.float32), xs)
+    y = intra + inter.transpose(1, 0, 2, 3, 4)
+    return y.reshape(B, S, H, hd), state_f
+
+
+def rwkv_time_mix_apply(params, x, n_heads: int,
+                        state: Optional[Tuple] = None,
+                        return_state: bool = False):
+    """x (B,S,D). state = (wkv_state (B,H,hd,hd) f32, shift (B,D))."""
+    B, S, D = x.shape
+    dt = x.dtype
+    hd = D // n_heads
+    wkv0 = state[0] if state is not None else jnp.zeros((B, n_heads, hd, hd),
+                                                        jnp.float32)
+    last = state[1] if state is not None else None
+    r, k, v, g, logw = _rwkv_projections(params, x, last, n_heads)
+    y, wkv_f = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), logw, params["u"], wkv0)
+    y = _head_groupnorm(y.reshape(B, S, D).astype(dt), params["gn_scale"],
+                        params["gn_bias"], n_heads)
+    out = (y * g) @ params["Wo"].astype(dt)
+    if return_state:
+        return out, (wkv_f, x[:, -1])
+    return out
+
+
+def rwkv_time_mix_step(params, x_t, state, n_heads: int):
+    """One decode step; exact recurrence. x_t (B, D)."""
+    B, D = x_t.shape
+    hd = D // n_heads
+    wkv, last = state
+    r, k, v, g, logw = _rwkv_projections(params, x_t[:, None], last, n_heads)
+    r1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+    w1 = jnp.exp(logw[:, 0])                                      # (B,H,hd)
+    kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
+    y = jnp.einsum("bhd,bhde->bhe", r1,
+                   wkv + params["u"][None, :, :, None] * kv)
+    wkv = w1[..., None] * wkv + kv
+    y = _head_groupnorm(y.reshape(B, 1, D).astype(x_t.dtype),
+                        params["gn_scale"], params["gn_bias"], n_heads)
+    out = (y[:, 0] * g[:, 0]) @ params["Wo"].astype(x_t.dtype)
+    return out, (wkv, x_t)
+
+
+def rwkv_channel_mix_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {"mu_k": jnp.full((d_model,), 0.5, dtype),
+            "mu_r": jnp.full((d_model,), 0.5, dtype),
+            "Wk": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "Wv": _dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+            "Wr": _dense_init(ks[2], (d_model, d_model), dtype=dtype)}
+
+
+def rwkv_channel_mix_apply(params, x, last: Optional[jnp.ndarray] = None,
+                           return_state: bool = False):
+    dt = x.dtype
+    sx = _token_shift(x, last)
+    dx = sx - x
+    xk = x + dx * params["mu_k"].astype(dt)
+    xr = x + dx * params["mu_r"].astype(dt)
+    rgate = jax.nn.sigmoid(xr @ params["Wr"].astype(dt))
+    h = jnp.square(jax.nn.relu(xk @ params["Wk"].astype(dt)))
+    out = rgate * (h @ params["Wv"].astype(dt))
+    if return_state:
+        return out, x[:, -1]
+    return out
+
+
+def rwkv_channel_mix_step(params, x_t, last):
+    out = rwkv_channel_mix_apply(params, x_t[:, None], last=last)
+    return out[:, 0], x_t
+
+
+def rwkv_init_state(batch: int, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    return {"wkv": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            "shift_tm": jnp.zeros((batch, d_model), jnp.float32),
+            "shift_cm": jnp.zeros((batch, d_model), jnp.float32)}

@@ -1,0 +1,275 @@
+"""Roofline-term extraction from a compiled (dry-run) XLA executable.
+
+Per (arch, shape, mesh) cell we derive three per-chip time lower bounds:
+
+    compute    = FLOPs_per_chip   / 197e12    (bf16 peak, TPU-v5e-class)
+    memory     = bytes_per_chip   / 819e9     (HBM bandwidth)
+    collective = coll_bytes_per_chip / 50e9   (ICI per-link)
+
+FLOPs / bytes come from ``compiled.cost_analysis()`` (the SPMD-partitioned
+per-device module, so values are already per chip). Collective bytes are NOT
+in cost_analysis: we parse the optimized HLO and sum the result-shape bytes
+of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute (result bytes ≈ bytes traversing the link per chip — the
+standard single-count approximation; ring all-reduce moves ~2x, noted).
+
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE; 2·N·B decode) is computed from
+the param tree so the useful-compute ratio (vs HLO FLOPs) exposes
+remat/causal-waste/dispatch overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes of every dtype[dims] token in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-op-kind byte totals from optimized HLO (per-device program).
+
+    STATIC count: collectives inside while-loop bodies count once. Use
+    ``collective_bytes_tripcount`` for the loop-aware totals (primary)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?[%\w\.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        if "-done(" in line:      # avoid double counting async pairs
+            continue
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+        counts[kind] += 1
+    return {"bytes_by_kind": out, "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+# ---------------------------------------------------------------------------
+# While-loop-aware collective accounting
+# ---------------------------------------------------------------------------
+
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"while\(.*\),\s*condition=%?([\w\.\-]+),\s*"
+                       r"body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Computations start at column 0 and end with '{'; ops are indented."""
+    comps: Dict[str, str] = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        if name is None:
+            if line and not line.startswith((" ", "}")) \
+                    and line.rstrip().endswith("{") \
+                    and (line.startswith(("ENTRY", "%")) or "->" in line):
+                m = _COMP_NAME.match(line.strip())
+                if m:
+                    name = m.group(1)
+                    buf = []
+            continue
+        if line.startswith("}"):
+            comps[name] = "\n".join(buf)
+            name = None
+            continue
+        buf.append(line)
+    return comps
+
+
+def _trip_count(cond_text: str) -> int:
+    """Heuristic trip count of a scan-generated loop: the largest small u/s32
+    scalar constant in the condition computation (the loop bound)."""
+    consts = [int(x) for x in _CONST_RE.findall(cond_text)]
+    consts = [c for c in consts if 0 < c < 10_000_000]
+    return max(consts) if consts else 1
+
+
+def collective_bytes_tripcount(hlo_text: str) -> Dict[str, Any]:
+    """Collective bytes with while-body contributions multiplied by trip
+    counts (handles nested scans: layer scan x attention chunk scan)."""
+    comps = _split_computations(hlo_text)
+    entry_name = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_NAME.match(line.strip())
+            if m:
+                entry_name = m.group(1)
+    if entry_name is None or entry_name not in comps:
+        base = collective_bytes(hlo_text)
+        base["note"] = "no ENTRY parsed; static counts"
+        return base
+
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+
+    def walk(comp_name: str, mult: float, depth: int = 0):
+        # HLO call graphs are DAGs; every reference executes -> no memo.
+        if comp_name not in comps or depth > 12:
+            return
+        text = comps[comp_name]
+        local = collective_bytes(text)
+        for k in _COLLECTIVES:
+            out[k] += local["bytes_by_kind"][k] * mult
+            counts[k] += local["counts"][k]
+        for m in _WHILE_RE.finditer(text):
+            cond, body = m.group(1), m.group(2)
+            tc = _trip_count(comps.get(cond, ""))
+            walk(body, mult * tc, depth + 1)
+        # fusions / calls / conditionals execute once per visit
+        for m in re.finditer(
+                r"(?:to_apply|calls|called_computations)="
+                r"[{]?%?([\w\.\-]+)", text):
+            walk(m.group(1), mult, depth + 1)
+        for m in re.finditer(r"(?:branch_computations|true_computation|"
+                             r"false_computation)=\{?%?([\w\.\-, %]+)", text):
+            for nm in re.split(r"[,\s%]+", m.group(1)):
+                if nm:
+                    walk(nm, mult, depth + 1)
+
+    walk(entry_name, 1.0)
+    return {"bytes_by_kind": {k: int(v) for k, v in out.items()},
+            "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:           # backend may not support it
+        return {"flops": -1.0, "bytes": -1.0, "error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", -1.0))
+    byts = float(ca.get("bytes accessed", -1.0))
+    return {"flops": flops, "bytes": byts,
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+            "utilization_operand0": float(ca.get("utilization0{}", 0.0))}
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops_per_chip: float
+    bottleneck: str
+    useful_ratio: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(cost: Dict[str, float], coll: Dict[str, Any],
+                   model_flops_global: float, n_chips: int) -> Roofline:
+    f = max(cost.get("flops", 0.0), 0.0)
+    b = max(cost.get("bytes", 0.0), 0.0)
+    c = float(coll["total_bytes"])
+    compute_s = f / PEAK_FLOPS
+    memory_s = b / HBM_BW
+    coll_s = c / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_global / n_chips
+    return Roofline(compute_s=compute_s, memory_s=memory_s,
+                    collective_s=coll_s, flops_per_chip=f, bytes_per_chip=b,
+                    coll_bytes_per_chip=c, model_flops_per_chip=mf,
+                    bottleneck=bottleneck,
+                    useful_ratio=(mf / f) if f > 0 else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def active_param_count(params_shapes, top_k: int = 0, num_experts: int = 0
+                       ) -> Dict[str, int]:
+    """(total, active) param counts from an eval_shape tree.
+
+    Routed-expert leaves (path contains 'moe/' with a leading expert dim)
+    count at top_k/num_experts weight in `active`."""
+    import jax
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_shapes)
+    total = 0
+    active = 0.0
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if re.search(r"moe/(w_gate|w_up|w_down)$", p) and num_experts:
+            active += n * (top_k / num_experts)
+        else:
+            active += n
+    return {"total": total, "active": int(active)}
+
+
+def model_flops(arch, shape, n_params_active: int, embed_params: int = 0
+                ) -> float:
+    """6·N·D train; 2·N·B per decoded token (N excludes embedding lookups)."""
+    n = n_params_active - embed_params
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token
+
+
+def save_report(path: str, report: Dict[str, Any]):
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, default=float)

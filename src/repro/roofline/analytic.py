@@ -1,0 +1,181 @@
+"""Analytic FLOPs / HBM-bytes / collective-bytes models per (arch, shape).
+
+Why this exists: the CPU backend's ``cost_analysis()`` counts a while-loop
+body ONCE (not x trip count), so any scanned-layers model under-reports
+FLOPs/bytes by ~n_layers, and collectives inside the scan are likewise
+under-counted by the static HLO parse. The dry-run therefore reports BOTH:
+
+  * raw cost_analysis numbers (diagnostic, loop-undercounted), and
+  * these first-principles models (primary roofline terms), which are also
+    cross-validated against the trip-count-aware HLO collective parse
+    (analysis.collective_bytes_tripcount) — agreement within ~2x for the
+    cells spot-checked in EXPERIMENTS.md.
+
+All values are PER CHIP; mesh geometry: TP = model-axis size, DP = product
+of data axes.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+
+
+def _counts(arch: ArchConfig) -> Dict[str, float]:
+    d, hd = arch.d_model, arch.resolved_head_dim
+    kv = max(arch.n_kv_heads, 0)
+    types = arch.layer_types()
+    n_attn = sum(t in ("attn", "local_attn") for t in types)
+    n_rglru = sum(t == "rglru" for t in types)
+    n_rwkv = sum(t == "rwkv" for t in types)
+
+    attn_w = d * (arch.n_heads * hd) * 2 + d * kv * hd * 2   # wq,wo + wk,wv
+    if arch.moe is not None:
+        m = arch.moe
+        ffn_active = 3 * d * m.expert_d_ff * m.top_k \
+            + 3 * d * m.shared_d_ff * m.num_shared + d * m.num_experts
+        ffn_dense_head = 3 * d * arch.d_ff * arch.n_dense_head
+    else:
+        per_ffn = (3 if arch.mlp in ("swiglu", "geglu") else 2) * d * arch.d_ff
+        ffn_active = per_ffn
+        ffn_dense_head = 0
+
+    rglru_w = (2 * d * (arch.rnn_width or d)
+               + (arch.rnn_width or d) * d
+               + 2 * (arch.rnn_width or d) ** 2) if n_rglru else 0
+    rwkv_w = (5 * d * d + 2 * d * arch.d_ff + d * d) if n_rwkv else 0
+
+    n_moe_layers = max(arch.n_layers - arch.n_dense_head, 0) \
+        if arch.moe is not None else 0
+    active_wo_embed = (
+        n_attn * attn_w
+        + (n_moe_layers * ffn_active if arch.moe else
+           (n_attn + n_rglru) * ffn_active)
+        + arch.n_dense_head * (attn_w + (ffn_dense_head / max(arch.n_dense_head, 1)))
+        + n_rglru * rglru_w + n_rwkv * rwkv_w)
+    if arch.is_encdec:
+        active_wo_embed += arch.encoder_layers * (attn_w + ffn_active) \
+            + arch.n_layers * attn_w        # cross-attn projections
+    head_w = arch.padded_vocab * d           # logits matmul (tied or not)
+    return dict(active_wo_embed=active_wo_embed, head_w=head_w,
+                n_attn=n_attn, n_rglru=n_rglru, n_rwkv=n_rwkv)
+
+
+def analytic_flops(arch: ArchConfig, shape: ShapeConfig,
+                   attn_schedule: str = "scan",
+                   remat: str = "block") -> Dict[str, float]:
+    """GLOBAL flops for the step; divide by chips for per-chip."""
+    c = _counts(arch)
+    B, S = shape.global_batch, shape.seq_len
+    hd = arch.resolved_head_dim
+    H = arch.n_heads
+
+    if shape.kind == "decode":
+        tokens = B
+        # attention reads the whole cache per new token
+        attn = 4.0 * B * S * H * hd * c["n_attn"]
+        attn += 4.0 * B * min(S, arch.window) * H * hd * \
+            sum(t == "local_attn" for t in arch.layer_types())
+        mm = 2.0 * (c["active_wo_embed"] + c["head_w"]) * tokens
+        return {"total": mm + attn, "matmul": mm, "attention": attn, "mult": 1.0}
+
+    tokens = B * S
+    causal_factor = 1.0 if attn_schedule == "scan" else 0.55
+    attn = 4.0 * B * S * S * H * hd * c["n_attn"] * causal_factor
+    n_local = sum(t == "local_attn" for t in arch.layer_types())
+    attn += 4.0 * B * S * min(arch.window, S) * H * hd * n_local
+    if arch.is_encdec:
+        attn += 4.0 * B * S * S * H * hd * arch.encoder_layers  # bidir enc
+        attn += 4.0 * B * S * S * H * hd * arch.n_layers        # cross
+    mm = 2.0 * (c["active_wo_embed"] + c["head_w"]) * tokens
+    fwd = mm + attn
+    if shape.kind == "prefill":
+        return {"total": fwd, "matmul": mm, "attention": attn, "mult": 1.0}
+    mult = 4.0 if remat == "block" else 3.0   # fwd + (remat fwd) + 2x bwd
+    return {"total": fwd * mult, "matmul": mm, "attention": attn, "mult": mult}
+
+
+def analytic_bytes_per_chip(arch: ArchConfig, shape: ShapeConfig,
+                            params_total: int, mesh_shape: Dict[str, int],
+                            remat: str = "block",
+                            param_bytes: int = F32) -> Dict[str, float]:
+    """Minimal HBM traffic per chip (first-order: weights + activations +
+    optimizer + caches; attention intermediates assumed cache-resident)."""
+    tp = mesh_shape.get("model", 1)
+    dp = int(np.prod([v for k, v in mesh_shape.items() if k != "model"]))
+    n_chips = tp * dp
+    d = arch.d_model
+    L = arch.n_layers + arch.encoder_layers
+    B_loc = max(shape.global_batch // dp, 1)
+    S = shape.seq_len
+
+    p_shard = params_total * param_bytes / tp     # (dp ranks replicate reads)
+
+    if shape.kind == "decode":
+        cache = (2 * L * shape.global_batch * S * max(arch.n_kv_heads, 1)
+                 * arch.resolved_head_dim * BF16) / n_chips
+        state = 0.0
+        if any(t in ("rglru", "rwkv") for t in arch.layer_types()):
+            cache = 0.0
+            hd_r = d // max(arch.rnn_heads, 1)
+            state = (arch.n_layers * shape.global_batch
+                     * (arch.rnn_heads * hd_r * hd_r + 3 * d) * F32) / dp
+            w = min(arch.window, S)
+            n_local = sum(t == "local_attn" for t in arch.layer_types())
+            cache = (2 * n_local * shape.global_batch * w
+                     * max(arch.n_kv_heads, 1) * arch.resolved_head_dim
+                     * BF16) / n_chips
+        return {"total": p_shard + cache + state, "weights": p_shard,
+                "cache": cache + state, "activations": 0.0, "optimizer": 0.0}
+
+    act_unit = L * B_loc * S * d * BF16
+    if shape.kind == "prefill":
+        act = 4 * act_unit
+        return {"total": p_shard + act, "weights": p_shard,
+                "activations": act, "cache": 0.0, "optimizer": 0.0}
+
+    # train: 3 weight passes (fwd, remat-fwd, bwd) + grads + ZeRO-1 moments
+    w_traffic = p_shard * (3 if remat == "block" else 2) + \
+        2 * params_total * param_bytes / tp      # grad write+read (model-sharded)
+    opt = 4 * params_total * F32 / n_chips       # m,v read+write on ZeRO shards
+    if param_bytes != F32:
+        opt += 2 * params_total * F32 / n_chips  # fp32 master read+write
+    act = (6 if remat == "block" else 4) * act_unit
+    return {"total": w_traffic + opt + act, "weights": w_traffic,
+            "activations": act, "optimizer": opt, "cache": 0.0}
+
+
+def analytic_collective_bytes_per_chip(arch: ArchConfig, shape: ShapeConfig,
+                                       params_total: int,
+                                       mesh_shape: Dict[str, int],
+                                       remat: str = "block",
+                                       param_bytes: int = F32
+                                       ) -> Dict[str, float]:
+    """Algorithmic collective volume per chip (operand bytes per op — the
+    same convention as the HLO parse; a ring implementation moves ~2x).
+
+    Cross-check vs the trip-count HLO parse lands within ~2-3x (XLA emits
+    extra fp32 all-reduces for norm stats / loss terms and replays
+    collectives under remat) — see EXPERIMENTS.md §Roofline validation.
+    """
+    tp = mesh_shape.get("model", 1)
+    dp = int(np.prod([v for k, v in mesh_shape.items() if k != "model"]))
+    d = arch.d_model
+    L = arch.n_layers + arch.encoder_layers
+    B_loc = max(shape.global_batch // dp, 1)
+    S = 1 if shape.kind == "decode" else shape.seq_len
+
+    # TP: 2 all-reduces per block (attn out + ffn out) of (B_loc, S, D) bf16
+    tp_ar = L * 2 * B_loc * S * d * BF16 if tp > 1 else 0.0
+    if shape.kind != "train":
+        return {"total": tp_ar, "tp": tp_ar, "dp_grads": 0.0}
+    passes = 3 if remat == "block" else 2    # fwd (+ remat fwd) + bwd
+    tp_ar *= passes
+    # DP: gradient all-reduce of the model-sharded grad (in param dtype)
+    dp_ar = params_total * param_bytes / tp if dp > 1 else 0.0
+    return {"total": tp_ar + dp_ar, "tp": tp_ar, "dp_grads": dp_ar}

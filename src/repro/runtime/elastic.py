@@ -1,0 +1,29 @@
+"""Elastic scaling: move a training state between meshes.
+
+``reshard_state`` device_puts every leaf with shardings built for the target
+mesh — combined with checkpoint.restore(shardings=...) this supports
+restart-on-different-topology: lose a pod, restart data-parallel on the
+remaining 256 chips; get it back, rescale to 512. Model-axis geometry must
+divide the same way (we keep model=16 across configurations; the data axes
+absorb the size change — the standard elastic-DP design point).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """shardings: pytree of NamedSharding matching state's structure."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+
+def validate_elastic_transition(old_mesh: Mesh, new_mesh: Mesh,
+                                model_axis: str = "model") -> bool:
+    """Data axes may change freely; the model axis must keep its extent
+    (param shards stay aligned; only DP replication changes)."""
+    return old_mesh.shape[model_axis] == new_mesh.shape[model_axis]

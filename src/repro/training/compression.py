@@ -1,0 +1,55 @@
+"""Gradient compression: int8 quantization with error feedback (EF-SGD style).
+
+Per-leaf symmetric int8 quantization (scale = max|g| / 127) with an fp32
+residual carried between steps: the quantization error of step t is added
+back to the gradient at step t+1, which is what keeps compressed training at
+parity with uncompressed (Karimireddy et al., 2019).
+
+Deployment note (DESIGN.md §6): on a pod this quantization runs per data
+shard *before* the gradient all-reduce (4x collective-byte reduction on the
+data axis — visible in the §Perf hillclimb as a collective-term lever); the
+numerics here apply the same quantize/dequantize+EF operator to the already
+reduced gradient, which preserves the algorithm's convergence behaviour on a
+single host.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_ef(grads, ef_state):
+    """Returns (decompressed grads as seen post-allreduce, new EF residuals)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(one, grads, ef_state)
+    new_g = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e
+
+
+def compression_ratio() -> float:
+    """int8 payload vs fp32 gradient bytes (scales are negligible)."""
+    return 4.0

@@ -1,0 +1,88 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, ZeRO-1-ready state.
+
+The optimizer math is purely elementwise, so the first/second-moment trees
+can be sharded arbitrarily — launch.shardings places them over the data axes
+(ZeRO-1) without any change here. Params are kept in fp32 (master); the
+forward casts to bf16.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+
+
+def adamw_init(params, master: bool = False) -> Dict[str, Any]:
+    """master=True keeps an fp32 copy of bf16 params (sharded ZeRO-1 like
+    mu/nu) — the standard mixed-precision setup when params are stored bf16."""
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    st = {"step": jnp.zeros((), jnp.int32), "mu": zeros(params),
+          "nu": zeros(params)}
+    if master:
+        st["master"] = jax.tree.map(
+            lambda x: x.astype(jnp.float32), params)
+    return st
+
+
+def lr_schedule(step, tc: TrainConfig):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return tc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(grads, opt_state, params, tc: TrainConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+    step = opt_state["step"] + 1
+    lr = lr_schedule(step, tc)
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    has_master = "master" in opt_state
+
+    def upd(p, g, m, v, pm):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        base = pm if pm is not None else p.astype(jnp.float32)
+        new_master = base - lr * (mh / (jnp.sqrt(vh) + tc.eps)
+                                  + tc.weight_decay * base)
+        return new_master.astype(p.dtype), m, v, new_master
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["mu"])
+    flat_v = tdef.flatten_up_to(opt_state["nu"])
+    flat_pm = (tdef.flatten_up_to(opt_state["master"]) if has_master
+               else [None] * len(flat_p))
+    out = [upd(p, g, m, v, pm) for p, g, m, v, pm
+           in zip(flat_p, flat_g, flat_m, flat_v, flat_pm)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_state = {"step": step,
+                 "mu": jax.tree.unflatten(tdef, [o[1] for o in out]),
+                 "nu": jax.tree.unflatten(tdef, [o[2] for o in out])}
+    if has_master:
+        new_state["master"] = jax.tree.unflatten(tdef, [o[3] for o in out])
+    return new_params, new_state, {"lr": lr, "grad_norm": gn}

@@ -1,0 +1,84 @@
+"""Train-step factory: loss -> grad -> (compress) -> clip -> AdamW.
+
+``make_train_step`` returns a pure function suitable for jit/pjit; gradient
+accumulation scans over microbatches (sequential, activation-memory bound ->
+the standard large-batch trick). The returned TrainState is a plain pytree —
+checkpoint/restore and resharding operate on it directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.dist import DistContext
+from repro.models.model import Model
+from repro.training import compression as C
+from repro.training.optimizer import adamw_init, adamw_update
+
+
+def train_state_init(model: Model, key, tc: TrainConfig) -> Dict[str, Any]:
+    params = model.init(key, dtype=jnp.dtype(tc.param_dtype))
+    # bf16 params get an fp32 master copy in the (ZeRO-sharded) optimizer
+    master = jnp.dtype(tc.param_dtype) == jnp.bfloat16
+    state = {"params": params, "opt": adamw_init(params, master=master)}
+    if tc and getattr(tc, "_ef", False):
+        state["ef"] = C.ef_init(params)
+    return state
+
+
+def make_train_step(model: Model, tc: TrainConfig, *,
+                    dist: Optional[DistContext] = None,
+                    accum: int = 1,
+                    grad_compression: str = "none",
+                    attn_schedule: str = "scan",
+                    remat: str = "block") -> Callable:
+    """Returns step(state, batch) -> (state, metrics)."""
+    compute_dtype = jnp.dtype(tc.compute_dtype)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, dist=dist,
+                          compute_dtype=compute_dtype, remat=remat,
+                          attn_schedule=attn_schedule)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(g_acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                return jax.tree.map(jnp.add, g_acc, g), (l, m)
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            gsum, (losses, metrics_all) = jax.lax.scan(
+                micro, zeros, micro_batches)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(0), metrics_all)
+
+        new_state = dict(state)
+        if grad_compression == "int8_ef":
+            grads, new_ef = C.compress_with_ef(grads, state["ef"])
+            new_state["ef"] = new_ef
+        elif grad_compression != "none":
+            raise ValueError(grad_compression)
+
+        new_params, new_opt, opt_stats = adamw_update(
+            grads, state["opt"], params, tc)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = dict(metrics)
+        metrics.update(opt_stats)
+        return new_state, metrics
+
+    return step

@@ -1,0 +1,86 @@
+"""Subprocess worker: distributed-filter semantics on 8 emulated devices.
+
+Run by tests/test_distributed.py with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+Prints OK on success; any assertion failure exits nonzero.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import variants as V
+from repro.core import hashing as H
+from repro.core.distributed import ReplicatedFilter, ShardedFilter, or_allreduce
+from jax.experimental.shard_map import shard_map
+
+
+def main():
+    devs = jax.devices()
+    assert len(devs) == 8, devs
+    mesh = Mesh(np.array(devs).reshape(8), ("data",))
+    spec = V.FilterSpec("sbf", 1 << 18, 8, block_bits=256)
+
+    n_local = 256
+    keys_np = H.random_u64x2(8 * n_local, seed=3)
+    keys = jax.device_put(jnp.asarray(keys_np).reshape(8, n_local, 2),
+                          NamedSharding(mesh, P("data")))
+    ref = V.add_scatter(spec, V.init(spec), jnp.asarray(keys_np))
+
+    # --- butterfly OR == gather OR == local reduce ---------------------------
+    x = jax.device_put(
+        jnp.arange(8 * 16, dtype=jnp.uint32).reshape(8, 16) * np.uint32(2654435761),
+        NamedSharding(mesh, P("data")))
+    for method in ("butterfly", "gather"):
+        out = shard_map(lambda v: or_allreduce(v, "data", method=method),
+                        mesh=mesh, in_specs=P("data"), out_specs=P("data"))(x)
+        expect = np.bitwise_or.reduce(np.asarray(x), axis=0)
+        for d in range(8):
+            np.testing.assert_array_equal(np.asarray(out)[d], expect)
+    print("or_allreduce ok")
+
+    # --- ReplicatedFilter: local adds + sync == global reference -------------
+    rf = ReplicatedFilter.create(spec, mesh)
+    rf.add_local(keys)
+    # pre-sync: each replica only knows its shard -> some misses across shards
+    pre = np.asarray(rf.contains_local(keys))
+    assert pre.all()  # own shard always found
+    cross = np.asarray(rf.contains_local(
+        jnp.roll(keys, 1, axis=0)))  # other device's keys
+    assert not cross.all(), "pre-sync replicas should not know remote keys"
+    rf.sync()
+    for d in range(8):
+        np.testing.assert_array_equal(np.asarray(rf.words)[d], np.asarray(ref))
+    post = np.asarray(rf.contains_local(jnp.roll(keys, 3, axis=0)))
+    assert post.all()
+    print("replicated ok")
+
+    # --- ShardedFilter: all_to_all routing == global reference ---------------
+    sf = ShardedFilter.create(spec, mesh, capacity=n_local)
+    sf.add(keys)
+    np.testing.assert_array_equal(np.asarray(sf.words), np.asarray(ref))
+    res = np.asarray(sf.contains(keys))
+    assert res.all()
+    # negatives: unseen keys should mostly be absent (FPR-bounded)
+    probe = jax.device_put(
+        jnp.asarray(H.random_u64x2(8 * n_local, seed=99)).reshape(8, n_local, 2),
+        NamedSharding(mesh, P("data")))
+    neg = np.asarray(sf.contains(probe))
+    assert neg.mean() < 0.05, neg.mean()
+    print("sharded ok")
+
+    # --- capacity overflow degrades conservatively ---------------------------
+    sf2 = ShardedFilter.create(spec, mesh, capacity=8)   # force overflow
+    sf2.add(keys)
+    res2 = np.asarray(sf2.contains(keys))
+    assert res2.all(), "overflow must never produce a false negative"
+    print("overflow ok")
+
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Dry-run deliverable test: lower+compile real cells on the production
+meshes (512 emulated devices) in a subprocess.
+
+Runs one fast cell per mesh (rwkv6 decode — smallest compile) end-to-end
+through repro.launch.dryrun including roofline extraction. The full 40-cell
+sweep is executed by ``python -m repro.launch.dryrun --all --mesh both``
+(results in experiments/dryrun/, summarized in EXPERIMENTS.md).
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)   # dryrun.py sets its own
+    return subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
+                           *args], env=env, capture_output=True, text=True,
+                          timeout=timeout, cwd=ROOT)
+
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_dryrun_cell_single_and_multi(tmp_path):
+    proc = _run(["--arch", "rwkv6-3b", "--shape", "decode_32k",
+                 "--mesh", "both", "--out", str(tmp_path)])
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for mesh in ("single", "multi"):
+        f = tmp_path / f"rwkv6-3b__decode_32k__{mesh}.json"
+        rep = json.loads(f.read_text())
+        assert rep["status"] == "ok", rep
+        n_chips = 256 if mesh == "single" else 512
+        import numpy as np
+        assert int(np.prod(list(rep["mesh_shape"].values()))) == n_chips
+        ro = rep["roofline"]
+        assert ro["flops_per_chip"] > 0
+        assert ro["bytes_per_chip"] > 0
+        assert rep["collectives"]["total_bytes"] > 0
+        assert ro["bottleneck"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_dryrun_skip_rule(tmp_path):
+    proc = _run(["--arch", "qwen2-72b", "--shape", "long_500k",
+                 "--mesh", "single", "--out", str(tmp_path)])
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    rep = json.loads(
+        (tmp_path / "qwen2-72b__long_500k__single.json").read_text())
+    assert rep["status"] == "skipped"
+    assert "full attention" in rep["reason"]

@@ -1,0 +1,71 @@
+"""Unit tests for the roofline analysis (HLO parsing, term math)."""
+import numpy as np
+import pytest
+
+from repro.roofline import analysis as RA
+
+HLO = """
+HloModule jit_step
+ENTRY main {
+  %p0 = bf16[2048,5120]{1,0} parameter(0)
+  %ar = bf16[2048,5120]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[64,1024]{1,0} all-gather(%x), dimensions={0}
+  %rs = bf16[128]{0} reduce-scatter(%y), dimensions={0}
+  %cp = u32[16,16]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = bf16[4,256]{1,0} all-to-all(%w), dimensions={0}
+  %ars = bf16[2048]{0} all-reduce-start(%q)
+  %ard = bf16[2048]{0} all-reduce-done(%ars)
+  %fused = f32[10]{0} fusion(%p0), kind=kLoop
+}
+"""
+
+
+def test_shape_bytes():
+    assert RA._shape_bytes("bf16[2048,5120]{1,0}") == 2048 * 5120 * 2
+    assert RA._shape_bytes("f32[64,1024]") == 64 * 1024 * 4
+    assert RA._shape_bytes("(bf16[2,2], f32[3])") == 2 * 2 * 2 + 3 * 4
+    assert RA._shape_bytes("u32[]") == 4   # scalar
+
+
+def test_collective_bytes_parses_all_kinds():
+    out = RA.collective_bytes(HLO)
+    assert out["bytes_by_kind"]["all-reduce"] == 2048 * 5120 * 2 + 2048 * 2
+    assert out["bytes_by_kind"]["all-gather"] == 64 * 1024 * 4
+    assert out["bytes_by_kind"]["reduce-scatter"] == 128 * 2
+    assert out["bytes_by_kind"]["collective-permute"] == 16 * 16 * 4
+    assert out["bytes_by_kind"]["all-to-all"] == 4 * 256 * 2
+    assert out["counts"]["all-reduce"] == 2      # start counted once, done not
+    assert out["total_bytes"] == sum(out["bytes_by_kind"].values())
+
+
+def test_roofline_terms_bottleneck():
+    cost = {"flops": 197e12, "bytes": 8.19e11, "error": None}
+    coll = {"total_bytes": 5e9}
+    r = RA.roofline_terms(cost, coll, model_flops_global=197e12 * 256,
+                          n_chips=256)
+    assert abs(r.compute_s - 1.0) < 1e-6
+    assert abs(r.memory_s - 1.0) < 1e-3
+    assert abs(r.collective_s - 0.1) < 1e-3
+    assert r.bottleneck in ("compute", "memory")
+    assert abs(r.useful_ratio - 1.0) < 1e-6
+
+
+def test_active_param_count_moe():
+    import jax
+    tree = {"groups": {"0": {"moe": {
+        "w_gate": jax.ShapeDtypeStruct((64, 128, 256), np.float32),
+        "router": jax.ShapeDtypeStruct((128, 64), np.float32)}}}}
+    out = RA.active_param_count(tree, top_k=6, num_experts=64)
+    w = 64 * 128 * 256
+    assert out["total"] == w + 128 * 64
+    assert out["active"] == int(w * 6 / 64) + 128 * 64
+
+
+def test_model_flops_kinds():
+    from repro.configs import SHAPES, get_config
+    arch = get_config("mistral-nemo-12b")
+    n = 12_000_000_000
+    tr = RA.model_flops(arch, SHAPES["train_4k"], n)
+    assert tr == 6.0 * n * 256 * 4096
+    de = RA.model_flops(arch, SHAPES["decode_32k"], n)
+    assert de == 2.0 * n * 128
