@@ -1,0 +1,46 @@
+"""Cross-engine throughput through the uniform ``repro.api`` surface.
+
+One spec, every registered single-host engine (plus the distributed engines
+on the local device set), timed through the *same* ``Filter.add`` /
+``Filter.contains`` calls users make — measuring what the registry's
+``"auto"`` ranking is supposed to predict. Interpret-mode Pallas numbers
+off-TPU are validation-path costs, not kernel speed.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import Csv, keys_u64x2, time_fn
+from repro import api
+
+
+def run(csv: Csv, m_bits: int = 1 << 18, n_keys: int = 1 << 12):
+    keys = keys_u64x2(n_keys, seed=7)
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs).reshape(len(devs)), ("data",))
+
+    for name in api.backends():
+        eng = api.get_backend(name)
+        kw = dict(mesh=mesh) if name in ("replicated", "sharded") else {}
+        spec_probe = api.FilterSpec("sbf", m_bits, 8, block_bits=256)
+        if not eng.supports(spec_probe,
+                            api.BackendOptions(**kw).ctx(n_keys)):
+            csv.add(f"api/{name}", float("nan"), "unsupported-here")
+            continue
+        f = api.make_filter("sbf", m_bits=m_bits, k=8, block_bits=256,
+                            backend=name, **kw)
+        t_add = time_fn(lambda ff, kk: ff.add(kk).words, f, keys)
+        filled = f.add(keys)
+        t_q = time_fn(lambda ff, kk: ff.contains(kk), filled, keys)
+        csv.add(f"api/{name}/add", t_add * 1e6,
+                f"Mkeys/s={n_keys/t_add/1e6:.1f}")
+        csv.add(f"api/{name}/contains", t_q * 1e6,
+                f"Mkeys/s={n_keys/t_q/1e6:.1f}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

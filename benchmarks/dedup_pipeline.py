@@ -22,7 +22,8 @@ def run(csv: Csv):
     dt = time.perf_counter() - t0
     csv.add("dedup/stream", dt * 1e6,
             f"docs/s={len(docs)/dt:.0f} kept={kept} "
-            f"dropped={dd.stats.dropped} fill={dd.bf.fill_fraction():.3f}")
+            f"dropped={dd.stats.dropped} fill={dd.filt.fill_fraction():.3f} "
+            f"engine={dd.filt.backend}")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
     fig5_8_archs  -> Figures 5-8 (cross-accelerator projection, derived)
     fig9_breakdown-> Figure 9 (incremental optimization breakdown)
     dedup         -> framework integration (paper technique in the pipeline)
+    api_backends  -> engine registry sweep through the uniform Filter API
 """
 import argparse
 import sys
@@ -27,9 +28,9 @@ def main(argv=None) -> None:
     csv = Csv()
     csv.header()
 
-    from benchmarks import (dedup_pipeline, fig4_frontier, fig5_8_archs,
-                            fig9_breakdown, gups, layout_grid, table1_dram,
-                            table2_cache)
+    from benchmarks import (api_backends, dedup_pipeline, fig4_frontier,
+                            fig5_8_archs, fig9_breakdown, gups, layout_grid,
+                            table1_dram, table2_cache)
 
     benches = {
         "gups": lambda: gups.run(csv),
@@ -40,6 +41,7 @@ def main(argv=None) -> None:
         "fig9_breakdown": lambda: fig9_breakdown.run(csv),
         "layout_grid": lambda: layout_grid.run(csv),
         "dedup": lambda: dedup_pipeline.run(csv),
+        "api_backends": lambda: api_backends.run(csv),
     }
     only = set(args.only.split(",")) if args.only else None
 
@@ -50,7 +52,8 @@ def main(argv=None) -> None:
         table1_dram.run(csv, sol_gups=sol)
     if only is None or "table2_cache" in only:
         table2_cache.run(csv)
-    for name in ("fig4_frontier", "fig5_8_archs", "fig9_breakdown", "dedup"):
+    for name in ("fig4_frontier", "fig5_8_archs", "fig9_breakdown", "dedup",
+                 "api_backends"):
         if only is None or name in only:
             benches[name]()
     if (only is None and not args.skip_layout) or (only and "layout_grid" in only):

@@ -2,18 +2,19 @@
 
 Runs the data pipeline with the paper's technique at both deployment shapes:
   1. single-host DedupFilter (bulk ops);
-  2. 8-device ReplicatedFilter with butterfly OR sync (spawn with
+  2. 8-device replicated engine with butterfly OR merges (spawn with
      XLA_FLAGS=--xla_force_host_platform_device_count=8 to see >1 device).
+
+Both shapes are the same ``repro.api`` surface — the deployment is just a
+``backend=`` choice.
 
     PYTHONPATH=src python examples/dedup_pipeline.py
 """
 import numpy as np
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import variants as V
-from repro.core.distributed import ReplicatedFilter
+from repro import api
 from repro.data import dedup as D
 from repro.data import pipeline as DP
 
@@ -24,7 +25,8 @@ def single_host():
     kept = list(dd.filter_stream(DP.synthetic_corpus(cfg)))
     print(f"[single-host] {dd.stats.seen} docs -> kept {len(kept)} "
           f"(dropped {dd.stats.dropped}, drop_rate {dd.stats.drop_rate:.1%}) "
-          f"filter fill {dd.bf.fill_fraction():.3f}")
+          f"filter fill {dd.filt.fill_fraction():.3f} "
+          f"engine {dd.filt.backend!r}")
     rows = list(DP.batches(iter(kept), batch_size=8, seq_len=256))
     print(f"[single-host] packed into {len(rows)} batches of (8, 256)")
 
@@ -32,23 +34,25 @@ def single_host():
 def multi_host_replicated():
     n_dev = len(jax.devices())
     mesh = Mesh(np.array(jax.devices()).reshape(n_dev), ("data",))
-    spec = V.FilterSpec("sbf", 1 << 20, 8, block_bits=256)
-    rf = ReplicatedFilter.create(spec, mesh)
+    f = api.make_filter("sbf", m_bits=1 << 20, k=8, block_bits=256,
+                        backend="replicated", mesh=mesh)
 
-    # each "host" deduplicates its own shard, then replicas are OR-merged
+    # each "host" deduplicates its own shard; the uniform Filter protocol
+    # takes one flat key batch and splits it across devices itself
     per_dev = []
     for shard in range(n_dev):
         cfg = DP.CorpusConfig(n_docs=2000, dup_fraction=0.2, seed=1)
         docs = list(DP.synthetic_corpus(cfg, shard=shard % 2, num_shards=2))
         sigs = np.stack([D.doc_signature(d) for d in docs[:512]])
         per_dev.append(sigs)
-    keys = jax.device_put(jnp.asarray(np.stack(per_dev)),
-                          NamedSharding(mesh, P("data")))
-    rf.add_local(keys)
-    rf.sync()          # butterfly OR all-reduce
-    hits = np.asarray(rf.contains_local(jnp.roll(keys, 1, axis=0)))
-    print(f"[replicated x{n_dev}] after sync, cross-shard hit rate "
-          f"{hits.mean():.1%} (shards overlap by construction)")
+    keys = np.concatenate(per_dev)                      # (n_dev*512, 2) flat
+    f = f.add(keys)
+    # contains tests against the butterfly-OR of all replicas, so every
+    # device's adds are visible — no explicit sync step in the new API
+    hits = np.asarray(f.contains(np.roll(keys, 512, axis=0)))
+    print(f"[replicated x{n_dev}] cross-shard hit rate {hits.mean():.1%} "
+          f"(shards overlap by construction); "
+          f"approx {f.approx_count():,.0f} unique signatures")
 
 
 if __name__ == "__main__":

@@ -53,7 +53,9 @@ def main():
     packed = list(DP.batches(dd.filter_stream(DP.synthetic_corpus(corpus)),
                              batch_size=args.batch, seq_len=args.seq))
     print(f"data: kept {dd.stats.seen - dd.stats.dropped}/{dd.stats.seen} "
-          f"docs after dedup -> {len(packed)} batches")
+          f"docs after dedup -> {len(packed)} batches "
+          f"(filter engine {dd.filt.backend!r}, "
+          f"fill {dd.filt.fill_fraction():.3f})")
 
     def batch_fn(step):
         return {"tokens": jnp.asarray(packed[step % len(packed)])}

@@ -2,5 +2,15 @@
 
 Reproduction + beyond-paper optimization of
 'Optimizing Bloom Filters for Modern GPU Architectures' (CS.DC 2025).
+
+Public filter surface (see DESIGN.md):
+
+    from repro import api
+    f = api.filter_for_n_items(1_000_000, bits_per_key=16)
+    f = f.add(keys); hits = f.contains(keys)
 """
-__version__ = "0.1.0"
+__version__ = "0.2.0"
+
+from repro import api                                          # noqa: E402
+from repro.api import (Filter, FilterSpec, make_filter,        # noqa: F401
+                       filter_for_n_items, union, backends)

@@ -1,0 +1,111 @@
+"""``repro.api`` — the public Bloom-filter surface.
+
+One immutable, pytree-registered :class:`Filter` over every execution
+engine, and a :mod:`registry <repro.api.registry>` of named backends
+replacing scattered dispatch branches:
+
+    import repro.api as api
+
+    f = api.filter_for_n_items(1_000_000, bits_per_key=16)   # backend="auto"
+    f = f.add(keys)                       # immutable: returns a new Filter
+    hits = f.contains(keys)
+    g = api.union(f, other)               # OR-union, cross-engine OK
+
+    api.backends()                        # ('jnp', 'pallas-hbm', ...)
+    f2 = api.make_filter("sbf", m_bits=1 << 24, k=8, backend="pallas-vmem")
+
+Filters pass through ``jax.jit`` / ``jax.lax.scan`` / checkpointing like
+any other pytree; see DESIGN.md §5 for the protocol contract.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import variants as _V
+from repro.core.variants import FilterSpec
+from repro.api import registry
+from repro.api.filter import BackendOptions, Filter, as_keys
+from repro.api import backends as _backends
+from repro.api import dist_backends as _dist_backends
+
+_backends.register_all()
+_dist_backends.register_all()
+
+
+def _legacy_pallas(spec: FilterSpec, ctx: registry.SelectionContext) -> str:
+    """Alias for the old ``backend="pallas"`` spelling: pick the regime the
+    old facade would have (VMEM while the filter fits, else HBM)."""
+    if registry.get("pallas-vmem").supports(spec, ctx):
+        return "pallas-vmem"
+    return "pallas-hbm"
+
+
+registry.register_alias("pallas", _legacy_pallas)
+
+
+def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
+                block_bits: int = 256, z: int = 1, backend: str = "auto",
+                layout=None, tile: Optional[int] = None, mesh=None,
+                axis: str = "data", capacity: Optional[int] = None) -> Filter:
+    """Build an empty :class:`Filter` for an explicit geometry.
+
+    ``backend="auto"`` runs the registry's ranked query (pass ``mesh=`` to
+    bring the distributed engines into the candidate set)."""
+    spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
+                      block_bits=block_bits, z=z)
+    options = BackendOptions(layout=layout, tile=tile, mesh=mesh, axis=axis,
+                             capacity=capacity)
+    eng = registry.select(spec, backend, options.ctx())
+    return Filter(spec=spec, words=eng.init(spec, options), backend=eng.name,
+                  options=options)
+
+
+def filter_for_n_items(n: int, bits_per_key: float = 16.0,
+                       variant: str = "sbf", block_bits: int = 256,
+                       k: Optional[int] = None, **kw) -> Filter:
+    """Size a filter for ~n items at c = bits_per_key (m rounded to pow2),
+    choosing k near the space-optimal k* = c ln 2 (Eq. 2), snapped to the
+    variant's structural constraints (k ≡ 0 mod s for SBF, mod z for CSBF)."""
+    m = 1 << max(int(np.ceil(np.log2(max(n, 1) * bits_per_key))), 10)
+    if k is None:
+        k = max(int(round(_V.optimal_k(m / max(n, 1)))), 1)
+        if variant == "csbf":
+            z = kw.get("z", 1)
+            k = max(z, (k // z) * z)
+        if variant == "sbf":
+            s = block_bits // _V.WORD_BITS
+            k = max(s, (k // s) * s) if k >= s else k
+        k = min(k, 32)
+    return make_filter(variant=variant, m_bits=m, k=k, block_bits=block_bits,
+                       **kw)
+
+
+def union(*filters: Filter) -> Filter:
+    """OR-union of same-spec filters (cross-engine allowed); the result
+    lives on the first filter's engine."""
+    if not filters:
+        raise ValueError("union() needs at least one filter")
+    out = filters[0]
+    for f in filters[1:]:
+        out = out.merge(f)
+    return out
+
+
+def backends() -> tuple:
+    """Registered engine names (see ``describe_backends`` for details)."""
+    return registry.names()
+
+
+def describe_backends() -> tuple:
+    return registry.describe()
+
+
+def get_backend(name: str) -> registry.Backend:
+    return registry.get(name)
+
+
+__all__ = ["Filter", "FilterSpec", "BackendOptions", "as_keys", "registry",
+           "make_filter", "filter_for_n_items", "union", "backends",
+           "describe_backends", "get_backend"]

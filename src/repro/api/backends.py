@@ -1,0 +1,112 @@
+"""Single-host engines: the jnp reference and the two Pallas regimes.
+
+Cost model (relative, lower = better): the jnp engine is the baseline at
+1.0 on every platform. On TPU the Pallas kernels win (the whole point of
+the paper); off-TPU they run in interpret mode — bit-exact but orders of
+magnitude slower, so ``"auto"`` keeps them for validation only.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import variants as V
+from repro.core.variants import FilterSpec
+from repro.api.registry import Backend, SelectionContext, register
+
+# Interpret-mode Pallas (any non-TPU platform) is for validation, not speed.
+_INTERPRET_PENALTY = 50.0
+
+
+def _single_host(ctx: SelectionContext) -> bool:
+    return ctx.mesh is None
+
+
+class JnpBackend(Backend):
+    """Vectorized pure-jnp reference: one row gather per lookup
+    (``contains_rows``) and the sorted segmented-OR bulk insert
+    (``add_rows``). Fast path off-TPU; the semantic oracle everywhere."""
+
+    name = "jnp"
+
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        return _single_host(ctx)
+
+    def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
+        return 1.0
+
+    def init(self, spec: FilterSpec, options) -> jnp.ndarray:
+        return V.init(spec)
+
+    def add(self, spec, words, keys, options):
+        return V.add_rows(spec, words, keys)
+
+    def contains(self, spec, words, keys, options):
+        return V.contains_rows(spec, words, keys)
+
+
+class _PallasBackend(Backend):
+    regime = "auto"
+
+    def _fits_vmem(self, spec: FilterSpec) -> bool:
+        from repro.kernels.sbf import VMEM_FILTER_BYTES
+        return spec.n_words * 4 <= VMEM_FILTER_BYTES
+
+    def init(self, spec: FilterSpec, options) -> jnp.ndarray:
+        return V.init(spec)
+
+    def _kw(self, options):
+        kw = {"regime": self.regime}
+        if options.layout is not None:
+            kw["layout"] = options.layout
+        if options.tile is not None:
+            kw["tile"] = options.tile
+        return kw
+
+    def add(self, spec, words, keys, options):
+        from repro.kernels import ops
+        return ops.bloom_add(spec, words, keys, **self._kw(options))
+
+    def contains(self, spec, words, keys, options):
+        from repro.kernels import ops
+        return ops.bloom_contains(spec, words, keys, **self._kw(options))
+
+
+class PallasVmemBackend(_PallasBackend):
+    """Pallas TPU kernels with the filter pinned in VMEM — the paper's
+    cache-resident regime ((Θ, Φ) layout selectable via options.layout)."""
+
+    name = "pallas-vmem"
+    regime = "vmem"
+
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        from repro.kernels import ops
+        return (_single_host(ctx) and ops.kernel_supported(spec)
+                and self._fits_vmem(spec))
+
+    def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
+        return 0.4 if ctx.platform == "tpu" else _INTERPRET_PENALTY
+
+
+class PallasHbmBackend(_PallasBackend):
+    """Pallas TPU kernels with the filter left in HBM, blocks streamed
+    through a double-buffered DMA scratch — the DRAM-resident regime."""
+
+    name = "pallas-hbm"
+    regime = "hbm"
+
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        from repro.kernels import ops
+        # the classical variant has no block locality to stream by
+        return (_single_host(ctx) and ops.kernel_supported(spec)
+                and spec.variant != "cbf")
+
+    def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
+        base = 0.7 if ctx.platform == "tpu" else _INTERPRET_PENALTY + 10.0
+        # dispreferred while the filter still fits in VMEM
+        return base if not self._fits_vmem(spec) else base + 0.5
+
+
+def register_all():
+    register(JnpBackend())
+    register(PallasVmemBackend())
+    register(PallasHbmBackend())

@@ -1,0 +1,134 @@
+"""Distributed engines: the replicated and sharded deployments re-homed
+behind the uniform ``Filter`` protocol.
+
+Both accept **flat** ``(n, 2)`` key batches like every other engine: keys
+are padded (repeating the last key — OR-idempotent) to a device multiple
+and split ``(n_dev, n_local, 2)`` before entering the ``shard_map``
+transforms in ``repro.core.distributed``; lookup results ride home and the
+padding is dropped. The old ``add_local``/``add`` naming split disappears —
+``add`` means the same thing on every engine.
+
+Semantics under the uniform protocol:
+
+* ``replicated``: ``add`` ORs each device's slice into its own replica (no
+  collectives — replicas stay eventually-consistent); ``contains`` tests
+  against the butterfly-OR of all replicas, so a key added through *any*
+  device is always found (no false negatives). ``dense_words``/checkpoint
+  state is the global OR.
+* ``sharded``: ``add``/``contains`` route keys to their segment owner via
+  fixed-capacity ``all_to_all``. Default capacity (``options.capacity`` is
+  None) is the per-device batch size — overflow-free by construction; an
+  explicit smaller capacity bounds memory and degrades conservatively
+  (dropped adds, "present" lookups — never a false negative).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import distributed as D
+from repro.core.variants import FilterSpec
+from repro.api.registry import Backend, SelectionContext, register
+
+
+def _n_dev(options) -> int:
+    return options.mesh.shape[options.axis]
+
+
+def _pad_split(keys: jnp.ndarray, n_dev: int):
+    """(n, 2) -> ((n_dev, n_local, 2), n) with OR-idempotent padding."""
+    n = keys.shape[0]
+    n_local = -(-n // n_dev)
+    pad = n_dev * n_local - n
+    if pad:
+        keys = jnp.concatenate([keys, jnp.broadcast_to(keys[-1:], (pad, 2))])
+    return keys.reshape(n_dev, n_local, 2), n
+
+
+class _DistBackend(Backend):
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        return ctx.mesh is not None
+
+    def init(self, spec: FilterSpec, options) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+class ReplicatedBackend(_DistBackend):
+    """Full replica per device; local adds, butterfly-OR merged lookups.
+    Best when the filter fits per-device memory and add volume dominates."""
+
+    name = "replicated"
+
+    def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
+        # adds are collective-free; lookups pay one butterfly. Prefer over
+        # sharded unless the sharded geometry constraint holds.
+        return 1.5
+
+    def init(self, spec, options):
+        return D.replicated_init(spec, options.mesh, options.axis)
+
+    def add(self, spec, words, keys, options):
+        keys_sh, _ = _pad_split(keys, _n_dev(options))
+        return D.replicated_add_local(spec, options.mesh, options.axis,
+                                      words, keys_sh)
+
+    def contains(self, spec, words, keys, options):
+        keys_sh, n = _pad_split(keys, _n_dev(options))
+        hits = D.replicated_contains_merged(spec, options.mesh, options.axis,
+                                            words, keys_sh)
+        return hits.reshape(-1)[:n]
+
+    def to_dense(self, spec, words, options):
+        dense = words[0]
+        for i in range(1, words.shape[0]):   # static fold over replicas
+            dense = dense | words[i]
+        return dense
+
+    def from_dense(self, spec, dense, options):
+        n_dev = _n_dev(options)
+        return jnp.broadcast_to(dense[None], (n_dev, dense.shape[0]))
+
+
+class ShardedBackend(_DistBackend):
+    """Block-range segment per device; all_to_all ownership routing keeps
+    every filter byte resident on exactly one device (m/n_dev memory)."""
+
+    name = "sharded"
+
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        if ctx.mesh is None or spec.variant == "cbf":
+            return False   # classical filter has no block locality to shard
+        n_dev = ctx.mesh.shape[ctx.axis]
+        return (n_dev & (n_dev - 1)) == 0 and spec.n_blocks % n_dev == 0
+
+    def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
+        return 1.2   # preferred over replicated when geometry allows
+
+    def init(self, spec, options):
+        return D.sharded_init(spec, options.mesh, options.axis)
+
+    def _capacity(self, options, n_local: int) -> int:
+        # None -> exact (a (src,dst) lane can never carry more than one
+        # device's whole batch, so per-device batch size is overflow-free)
+        return options.capacity if options.capacity is not None else n_local
+
+    def add(self, spec, words, keys, options):
+        keys_sh, _ = _pad_split(keys, _n_dev(options))
+        cap = self._capacity(options, keys_sh.shape[1])
+        return D.sharded_add(spec, options.mesh, options.axis, cap,
+                             words, keys_sh)
+
+    def contains(self, spec, words, keys, options):
+        keys_sh, n = _pad_split(keys, _n_dev(options))
+        cap = self._capacity(options, keys_sh.shape[1])
+        hits = D.sharded_contains(spec, options.mesh, options.axis, cap,
+                                  words, keys_sh)
+        return hits.reshape(-1)[:n]
+
+    # words are already the dense (n_words,) array (device-sharded)
+    def from_dense(self, spec, dense, options):
+        return dense
+
+
+def register_all():
+    register(ReplicatedBackend())
+    register(ShardedBackend())

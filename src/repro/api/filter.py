@@ -1,0 +1,202 @@
+"""The pytree-native ``Filter``: one immutable interface over every engine.
+
+A ``Filter`` is a registered JAX pytree: the word array is its only leaf;
+the spec, engine name and engine options are static aux data. That means a
+filter value can
+
+* cross ``jax.jit`` / ``jax.lax.scan`` / ``shard_map`` boundaries like any
+  array (no host round-trips — XLA retraces per (spec, backend, options)
+  structure, exactly the role the old per-spec ``lru_cache`` jit wrappers
+  played, now delegated to jit's own pytree-structure cache);
+* be checkpointed by ``repro.checkpoint`` like any other model state;
+* be OR-merged (``merge`` / ``repro.api.union``) with another filter of the
+  same spec, even one built by a *different* engine.
+
+All mutating-looking operations return a new ``Filter``; the word arrays
+are shared/functional underneath (JAX arrays), so this costs nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import variants as V
+from repro.core.variants import FilterSpec
+from repro.api import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendOptions:
+    """Static (hashable) engine parameters carried in the pytree aux data.
+
+    Unused fields are ignored by engines that don't need them: ``layout`` /
+    ``tile`` steer the Pallas kernels, ``mesh``/``axis``/``capacity`` the
+    distributed engines.
+    """
+
+    layout: Optional[object] = None    # kernels.sbf.Layout
+    tile: Optional[int] = None         # Pallas key-tile override
+    mesh: Optional[object] = None      # jax.sharding.Mesh
+    axis: str = "data"
+    capacity: Optional[int] = None     # sharded routing capacity per (src,dst)
+
+    def ctx(self, n_keys_hint: Optional[int] = None) -> registry.SelectionContext:
+        return registry.SelectionContext.current(
+            mesh=self.mesh, axis=self.axis, n_keys_hint=n_keys_hint)
+
+
+def as_keys(keys) -> jnp.ndarray:
+    """Accept u64x2 uint32 (n, 2), np.uint64 (n,), or uint32 (n,) keys."""
+    if isinstance(keys, np.ndarray) and keys.dtype == np.uint64:
+        from repro.core.hashing import u64x2_from_u64
+        keys = u64x2_from_u64(keys)
+    keys = jnp.asarray(keys)
+    if keys.dtype != jnp.uint32:
+        keys = keys.astype(jnp.uint32)
+    return keys
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class Filter:
+    """Immutable Bloom filter bound to a registry engine.
+
+    Construct via :func:`repro.api.make_filter` /
+    :func:`repro.api.filter_for_n_items`, or :meth:`from_state`.
+
+    ``eq=False``: identity semantics. A dataclass-generated ``__eq__``
+    would compare the traced word array (ambiguous-truth-value crash);
+    compare ``dense_words()`` explicitly to test filter equality.
+    """
+
+    spec: FilterSpec
+    words: jnp.ndarray
+    backend: str = "jnp"
+    options: BackendOptions = BackendOptions()
+
+    # -- pytree protocol -----------------------------------------------------
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("words"), self.words),),
+                (self.spec, self.backend, self.options))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        spec, backend, options = aux
+        return cls(spec=spec, words=leaves[0], backend=backend,
+                   options=options)
+
+    # -- engine plumbing -----------------------------------------------------
+    @property
+    def engine(self) -> registry.Backend:
+        return registry.get(self.backend)
+
+    def replace(self, **kw) -> "Filter":
+        return dataclasses.replace(self, **kw)
+
+    # -- bulk ops ------------------------------------------------------------
+    def add(self, keys) -> "Filter":
+        """OR a batch of keys in; returns the updated filter (self unchanged)."""
+        keys = as_keys(keys)
+        if keys.shape[0] == 0:
+            return self
+        return _jit_add(self, keys)
+
+    def contains(self, keys) -> jnp.ndarray:
+        """(n,) bool membership; no false negatives, FPR-bounded positives."""
+        keys = as_keys(keys)
+        if keys.shape[0] == 0:
+            return jnp.zeros((0,), jnp.bool_)
+        return _jit_contains(self, keys)
+
+    def merge(self, other: "Filter") -> "Filter":
+        """OR-union. Same spec required; engines may differ (the other
+        filter's state is densified and re-homed into self's engine)."""
+        if other.spec != self.spec:
+            raise ValueError(f"cannot merge {other.spec} into {self.spec}")
+        if other.backend == self.backend and other.words.shape == self.words.shape:
+            new = self.engine.merge(self.spec, self.words, other.words,
+                                    self.options)
+        else:
+            dense = other.engine.to_dense(other.spec, other.words,
+                                          other.options)
+            mine = self.engine.to_dense(self.spec, self.words, self.options)
+            new = self.engine.from_dense(self.spec, mine | dense, self.options)
+        return self.replace(words=new)
+
+    __or__ = merge
+
+    # -- introspection -------------------------------------------------------
+    def dense_words(self) -> jnp.ndarray:
+        """Canonical (n_words,) uint32 view (global OR of device state)."""
+        return self.engine.to_dense(self.spec, self.words, self.options)
+
+    def fill_fraction(self) -> float:
+        return float(V.fill_fraction(self.dense_words()))
+
+    def approx_count(self) -> float:
+        """Estimated number of distinct keys inserted (Swamidass–Baldi):
+        n̂ = -(m/k) · ln(1 − fill). Exact in expectation for the classical
+        filter; a close upper-structure estimate for blocked variants."""
+        fill = min(self.fill_fraction(), 1.0 - 1e-12)
+        return max(0.0,
+                   -(self.spec.m_bits / self.spec.k) * math.log(1.0 - fill))
+
+    def fpr_theory(self, n: int) -> float:
+        return V.fpr_theory(self.spec, n)
+
+    def measure_fpr(self, n_probe: int = 1 << 16, seed: int = 1234) -> float:
+        """Empirical FPR against probes from the *reserved* keyspace
+        (``hashing.probe_u64x2``) — structurally disjoint from every
+        ``random_u64x2``-style insert set, so each hit really is false."""
+        from repro.core.hashing import probe_u64x2
+        probes = probe_u64x2(n_probe, seed=seed)
+        return float(np.asarray(self.contains(probes)).mean())
+
+    @property
+    def nbytes(self) -> int:
+        return self.spec.m_bits // 8
+
+    # -- checkpointing -------------------------------------------------------
+    def to_state(self) -> dict:
+        """Engine-independent state pytree: dense words + spec fields.
+
+        ``checkpoint.save`` accepts either a ``Filter`` directly (it is a
+        pytree) or this canonical form; the latter restores into *any*
+        engine via :meth:`from_state`."""
+        return {"words": self.dense_words(),
+                "spec": dataclasses.asdict(self.spec),
+                "backend": self.backend}
+
+    @classmethod
+    def from_state(cls, state: dict, backend: Optional[str] = None,
+                   options: BackendOptions = BackendOptions()) -> "Filter":
+        spec = FilterSpec(**{k: (v if isinstance(v, str) else int(v))
+                             for k, v in state["spec"].items()})
+        name = backend or state.get("backend", "jnp")
+        eng = registry.select(spec, name, options.ctx())
+        dense = jnp.asarray(state["words"], jnp.uint32)
+        return cls(spec=spec, words=eng.from_dense(spec, dense, options),
+                   backend=eng.name, options=options)
+
+    def __repr__(self):
+        return (f"Filter({self.spec}, backend={self.backend!r}, "
+                f"words={tuple(self.words.shape)})")
+
+
+# One jitted entry point per op; jax's cache keys on the pytree structure
+# (spec/backend/options are aux data), replacing the old per-spec
+# functools.lru_cache of jitted lambdas.
+@jax.jit
+def _jit_add(filt: Filter, keys: jnp.ndarray) -> Filter:
+    new = filt.engine.add(filt.spec, filt.words, keys, filt.options)
+    return filt.replace(words=new)
+
+
+@jax.jit
+def _jit_contains(filt: Filter, keys: jnp.ndarray) -> jnp.ndarray:
+    return filt.engine.contains(filt.spec, filt.words, keys, filt.options)

@@ -1,0 +1,167 @@
+"""Backend registry: named, introspectable Bloom-filter engines.
+
+Replaces the ad-hoc ``_use_pallas()`` branching of the old ``BloomFilter``
+facade with a ranked query: every engine declares
+
+* ``supports(spec, ctx)`` — can it execute this :class:`FilterSpec` in this
+  context (platform, mesh, options)?
+* ``cost(spec, ctx)``     — a relative cost estimate (lower is better);
+  ``"auto"`` selection is ``min(cost)`` over the supporting engines.
+
+Engines registered by ``repro.api``:
+
+========== ==================================================================
+name       execution strategy
+========== ==================================================================
+jnp        vectorized pure-jnp reference (row gather / segmented-OR insert)
+pallas-vmem Pallas TPU kernels, filter pinned in VMEM (cache-resident regime)
+pallas-hbm  Pallas TPU kernels, filter streamed from HBM via DMA scratch
+replicated  one replica per mesh device; local adds + butterfly OR merges
+sharded     block-range segments per device; all_to_all ownership routing
+========== ==================================================================
+
+The registry is open: downstream code can ``register()`` additional engines
+(e.g. a GPU Triton port) and they become reachable from every call site that
+says ``backend="auto"`` — the seam the paper's modular design argues for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.variants import FilterSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionContext:
+    """Everything ``supports``/``cost`` may rank on, besides the spec."""
+
+    platform: str                      # jax.default_backend(): "cpu"/"tpu"/...
+    mesh: Optional[object] = None      # jax.sharding.Mesh for distributed
+    axis: str = "data"
+    n_keys_hint: Optional[int] = None  # expected bulk-op batch size
+
+    @classmethod
+    def current(cls, mesh=None, axis: str = "data",
+                n_keys_hint: Optional[int] = None) -> "SelectionContext":
+        return cls(platform=jax.default_backend(), mesh=mesh, axis=axis,
+                   n_keys_hint=n_keys_hint)
+
+
+class Backend:
+    """Engine interface. Subclasses are stateless; all state (spec, words,
+    mesh, layout, ...) travels in the :class:`repro.api.Filter` pytree.
+
+    ``words`` layout is engine-defined (dense ``(n_words,)`` for single-host
+    engines, ``(n_dev, n_words)`` replicas for ``replicated`` ...); engines
+    translate to/from the canonical dense form via ``to_dense``/``from_dense``
+    so filters checkpoint and migrate across engines uniformly.
+    """
+
+    name: str = "?"
+
+    # -- capability / ranking ------------------------------------------------
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        raise NotImplementedError
+
+    def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
+        """Relative cost (lower wins ``"auto"``). Dimensionless heuristic:
+        ~ memory traffic per key, scaled by platform efficiency."""
+        raise NotImplementedError
+
+    def describe(self) -> Dict[str, str]:
+        return {"name": self.name, "doc": (self.__doc__ or "").strip()}
+
+    # -- storage -------------------------------------------------------------
+    def init(self, spec: FilterSpec, options) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def to_dense(self, spec: FilterSpec, words: jnp.ndarray, options
+                 ) -> jnp.ndarray:
+        """Canonical single-host ``(n_words,)`` view (global OR of all
+        device-local state)."""
+        return words
+
+    def from_dense(self, spec: FilterSpec, dense: jnp.ndarray, options
+                   ) -> jnp.ndarray:
+        """Inverse of ``to_dense`` — engine-local storage holding the same
+        logical filter."""
+        return dense
+
+    # -- bulk ops (the paper's seam) -----------------------------------------
+    def add(self, spec: FilterSpec, words: jnp.ndarray, keys: jnp.ndarray,
+            options) -> jnp.ndarray:
+        """OR ``keys`` (n, 2) uint32 into the filter; returns new words."""
+        raise NotImplementedError
+
+    def contains(self, spec: FilterSpec, words: jnp.ndarray,
+                 keys: jnp.ndarray, options) -> jnp.ndarray:
+        """(n,) bool membership for ``keys`` (n, 2) uint32."""
+        raise NotImplementedError
+
+    def merge(self, spec: FilterSpec, a: jnp.ndarray, b: jnp.ndarray,
+              options) -> jnp.ndarray:
+        """OR-union of two same-shape word arrays (default: elementwise)."""
+        return a | b
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+# legacy spellings accepted by select(); resolved against the live registry
+_ALIASES: Dict[str, Callable[[FilterSpec, SelectionContext], str]] = {}
+
+
+def register(backend: Backend, overwrite: bool = False) -> Backend:
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def register_alias(name: str,
+                   resolve: Callable[[FilterSpec, SelectionContext], str]):
+    _ALIASES[name] = resolve
+
+
+def get(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def describe() -> Tuple[Dict[str, str], ...]:
+    return tuple(_REGISTRY[n].describe() for n in names())
+
+
+def select(spec: FilterSpec, backend: str = "auto",
+           ctx: Optional[SelectionContext] = None) -> Backend:
+    """Resolve a backend name (or ``"auto"``/alias) to an engine.
+
+    ``"auto"`` ranks every supporting engine by ``cost(spec, ctx)`` and
+    returns the cheapest — the scattered if/else of the old facade, as one
+    ordered query.
+    """
+    ctx = ctx or SelectionContext.current()
+    if backend in _ALIASES:
+        backend = _ALIASES[backend](spec, ctx)
+    if backend != "auto":
+        eng = get(backend)
+        if not eng.supports(spec, ctx):
+            raise ValueError(f"backend {backend!r} does not support {spec} "
+                             f"in context {ctx}")
+        return eng
+    ranked = sorted(((eng.cost(spec, ctx), name)
+                     for name, eng in _REGISTRY.items()
+                     if eng.supports(spec, ctx)))
+    if not ranked:
+        raise ValueError(f"no registered backend supports {spec} ({ctx})")
+    return _REGISTRY[ranked[0][1]]

@@ -18,6 +18,11 @@ Layout (one directory per step):
   (elastic scaling) or device count. On a multi-host pod each process would
   write its addressable shards; the manifest format already carries
   per-leaf metadata to support that split.
+* **Filters**: a :class:`repro.api.Filter` is a registered pytree (its word
+  array is the only leaf), so it checkpoints inline with the rest of the
+  train state. ``save_filter``/``restore_filter`` additionally store the
+  *engine-independent* canonical state, so a filter written by one engine
+  (e.g. ``sharded`` on a pod) restores into another (``jnp`` on one host).
 """
 from __future__ import annotations
 
@@ -104,6 +109,46 @@ def _list_steps(ckpt_dir: str):
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = _list_steps(ckpt_dir)
     return max(steps) if steps else None
+
+
+def save_filter(ckpt_dir: str, step: int, filt, *, sync: bool = True,
+                keep: int = 3):
+    """Checkpoint a ``repro.api.Filter`` in engine-independent form.
+
+    The dense word array is the only array leaf; spec + engine name travel
+    in the manifest's ``extra`` metadata, so ``restore_filter`` can rebuild
+    on any engine (filter migration across deployment shapes)."""
+    state = filt.to_state()
+    return save(ckpt_dir, step, {"filter_words": state["words"]}, sync=sync,
+                keep=keep, extra={"filter_spec": state["spec"],
+                                  "filter_backend": state["backend"]})
+
+
+def restore_filter(ckpt_dir: str, *, step: Optional[int] = None,
+                   backend: Optional[str] = None, options=None):
+    """Load a filter written by ``save_filter``; returns (step, Filter).
+
+    ``backend``/``options`` re-home the state onto a different engine than
+    the one that wrote it (default: the writer's engine)."""
+    from repro.api import BackendOptions, Filter
+    from repro.core.variants import FilterSpec
+
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    spec_d = manifest["extra"]["filter_spec"]
+    spec = FilterSpec(**spec_d)
+    words = np.load(os.path.join(d, manifest["leaves"]["filter_words"]["file"]))
+    filt = Filter.from_state(
+        {"words": words, "spec": spec_d,
+         "backend": manifest["extra"]["filter_backend"]},
+        backend=backend, options=options or BackendOptions())
+    assert filt.spec == spec
+    return step, filt
 
 
 def restore(ckpt_dir: str, template: Any, *, step: Optional[int] = None,

@@ -2,18 +2,18 @@
 
 Two deployment shapes, both built on ``shard_map``:
 
-``ReplicatedFilter``
+**replicated**
     Every device holds the full word array; adds are applied locally to the
-    device's replica against its own key shard, and ``sync()`` merges the
-    replicas with a **butterfly OR all-reduce** built from ``lax.ppermute``
-    (bitwise OR is not a native JAX collective — log2(n) rounds, each moving
-    m bits, same volume schedule as a bidirectional-ring all-reduce for
-    small device counts). Between syncs the filter is eventually-consistent:
-    a duplicate may slip through, the FPR is unaffected — the right trade
-    for data-pipeline dedup where a missed duplicate costs one wasted
-    sample, not correctness.
+    device's replica against its own key shard, and a **butterfly OR
+    all-reduce** built from ``lax.ppermute`` merges the replicas (bitwise OR
+    is not a native JAX collective — log2(n) rounds, each moving m bits,
+    same volume schedule as a bidirectional-ring all-reduce for small device
+    counts). Between syncs the filter is eventually-consistent: a duplicate
+    may slip through, the FPR is unaffected — the right trade for
+    data-pipeline dedup where a missed duplicate costs one wasted sample,
+    not correctness.
 
-``ShardedFilter``
+**sharded**
     The word array is split into per-device **segments** (contiguous block
     ranges — the distributed extension of the ownership model in
     core.partition). Bulk ops route each key to its segment owner with a
@@ -24,17 +24,23 @@ Two deployment shapes, both built on ``shard_map``:
     allowed false positive — never a false negative) and an overflowed add
     is dropped (a missed dedup, not a correctness bug).
 
-Scale note (1000+ nodes): ShardedFilter keeps per-device memory at m/n and
-turns the paper's DRAM-random-access bound into a VMEM-resident-segment
+This module holds the **pure collective transforms** (``replicated_*`` /
+``sharded_*`` functions). They are consumed two ways:
+
+* the ``"replicated"`` / ``"sharded"`` engines in ``repro.api.registry`` —
+  the supported surface, conforming to the uniform ``Filter`` protocol;
+* the legacy ``ReplicatedFilter`` / ``ShardedFilter`` classes below, kept
+  for one release as deprecation shims.
+
+Scale note (1000+ nodes): the sharded shape keeps per-device memory at m/n
+and turns the paper's DRAM-random-access bound into a VMEM-resident-segment
 workload — the multi-device generalization of the paper's cache-resident
 fast path.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
-from typing import Optional
+import warnings
 
 import numpy as np
 import jax
@@ -58,7 +64,9 @@ def or_allreduce(x: jnp.ndarray, axis_name: str, method: str = "butterfly"
     butterfly: log2(n) ppermute rounds (n must be a power of two).
     gather:    all_gather + local OR fold (any n; more memory).
     """
-    n = jax.lax.axis_size(axis_name)
+    # psum of a literal folds to the static axis size (works across jax
+    # versions; jax.lax.axis_size only exists in newer releases)
+    n = int(jax.lax.psum(1, axis_name))
     if method == "gather" or (n & (n - 1)) != 0:
         g = jax.lax.all_gather(x, axis_name, axis=0)         # (n, ...)
         acc = g[0]
@@ -111,11 +119,166 @@ def _segment_add(spec: FilterSpec, seg_words: jnp.ndarray, keys: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# ReplicatedFilter
+# Replicated deployment — pure transforms
 # ---------------------------------------------------------------------------
+
+def replicated_init(spec: FilterSpec, mesh: Mesh, axis: str = "data"
+                    ) -> jnp.ndarray:
+    """(n_dev, n_words) zeroed replicas, one per device along ``axis``."""
+    n_dev = mesh.shape[axis]
+    sharding = NamedSharding(mesh, P(axis))
+    return jax.device_put(jnp.zeros((n_dev, spec.n_words), jnp.uint32),
+                          sharding)
+
+
+def replicated_add_local(spec: FilterSpec, mesh: Mesh, axis: str,
+                         words: jnp.ndarray, keys_sharded: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Each device ORs its (n_dev, n_local, 2) key shard into its replica —
+    no collectives; replicas diverge until the next OR-merge."""
+    def body(w, keys):
+        return V.add_scatter(spec, w[0], keys[0])[None]
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                   out_specs=P(axis))
+    return fn(words, keys_sharded)
+
+
+def replicated_sync(spec: FilterSpec, mesh: Mesh, axis: str,
+                    words: jnp.ndarray, method: str = "butterfly"
+                    ) -> jnp.ndarray:
+    """Merge replicas: afterwards every device's replica is the global OR."""
+    def body(w):
+        return or_allreduce(w, axis, method=method)
+
+    fn = shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(axis))
+    return fn(words)
+
+
+def replicated_contains_local(spec: FilterSpec, mesh: Mesh, axis: str,
+                              words: jnp.ndarray, keys_sharded: jnp.ndarray
+                              ) -> jnp.ndarray:
+    """Test each device's key shard against its *own* replica (pre-sync view:
+    remote adds since the last sync are invisible)."""
+    def body(w, keys):
+        return V.contains(spec, w[0], keys[0])[None]
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                   out_specs=P(axis))
+    return fn(words, keys_sharded)
+
+
+def replicated_contains_merged(spec: FilterSpec, mesh: Mesh, axis: str,
+                               words: jnp.ndarray, keys_sharded: jnp.ndarray
+                               ) -> jnp.ndarray:
+    """Test against the OR of all replicas (one butterfly per call) — the
+    no-false-negative view the uniform Filter protocol promises, without
+    mutating the replicas themselves."""
+    def body(w, keys):
+        merged = or_allreduce(w[0], axis)
+        return V.contains(spec, merged, keys[0])[None]
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                   out_specs=P(axis))
+    return fn(words, keys_sharded)
+
+
+# ---------------------------------------------------------------------------
+# Sharded deployment — pure transforms
+# ---------------------------------------------------------------------------
+
+def sharded_init(spec: FilterSpec, mesh: Mesh, axis: str = "data"
+                 ) -> jnp.ndarray:
+    """(n_words,) zeroed filter, block-range sharded along ``axis``."""
+    n_dev = mesh.shape[axis]
+    assert spec.n_blocks % n_dev == 0
+    assert (n_dev & (n_dev - 1)) == 0, "device count must be pow2 (segments)"
+    sharding = NamedSharding(mesh, P(axis))
+    return jax.device_put(jnp.zeros((spec.n_words,), jnp.uint32), sharding)
+
+
+def _route(spec: FilterSpec, keys: jnp.ndarray, n_dev: int, capacity: int):
+    """Per-device: bucket local keys by owner segment, fixed capacity.
+
+    Returns (send [n_dev, cap, 2], valid [n_dev, cap], seg, rank, keep).
+    """
+    blocks_per_seg = spec.n_blocks // n_dev
+    n = keys.shape[0]
+    h2 = H.xxh32_u64x2(keys, H.SEED_BLOCK)
+    blk = H.block_index(h2, spec.n_blocks)
+    seg = (blk // jnp.uint32(blocks_per_seg)).astype(jnp.int32)
+    order = jnp.argsort(seg, stable=True)
+    sorted_seg = seg[order]
+    idx_in_run = (jnp.arange(n)
+                  - jnp.searchsorted(sorted_seg, sorted_seg, side="left"))
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(idx_in_run.astype(jnp.int32))
+    keep = rank < capacity
+    slot = jnp.where(keep, seg * capacity + rank, n_dev * capacity)
+    send = jnp.zeros((n_dev * capacity + 1, 2), jnp.uint32).at[slot].set(
+        keys, mode="drop")[:-1].reshape(n_dev, capacity, 2)
+    valid = jnp.zeros((n_dev * capacity + 1,), jnp.uint8).at[slot].set(
+        1, mode="drop")[:-1].reshape(n_dev, capacity)
+    return send, valid, seg, rank, keep
+
+
+def sharded_add(spec: FilterSpec, mesh: Mesh, axis: str, capacity: int,
+                words: jnp.ndarray, keys_sharded: jnp.ndarray) -> jnp.ndarray:
+    """Route each device's (n_dev, n_local, 2) key shard to its segment owner
+    (all_to_all), then bit-plane OR into the owner's resident segment."""
+    n_dev = mesh.shape[axis]
+    bps = spec.n_blocks // n_dev
+
+    def body(w, keys):
+        send, valid, *_ = _route(spec, keys[0], n_dev, capacity)
+        recv_k = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
+        recv_v = jax.lax.all_to_all(valid, axis, 0, 0, tiled=False)
+        flat_k = recv_k.reshape(-1, 2)
+        flat_v = recv_v.reshape(-1)
+        return _segment_add(spec, w, flat_k, flat_v, bps)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                   out_specs=P(axis))
+    return fn(words, keys_sharded)
+
+
+def sharded_contains(spec: FilterSpec, mesh: Mesh, axis: str, capacity: int,
+                     words: jnp.ndarray, keys_sharded: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Returns (n_dev, n_local) bool, sharded like the keys. Overflowed keys
+    conservatively report "present" (allowed FP, never an FN)."""
+    n_dev = mesh.shape[axis]
+    bps = spec.n_blocks // n_dev
+
+    def body(w, keys):
+        k = keys[0]
+        send, valid, seg, rank, keep = _route(spec, k, n_dev, capacity)
+        recv_k = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
+        res = _segment_contains(spec, w, recv_k.reshape(-1, 2), bps)
+        res = res.reshape(n_dev, capacity)
+        back = jax.lax.all_to_all(res, axis, 0, 0, tiled=False)  # (n_dev, cap)
+        mine = back.reshape(-1)[seg * capacity + rank]
+        return jnp.where(keep, mine, True)[None]
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                   out_specs=P(axis))
+    return fn(words, keys_sharded)
+
+
+# ---------------------------------------------------------------------------
+# Legacy class shims (deprecated — use repro.api.make_filter instead)
+# ---------------------------------------------------------------------------
+
+def _warn_deprecated(old: str):
+    warnings.warn(
+        f"{old} is deprecated; use repro.api.make_filter(..., "
+        f"backend=..., mesh=...) — the pytree-native Filter over the same "
+        f"collectives.", DeprecationWarning, stacklevel=3)
+
 
 @dataclasses.dataclass
 class ReplicatedFilter:
+    """Deprecated shim over the ``replicated_*`` transforms (one release)."""
+
     spec: FilterSpec
     mesh: Mesh
     axis: str
@@ -124,60 +287,41 @@ class ReplicatedFilter:
 
     @classmethod
     def create(cls, spec: FilterSpec, mesh: Mesh, axis: str = "data"):
-        n_dev = mesh.shape[axis]
-        sharding = NamedSharding(mesh, P(axis))
-        words = jax.device_put(jnp.zeros((n_dev, spec.n_words), jnp.uint32),
-                               sharding)
-        return cls(spec=spec, mesh=mesh, axis=axis, words=words)
+        _warn_deprecated("ReplicatedFilter")
+        return cls(spec=spec, mesh=mesh, axis=axis,
+                   words=replicated_init(spec, mesh, axis))
 
     def add_local(self, keys_sharded: jnp.ndarray) -> "ReplicatedFilter":
-        """keys_sharded: (n_dev, n_local, 2) sharded on axis 0 — each device
-        ORs its key shard into its own replica (no collectives)."""
-        spec = self.spec
-
-        def body(words, keys):
-            return V.add_scatter(spec, words[0], keys[0])[None]
-
-        fn = shard_map(body, mesh=self.mesh,
-                       in_specs=(P(self.axis), P(self.axis)),
-                       out_specs=P(self.axis))
-        self.words = fn(self.words, keys_sharded)
+        self.words = replicated_add_local(self.spec, self.mesh, self.axis,
+                                          self.words, keys_sharded)
         self.pending_syncs += 1
         return self
 
-    def sync(self, method: str = "butterfly") -> "ReplicatedFilter":
-        """Merge replicas: after this, every device's replica is the global OR."""
-        def body(words):
-            return or_allreduce(words, self.axis, method=method)
+    # NB: deliberately NOT aliased to ``add``/``contains`` — the uniform
+    # Filter protocol takes flat (n, 2) keys and promises no false
+    # negatives, while these legacy methods take (n_dev, n_local, 2) and
+    # expose the pre-sync per-replica view. The protocol-conforming
+    # spelling is repro.api.make_filter(..., backend="replicated").
 
-        fn = shard_map(body, mesh=self.mesh,
-                       in_specs=P(self.axis), out_specs=P(self.axis))
-        self.words = fn(self.words)
+    def sync(self, method: str = "butterfly") -> "ReplicatedFilter":
+        self.words = replicated_sync(self.spec, self.mesh, self.axis,
+                                     self.words, method=method)
         self.pending_syncs = 0
         return self
 
     def contains_local(self, keys_sharded: jnp.ndarray) -> jnp.ndarray:
-        spec = self.spec
-
-        def body(words, keys):
-            return V.contains(spec, words[0], keys[0])[None]
-
-        fn = shard_map(body, mesh=self.mesh,
-                       in_specs=(P(self.axis), P(self.axis)),
-                       out_specs=P(self.axis))
-        return fn(self.words, keys_sharded)
+        return replicated_contains_local(self.spec, self.mesh, self.axis,
+                                         self.words, keys_sharded)
 
     def global_words(self) -> jnp.ndarray:
         """Host view of replica 0 (call after sync() for the global filter)."""
         return self.words[0]
 
 
-# ---------------------------------------------------------------------------
-# ShardedFilter
-# ---------------------------------------------------------------------------
-
 @dataclasses.dataclass
 class ShardedFilter:
+    """Deprecated shim over the ``sharded_*`` transforms (one release)."""
+
     spec: FilterSpec
     mesh: Mesh
     axis: str
@@ -187,13 +331,9 @@ class ShardedFilter:
     @classmethod
     def create(cls, spec: FilterSpec, mesh: Mesh, axis: str = "data",
                capacity: int = 1024):
-        n_dev = mesh.shape[axis]
-        assert spec.n_blocks % n_dev == 0
-        assert (n_dev & (n_dev - 1)) == 0, "device count must be pow2 (segments)"
-        sharding = NamedSharding(mesh, P(axis))
-        words = jax.device_put(jnp.zeros((spec.n_words,), jnp.uint32), sharding)
-        return cls(spec=spec, mesh=mesh, axis=axis, words=words,
-                   capacity=capacity)
+        _warn_deprecated("ShardedFilter")
+        return cls(spec=spec, mesh=mesh, axis=axis,
+                   words=sharded_init(spec, mesh, axis), capacity=capacity)
 
     @property
     def n_dev(self) -> int:
@@ -203,68 +343,16 @@ class ShardedFilter:
     def blocks_per_seg(self) -> int:
         return self.spec.n_blocks // self.n_dev
 
-    def _route(self, keys: jnp.ndarray):
-        """Per-device: bucket local keys by owner segment, fixed capacity.
-
-        Returns (send [n_dev, cap, 2], valid [n_dev, cap], seg, rank, keep).
-        """
-        spec, n_dev, cap = self.spec, self.n_dev, self.capacity
-        n = keys.shape[0]
-        h2 = H.xxh32_u64x2(keys, H.SEED_BLOCK)
-        blk = H.block_index(h2, spec.n_blocks)
-        seg = (blk // jnp.uint32(self.blocks_per_seg)).astype(jnp.int32)
-        order = jnp.argsort(seg, stable=True)
-        sorted_seg = seg[order]
-        idx_in_run = (jnp.arange(n)
-                      - jnp.searchsorted(sorted_seg, sorted_seg, side="left"))
-        rank = jnp.zeros((n,), jnp.int32).at[order].set(idx_in_run.astype(jnp.int32))
-        keep = rank < cap
-        slot = jnp.where(keep, seg * cap + rank, n_dev * cap)
-        send = jnp.zeros((n_dev * cap + 1, 2), jnp.uint32).at[slot].set(
-            keys, mode="drop")[:-1].reshape(n_dev, cap, 2)
-        valid = jnp.zeros((n_dev * cap + 1,), jnp.uint8).at[slot].set(
-            1, mode="drop")[:-1].reshape(n_dev, cap)
-        return send, valid, seg, rank, keep
-
     def add(self, keys_sharded: jnp.ndarray) -> "ShardedFilter":
         """keys_sharded: (n_dev, n_local, 2) sharded on axis 0."""
-        spec, axis, bps = self.spec, self.axis, self.blocks_per_seg
-
-        def body(words, keys):
-            send, valid, *_ = self._route(keys[0])
-            recv_k = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
-            recv_v = jax.lax.all_to_all(valid, axis, 0, 0, tiled=False)
-            flat_k = recv_k.reshape(-1, 2)
-            flat_v = recv_v.reshape(-1)
-            return _segment_add(spec, words, flat_k, flat_v, bps)
-
-        fn = shard_map(body, mesh=self.mesh,
-                       in_specs=(P(axis), P(axis)),
-                       out_specs=P(axis))
-        self.words = fn(self.words, keys_sharded)
+        self.words = sharded_add(self.spec, self.mesh, self.axis,
+                                 self.capacity, self.words, keys_sharded)
         return self
 
     def contains(self, keys_sharded: jnp.ndarray) -> jnp.ndarray:
         """Returns (n_dev, n_local) bool, sharded like the keys."""
-        spec, axis, bps, n_dev, cap = (self.spec, self.axis,
-                                       self.blocks_per_seg, self.n_dev,
-                                       self.capacity)
-
-        def body(words, keys):
-            k = keys[0]
-            send, valid, seg, rank, keep = self._route(k)
-            recv_k = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
-            res = _segment_contains(spec, words, recv_k.reshape(-1, 2), bps)
-            res = res.reshape(n_dev, cap)
-            back = jax.lax.all_to_all(res, axis, 0, 0, tiled=False)  # (n_dev, cap)
-            mine = back.reshape(-1)[seg * cap + rank]
-            # overflowed keys: conservatively report "present" (allowed FP)
-            return jnp.where(keep, mine, True)[None]
-
-        fn = shard_map(body, mesh=self.mesh,
-                       in_specs=(P(axis), P(axis)),
-                       out_specs=P(axis))
-        return fn(self.words, keys_sharded)
+        return sharded_contains(self.spec, self.mesh, self.axis,
+                                self.capacity, self.words, keys_sharded)
 
     def fill_fraction(self) -> float:
         return float(V.fill_fraction(self.words))

@@ -1,139 +1,121 @@
-"""User-facing Bloom filter facade.
+"""Deprecated mutable facade over :class:`repro.api.Filter` (one release).
 
-``BloomFilter`` wraps a ``FilterSpec`` + the uint32 word array and dispatches
-bulk operations to the best available execution path:
+``BloomFilter`` predates the pytree-native API: it exposed mutating
+``add``/``contains`` and ad-hoc ``backend=`` dispatch. It now delegates
+every operation to a :class:`repro.api.Filter` held internally, so the two
+surfaces are bit-identical; new code should use ``repro.api`` directly:
 
-* ``backend="jnp"``    — the vectorized pure-jnp reference (CPU-friendly);
-* ``backend="pallas"`` — the TPU Pallas kernels (``repro.kernels``), run in
-  interpret mode off-TPU; layout (Θ, Φ) selectable / autotuned;
-* ``backend="auto"``   — pallas when the spec is kernel-compatible, else jnp.
-
-The object is immutable-functional under the hood (JAX arrays), but exposes a
-mutating convenience API because that is what data-pipeline call sites want.
+    bf = BloomFilter.for_n_items(n, 16)      ->  api.filter_for_n_items(n, 16)
+    bf.add(keys); bf.contains(keys)          ->  f = f.add(keys); f.contains(keys)
+    backend="pallas"                         ->  backend="pallas-vmem" / "pallas-hbm"
+                                                 (or keep "pallas": registry alias)
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
+import warnings
 from typing import Optional
 
-import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import variants as V
 from repro.core.variants import FilterSpec
 
 
-@functools.lru_cache(maxsize=256)
-def _jit_contains(spec: FilterSpec):
-    return jax.jit(lambda f, k: V.contains_rows(spec, f, k))
+def _as_keys(keys):
+    from repro.api.filter import as_keys
+    return as_keys(keys)
 
 
-@functools.lru_cache(maxsize=256)
-def _jit_add(spec: FilterSpec):
-    return jax.jit(lambda f, k: V.add_rows(spec, f, k))
+def _warn():
+    warnings.warn(
+        "BloomFilter is deprecated; use repro.api.make_filter / "
+        "filter_for_n_items (immutable pytree Filter, same engines).",
+        DeprecationWarning, stacklevel=3)
 
 
-def _as_keys(keys) -> jnp.ndarray:
-    """Accept u64x2 uint32 (n,2), np.uint64 (n,), or uint32 (n,)."""
-    if isinstance(keys, np.ndarray) and keys.dtype == np.uint64:
-        from repro.core.hashing import u64x2_from_u64
-        keys = u64x2_from_u64(keys)
-    keys = jnp.asarray(keys)
-    if keys.dtype != jnp.uint32:
-        keys = keys.astype(jnp.uint32)
-    return keys
-
-
-@dataclasses.dataclass
 class BloomFilter:
-    spec: FilterSpec
-    words: jnp.ndarray
-    backend: str = "auto"
-    layout: Optional[object] = None   # kernels.sbf.Layout for the pallas path
+    """Deprecated. A thin mutable wrapper around ``repro.api.Filter``."""
+
+    def __init__(self, spec: FilterSpec, words: jnp.ndarray,
+                 backend: str = "auto", layout: Optional[object] = None):
+        from repro import api
+        eng = api.registry.select(spec, backend,
+                                  api.BackendOptions(layout=layout).ctx())
+        self._f = api.Filter(spec=spec, words=words, backend=eng.name,
+                             options=api.BackendOptions(layout=layout))
 
     # -- construction -------------------------------------------------------
     @classmethod
     def create(cls, variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
                block_bits: int = 256, z: int = 1, backend: str = "auto",
                layout=None) -> "BloomFilter":
+        _warn()
         spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
                           block_bits=block_bits, z=z)
-        return cls(spec=spec, words=V.init(spec), backend=backend, layout=layout)
+        return cls(spec=spec, words=V.init(spec), backend=backend,
+                   layout=layout)
 
     @classmethod
     def for_n_items(cls, n: int, bits_per_key: float = 16.0,
                     variant: str = "sbf", block_bits: int = 256,
-                    k: Optional[int] = None, **kw) -> "BloomFilter":
+                    k: Optional[int] = None, backend: str = "auto",
+                    layout=None, **kw) -> "BloomFilter":
         """Size a filter for ~n items at c = bits_per_key (m rounded to pow2)."""
-        m = 1 << max(int(np.ceil(np.log2(max(n, 1) * bits_per_key))), 10)
-        if k is None:
-            k = max(int(round(V.optimal_k(m / max(n, 1)))), 1)
-            if variant == "csbf":
-                z = kw.get("z", 1)
-                k = max(z, (k // z) * z)
-            if variant == "sbf":
-                s = block_bits // V.WORD_BITS
-                k = max(s, (k // s) * s) if k >= s else k
-            k = min(k, 32)
-        return cls.create(variant=variant, m_bits=m, k=k,
-                          block_bits=block_bits, **kw)
+        _warn()
+        from repro import api
+        f = api.filter_for_n_items(n, bits_per_key, variant=variant,
+                                   block_bits=block_bits, k=k,
+                                   backend=backend, layout=layout, **kw)
+        obj = cls.__new__(cls)
+        obj._f = f
+        return obj
 
-    # -- dispatch -------------------------------------------------------------
-    def _use_pallas(self) -> bool:
-        if self.backend == "jnp":
-            return False
-        from repro.kernels import ops
-        ok = ops.kernel_supported(self.spec)
-        if self.backend == "pallas" and not ok:
-            raise ValueError(f"no pallas kernel for {self.spec}")
-        if self.backend == "auto":
-            # interpret-mode kernels are for validation, not speed: off-TPU
-            # the vectorized jnp engine is the fast path.
-            return ok and jax.default_backend() == "tpu"
-        return ok
+    # -- pass-throughs -------------------------------------------------------
+    @property
+    def spec(self) -> FilterSpec:
+        return self._f.spec
+
+    @property
+    def words(self) -> jnp.ndarray:
+        return self._f.words
+
+    @words.setter
+    def words(self, w):
+        self._f = self._f.replace(words=w)
+
+    @property
+    def backend(self) -> str:
+        return self._f.backend
+
+    @property
+    def layout(self):
+        return self._f.options.layout
 
     def add(self, keys) -> "BloomFilter":
-        keys = _as_keys(keys)
-        if keys.shape[0] == 0:
-            return self
-        if self._use_pallas():
-            from repro.kernels import ops
-            self.words = ops.bloom_add(self.spec, self.words, keys,
-                                       layout=self.layout)
-        else:
-            self.words = _jit_add(self.spec)(self.words, keys)
+        self._f = self._f.add(keys)
         return self
 
     def contains(self, keys) -> jnp.ndarray:
-        keys = _as_keys(keys)
-        if keys.shape[0] == 0:
-            return jnp.zeros((0,), jnp.bool_)
-        if self._use_pallas():
-            from repro.kernels import ops
-            return ops.bloom_contains(self.spec, self.words, keys,
-                                      layout=self.layout)
-        return _jit_contains(self.spec)(self.words, keys)
+        return self._f.contains(keys)
 
     # -- introspection --------------------------------------------------------
     def fill_fraction(self) -> float:
-        return float(V.fill_fraction(self.words))
+        return self._f.fill_fraction()
 
     def fpr_theory(self, n: int) -> float:
-        return V.fpr_theory(self.spec, n)
+        return self._f.fpr_theory(n)
 
-    def measure_fpr(self, n_inserted: int, n_probe: int = 1 << 16,
+    def measure_fpr(self, n_inserted: int = 0, n_probe: int = 1 << 16,
                     seed: int = 1234) -> float:
-        """Empirical FPR: probe keys disjoint from any realistic insert set."""
-        from repro.core.hashing import random_u64x2
-        probes = random_u64x2(n_probe, seed=seed)
-        hits = np.asarray(self.contains(probes))
-        return float(hits.mean())
+        """Empirical FPR; probes come from the reserved keyspace
+        (``hashing.probe_u64x2``), disjoint from every ``random_u64x2``
+        insert set. ``n_inserted`` is kept for signature compatibility."""
+        return self._f.measure_fpr(n_probe=n_probe, seed=seed)
 
     @property
     def nbytes(self) -> int:
-        return self.spec.m_bits // 8
+        return self._f.nbytes
 
     def __repr__(self):
-        return f"BloomFilter({self.spec}, fill={self.fill_fraction():.3f}, backend={self.backend})"
+        return (f"BloomFilter({self.spec}, fill={self.fill_fraction():.3f}, "
+                f"backend={self.backend})")

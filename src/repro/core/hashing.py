@@ -165,8 +165,27 @@ def u64x2_from_u64(keys_u64: np.ndarray) -> np.ndarray:
 
 
 def random_u64x2(n: int, seed: int = 0) -> np.ndarray:
-    """Host helper: n distinct-ish random u64 keys in u64x2 format."""
+    """Host helper: n distinct-ish random u64 keys in u64x2 format.
+
+    Keys are drawn from the *insert* keyspace — the top bit of the u64 is
+    always clear. The complementary range (top bit set) is reserved for
+    ``probe_u64x2``, so FPR probes are structurally disjoint from any key
+    set generated here (see ``Filter.measure_fpr``).
+    """
     rng = np.random.RandomState(seed)
     lo = rng.randint(0, 2**32, size=n, dtype=np.uint64)
-    hi = rng.randint(0, 2**32, size=n, dtype=np.uint64)
+    hi = rng.randint(0, 2**31, size=n, dtype=np.uint64)  # top bit reserved
+    return u64x2_from_u64((hi << np.uint64(32)) | lo)
+
+
+def probe_u64x2(n: int, seed: int = 0) -> np.ndarray:
+    """n random u64 probe keys from the reserved range (top bit set).
+
+    Disjoint by construction from every ``random_u64x2`` draw — the
+    right source for empirical FPR measurements, where a probe that
+    collides with an inserted key would misreport a true positive as a
+    false one."""
+    rng = np.random.RandomState(seed ^ 0x5EED)
+    lo = rng.randint(0, 2**32, size=n, dtype=np.uint64)
+    hi = rng.randint(0, 2**31, size=n, dtype=np.uint64) | np.uint64(1 << 31)
     return u64x2_from_u64((hi << np.uint64(32)) | lo)

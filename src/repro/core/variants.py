@@ -91,9 +91,9 @@ class FilterSpec:
         """CSBF: words per group."""
         return self.s // self.z
 
-    @property
-    def bits_per_element(self) -> float:
-        return float(self.m_bits)
+    def bits_per_element(self, n: int) -> float:
+        """c = m/n — filter bits per inserted element at load ``n``."""
+        return self.m_bits / max(n, 1)
 
     def __str__(self):
         return (f"{self.variant}(m=2^{_log2i(self.m_bits)}b, B={self.block_bits}, "
@@ -415,7 +415,7 @@ def fpr_csbf(B: int, S: int, c: float, k: int, z: int) -> float:
 
 
 def fpr_theory(spec: FilterSpec, n: int) -> float:
-    c = spec.m_bits / max(n, 1)
+    c = spec.bits_per_element(n)
     if spec.variant == "cbf":
         return fpr_cbf(spec.m_bits, n, spec.k)
     if spec.variant in ("bbf", "rbbf"):
@@ -428,7 +428,25 @@ def fpr_theory(spec: FilterSpec, n: int) -> float:
 
 
 def space_optimal_n(spec: FilterSpec, target_fpr: float = None) -> int:
-    """Solve Eq. (3) for n: the space-error-rate-optimal load (paper §5.1)."""
-    # k = c ln2  =>  c = k / ln2  =>  n = m / c
-    c = spec.k / math.log(2.0)
-    return max(int(spec.m_bits / c), 1)
+    """Load n for the spec (paper §5.1).
+
+    Without ``target_fpr``: solve Eq. (3) — the load at which the spec's k
+    equals the space-error-rate-optimal k* = c ln 2.
+
+    With ``target_fpr``: the largest n whose analytic FPR (``fpr_theory``,
+    variant-aware) stays at or below the target; 0 if even n = 1 exceeds it.
+    """
+    if target_fpr is None:
+        # k = c ln2  =>  c = k / ln2  =>  n = m / c
+        c = spec.k / math.log(2.0)
+        return max(int(spec.m_bits / c), 1)
+    if fpr_theory(spec, 1) > target_fpr:
+        return 0
+    lo, hi = 1, spec.m_bits  # fpr_theory is monotone nondecreasing in n
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if fpr_theory(spec, mid) <= target_fpr:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo

@@ -2,13 +2,11 @@
 
 Each document is folded to a 64-bit signature (numpy, host-side) and tested
 against / inserted into a Bloom filter via the **bulk** contains/add ops the
-paper optimizes. Three deployment modes:
-
-* ``DedupFilter``     — single-host, wraps core.BloomFilter (pallas kernels);
-* ``ReplicatedFilter``/``ShardedFilter`` (core.distributed) — plugged in via
-  the same ``filter_like`` duck type for multi-host pipelines;
-* batch mode — documents are buffered and deduped in bulk (amortizing the
-  kernel launches exactly as the paper's bulk APIs do).
+paper optimizes. The filter is a :class:`repro.api.Filter`, so the same
+``DedupFilter`` stage runs on any registry engine: pass
+``backend="sharded", mesh=...`` for multi-host pipelines, ``"pallas-vmem"``
+on TPU, etc. Documents are buffered and deduped in bulk (amortizing kernel
+launches exactly as the paper's bulk APIs do).
 
 Bloom semantics for dedup: a false positive drops a *unique* document
 (bounded by the filter's FPR — pick c accordingly); a false negative never
@@ -22,7 +20,7 @@ from typing import Iterator, List, Optional
 
 import numpy as np
 
-from repro.core.filter import BloomFilter
+from repro import api
 
 
 def doc_signature(tokens: np.ndarray) -> np.ndarray:
@@ -95,13 +93,25 @@ class DedupFilter:
 
     def __init__(self, expected_docs: int = 1 << 20, bits_per_key: float = 16.0,
                  variant: str = "sbf", block_bits: int = 256,
-                 backend: str = "auto", batch_docs: int = 256):
-        self.bf = BloomFilter.for_n_items(expected_docs, bits_per_key,
-                                          variant=variant,
-                                          block_bits=block_bits,
-                                          backend=backend)
+                 backend: str = "auto", batch_docs: int = 256, **backend_kw):
+        self.filt = api.filter_for_n_items(expected_docs, bits_per_key,
+                                           variant=variant,
+                                           block_bits=block_bits,
+                                           backend=backend, **backend_kw)
         self.batch_docs = batch_docs
         self.stats = DedupStats()
+
+    @property
+    def bf(self):
+        """Deprecated read-only alias for ``filt`` (was a mutable
+        BloomFilter). ``dd.bf.add(...)`` no longer mutates the stage —
+        reassign ``dd.filt`` instead."""
+        import warnings
+        warnings.warn("DedupFilter.bf is deprecated and read-only; calling "
+                      ".add() on it does NOT update the dedup stage. Use "
+                      "DedupFilter.filt (reassign it to mutate).",
+                      DeprecationWarning, stacklevel=2)
+        return self.filt
 
     def filter_stream(self, docs: Iterator[np.ndarray]) -> Iterator[np.ndarray]:
         buf: List[np.ndarray] = []
@@ -116,7 +126,7 @@ class DedupFilter:
     def _flush(self, docs: List[np.ndarray]):
         sigs = doc_signatures_batch(docs)                        # (n, 2)
         # bulk lookup, then bulk insert of the new ones (paper's bulk ops)
-        present = np.asarray(self.bf.contains(sigs))
+        present = np.asarray(self.filt.contains(sigs))
         fresh_idx = np.nonzero(~present)[0]
         if len(fresh_idx):
             # de-dup *within* the batch as well (first occurrence wins)
@@ -134,7 +144,7 @@ class DedupFilter:
             if pad > 0:
                 add_sigs = np.concatenate(
                     [add_sigs, np.repeat(add_sigs[-1:], pad, axis=0)])
-            self.bf.add(add_sigs)
+            self.filt = self.filt.add(add_sigs)
             kept = set(keep)
         else:
             kept = set()

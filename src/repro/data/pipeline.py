@@ -76,6 +76,23 @@ class Packer:
         return row
 
 
+def deduped_batches(cfg: CorpusConfig, batch_size: int, seq_len: int,
+                    expected_docs: Optional[int] = None,
+                    bits_per_key: float = 16.0, backend: str = "auto",
+                    shard: int = 0, num_shards: int = 1, **backend_kw
+                    ) -> Iterator[np.ndarray]:
+    """corpus -> Bloom dedup -> packing, as one composed stage.
+
+    The dedup filter is a ``repro.api`` filter, so ``backend=`` reaches the
+    whole engine registry (e.g. ``backend="sharded", mesh=...`` dedups
+    against one global filter across a pod)."""
+    from repro.data.dedup import DedupFilter
+    dd = DedupFilter(expected_docs=expected_docs or max(cfg.n_docs, 1024),
+                     bits_per_key=bits_per_key, backend=backend, **backend_kw)
+    docs = synthetic_corpus(cfg, shard=shard, num_shards=num_shards)
+    yield from batches(dd.filter_stream(docs), batch_size, seq_len)
+
+
 def batches(doc_iter: Iterator[np.ndarray], batch_size: int, seq_len: int
             ) -> Iterator[np.ndarray]:
     """Pack a doc stream into (batch_size, seq_len) int32 batches."""

@@ -42,6 +42,9 @@ from repro.core import hashing as H
 from repro.core import variants as V
 from repro.core.variants import FilterSpec
 
+# renamed CompilerParams <-> TPUCompilerParams across jax releases
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 DEFAULT_TILE = 256
 # VMEM-regime budget for the filter words (bytes). Half of a ~16 MiB VMEM,
 # leaving room for key tiles, masks and scratch.
@@ -401,6 +404,6 @@ def add_partitioned(spec: FilterSpec, filt: jnp.ndarray,
         out_specs=pl.BlockSpec((seg_words,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((spec.n_words,), jnp.uint32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel",)),                  # segments are independent
     )(keys_by_seg, valid, filt)

@@ -82,7 +82,7 @@ def moe_apply(params, x: jnp.ndarray, cfg: MoEConfig,
 
     # ---- expert-parallel window --------------------------------------------
     if ep_axis is not None:
-        tp = jax.lax.axis_size(ep_axis)
+        tp = int(jax.lax.psum(1, ep_axis))  # static axis size (portable)
         rank = jax.lax.axis_index(ep_axis)
         assert E % tp == 0, (E, tp)
         E_local = E // tp

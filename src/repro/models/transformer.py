@@ -28,6 +28,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 import numpy as np
 
 from repro.configs.base import ArchConfig
@@ -149,10 +150,10 @@ def _ffn(p, x, cfg: ArchConfig, dist: Optional[DistContext]):
         aux = {k: jax.lax.pmean(aux[k], tuple(dist.data_axes)) for k in aux}
         return out, aux
 
-    fn = jax.shard_map(body, mesh=dist.mesh, in_specs=in_specs,
+    fn = shard_map(body, mesh=dist.mesh, in_specs=in_specs,
                        out_specs=(P(dA, None, None),
                                   {k: P() for k in ZERO_AUX}),
-                       check_vma=False)
+                       check_rep=False)
     out, aux = fn(moe_p, x)
     return out, aux
 

@@ -4,7 +4,9 @@ A fixed pool of B slots shares one jitted decode step (the whole batch
 advances together; finished slots are refilled from the queue — the classic
 static-batch/continuous-refill middle ground that serves well up to moderate
 QPS). Each slot owns a position counter; the KV cache is allocated once at
-``max_len``. Optional NGramGuard applies the paper's filter per step.
+``max_len``. Optional NGramGuard applies the paper's filter per step; the
+guard's state is a :class:`repro.api.Filter`, surfaced through
+:meth:`Engine.stats` for serving-health dashboards.
 """
 from __future__ import annotations
 
@@ -42,6 +44,17 @@ class Engine:
         self.sample = sample
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+
+    def stats(self) -> Dict[str, float]:
+        """Serving-health counters; guard filter health via the Filter API
+        (fill fraction drives when to rotate the repetition filter)."""
+        out: Dict[str, float] = {}
+        if self.guard is not None:
+            out["guard_observed"] = float(self.guard.stats.observed)
+            out["guard_penalized"] = float(self.guard.stats.penalized)
+            out["guard_fill"] = self.guard.filt.fill_fraction()
+            out["guard_approx_ngrams"] = self.guard.filt.approx_count()
+        return out
 
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Process requests in batch-sized waves (same prompt lengths padded)."""

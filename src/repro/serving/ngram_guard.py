@@ -7,7 +7,9 @@ candidate that would complete an already-seen n-gram gets a logit penalty.
 
 This is a bulk ``contains`` of B*K keys per step — the exact workload shape
 (bulk lookups against a small cache-resident filter) where the paper's
-optimized SBF shines; the guard uses the Pallas kernel path when available.
+optimized SBF shines. The guard holds a :class:`repro.api.Filter`, so the
+engine is a registry choice (``"auto"`` picks the Pallas VMEM kernels on
+TPU) and the guard state is an ordinary pytree leaf for checkpointing.
 
 False positives penalize a novel n-gram (harmless, sampling just shifts);
 false negatives never happen, so true loops are always caught.
@@ -21,7 +23,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.filter import BloomFilter
+from repro import api
 from repro.core import hashing as H
 
 
@@ -55,11 +57,23 @@ class NGramGuard:
         self.batch = batch
         self.top_k = top_k
         self.penalty = penalty
-        self.bf = BloomFilter.create("sbf", m_bits=m_bits, k=8,
-                                     block_bits=256, backend=backend)
+        self.filt = api.make_filter("sbf", m_bits=m_bits, k=8,
+                                    block_bits=256, backend=backend)
         # rolling buffer of the last n-1 tokens per sequence
         self.hist = np.zeros((batch, n - 1), np.int64) - 1
         self.stats = GuardStats()
+
+    @property
+    def bf(self):
+        """Deprecated read-only alias for ``filt`` (was a mutable
+        BloomFilter). ``guard.bf.add(...)`` no longer records n-grams —
+        reassign ``guard.filt`` instead."""
+        import warnings
+        warnings.warn("NGramGuard.bf is deprecated and read-only; calling "
+                      ".add() on it does NOT update the guard. Use "
+                      "NGramGuard.filt (reassign it to mutate).",
+                      DeprecationWarning, stacklevel=2)
+        return self.filt
 
     def observe(self, tokens: np.ndarray):
         """Record the n-gram completed by `tokens` (B,) and roll history."""
@@ -70,7 +84,7 @@ class NGramGuard:
         ready = (self.hist >= 0).all(axis=1)
         if ready.any():
             keys = _mix_rows(full[ready].astype(np.uint32))
-            self.bf.add(keys)
+            self.filt = self.filt.add(keys)
             self.stats.observed += int(ready.sum())
         self.hist = np.concatenate([self.hist[:, 1:], tokens[:, None]], axis=1)
 
@@ -88,7 +102,7 @@ class NGramGuard:
              np.repeat(self.hist, K, axis=0),
              cand.reshape(-1, 1)], axis=1)                        # (B*K, 1+n)
         keys = _mix_rows(rows.astype(np.uint32))
-        hits = np.asarray(self.bf.contains(keys)).reshape(B, K)
+        hits = np.asarray(self.filt.contains(keys)).reshape(B, K)
         hits = hits & ready[:, None]
         self.stats.penalized += int(hits.sum())
         penalty = jnp.where(jnp.asarray(hits), self.penalty, 0.0)
