@@ -13,8 +13,8 @@ from repro.data import dedup as D
 from repro.data import pipeline as DP
 
 
-def run(csv: Csv):
-    cfg = DP.CorpusConfig(n_docs=3000, dup_fraction=0.25, seed=11)
+def run(csv: Csv, n_docs: int = 3000):
+    cfg = DP.CorpusConfig(n_docs=n_docs, dup_fraction=0.25, seed=11)
     docs = list(DP.synthetic_corpus(cfg))
     dd = D.DedupFilter(expected_docs=1 << 15, bits_per_key=16, batch_docs=256)
     t0 = time.perf_counter()
@@ -24,6 +24,17 @@ def run(csv: Csv):
             f"docs/s={len(docs)/dt:.0f} kept={kept} "
             f"dropped={dd.stats.dropped} fill={dd.filt.fill_fraction():.3f} "
             f"engine={dd.filt.backend}")
+
+    # sliding-window variant: same stream, bounded-memory eviction
+    sd = D.StreamingDedupFilter(window_docs=max(n_docs // 2, 64),
+                                generations=4, batch_docs=256)
+    t0 = time.perf_counter()
+    kept_w = sum(1 for _ in sd.filter_stream(iter(docs)))
+    dt_w = time.perf_counter() - t0
+    csv.add("dedup/stream_windowed", dt_w * 1e6,
+            f"docs/s={len(docs)/dt_w:.0f} kept={kept_w} "
+            f"advances={sd.stats.advances} "
+            f"fill={sd.window.fill_fraction():.3f}")
 
 
 if __name__ == "__main__":

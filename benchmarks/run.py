@@ -10,6 +10,12 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
     fig9_breakdown-> Figure 9 (incremental optimization breakdown)
     dedup         -> framework integration (paper technique in the pipeline)
     api_backends  -> engine registry sweep through the uniform Filter API
+    window        -> forgetting subsystem (fused ring query, counting ops,
+                     decay) — beyond-paper
+
+``--smoke`` runs a tiny-size subset (window + dedup + api_backends) as a CI
+health check for the harness itself; the numbers are meaningless, the point
+is that every bench entry point still executes.
 """
 import argparse
 import sys
@@ -23,6 +29,8 @@ def main(argv=None) -> None:
                     help="comma-separated subset of bench names")
     ap.add_argument("--skip-layout", action="store_true",
                     help="skip the interpret-mode layout grid (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-size CI subset (harness health, not perf)")
     args = ap.parse_args(argv)
 
     csv = Csv()
@@ -30,7 +38,17 @@ def main(argv=None) -> None:
 
     from benchmarks import (api_backends, dedup_pipeline, fig4_frontier,
                             fig5_8_archs, fig9_breakdown, gups, layout_grid,
-                            table1_dram, table2_cache)
+                            table1_dram, table2_cache, window)
+
+    if args.smoke:
+        only = set((args.only or "window,dedup,api_backends").split(","))
+        if "window" in only:
+            window.run(csv, smoke=True)
+        if "dedup" in only:
+            dedup_pipeline.run(csv, n_docs=300)
+        if "api_backends" in only:
+            api_backends.run(csv, m_bits=1 << 14, n_keys=1 << 8)
+        return
 
     benches = {
         "gups": lambda: gups.run(csv),
@@ -42,6 +60,7 @@ def main(argv=None) -> None:
         "layout_grid": lambda: layout_grid.run(csv),
         "dedup": lambda: dedup_pipeline.run(csv),
         "api_backends": lambda: api_backends.run(csv),
+        "window": lambda: window.run(csv),
     }
     only = set(args.only.split(",")) if args.only else None
 
@@ -53,7 +72,7 @@ def main(argv=None) -> None:
     if only is None or "table2_cache" in only:
         table2_cache.run(csv)
     for name in ("fig4_frontier", "fig5_8_archs", "fig9_breakdown", "dedup",
-                 "api_backends"):
+                 "api_backends", "window"):
         if only is None or name in only:
             benches[name]()
     if (only is None and not args.skip_layout) or (only and "layout_grid" in only):

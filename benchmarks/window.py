@@ -1,0 +1,78 @@
+"""Window/counting subsystem benchmarks: the cost of forgetting.
+
+Three questions, answered in interpret-adjusted relative terms off-TPU and
+in real kernel time on TPU:
+
+* **fused vs naive ring query** — one fused OR-ring pass (hash once, OR G
+  rows in the probe) against G independent contains passes + boolean OR
+  (hash G times). The fused pass should approach G-independence.
+* **counting vs bit ops** — the per-key price of 4-bit counters:
+  counting add/remove/contains vs the plain SBF add/contains at the same
+  geometry (4x the words touched, same block locality).
+* **decay** — the full-array aging sweep, reported in GB/s terms via
+  us/call (it is one elementwise pass over 4*n_words).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, keys_u64x2, time_fn
+from repro.core import variants as V
+from repro.window import WindowedFilter
+from repro.window.ring import ring_contains_dispatch
+
+
+def run(csv: Csv, smoke: bool = False) -> None:
+    m_bits = 1 << 14 if smoke else 1 << 18
+    n_keys = 1 << 8 if smoke else 1 << 12
+    G = 4
+    spec = V.FilterSpec("sbf", m_bits, 8, block_bits=256)
+    cspec = V.FilterSpec("countingbf", m_bits, 8, block_bits=256)
+    keys = keys_u64x2(n_keys, seed=7)
+
+    # --- ring: fused vs naive ----------------------------------------------
+    wf = WindowedFilter.create("sbf", m_bits=m_bits, k=8, generations=G)
+    for g in range(G):
+        wf = wf.add(keys_u64x2(n_keys, seed=g)).advance()
+    rings = wf.rings
+
+    def fused(r, k):
+        return ring_contains_dispatch(spec, r, k)
+
+    def naive(r, k):
+        hit = V.contains_rows(spec, r[0], k)
+        for g in range(1, G):                    # G hash+gather passes
+            hit = hit | V.contains_rows(spec, r[g], k)
+        return hit
+
+    t_fused = time_fn(fused, rings, keys)
+    t_naive = time_fn(naive, rings, keys)
+    csv.add("window/ring_contains_fused", t_fused * 1e6,
+            f"Mkeys/s={n_keys / t_fused / 1e6:.1f}")
+    csv.add("window/ring_contains_naive", t_naive * 1e6,
+            f"speedup_fused={t_naive / t_fused:.2f}x")
+
+    t_adv = time_fn(lambda w: w.advance().rings, wf)
+    csv.add("window/advance", t_adv * 1e6, "O(1) generation retire")
+
+    # --- counting vs bit ops -----------------------------------------------
+    bits0 = V.init(spec)
+    cnt0 = V.init(cspec)
+    t_badd = time_fn(lambda f, k: V.add_rows(spec, f, k), bits0, keys)
+    t_cadd = time_fn(lambda f, k: V.counting_add(cspec, f, k), cnt0, keys)
+    cnt1 = V.counting_add(cspec, cnt0, keys)
+    t_crm = time_fn(lambda f, k: V.counting_remove(cspec, f, k), cnt1, keys)
+    t_cq = time_fn(lambda f, k: V.counting_contains(cspec, f, k), cnt1, keys)
+    csv.add("window/bloom_add", t_badd * 1e6,
+            f"Mkeys/s={n_keys / t_badd / 1e6:.1f}")
+    csv.add("window/counting_add", t_cadd * 1e6,
+            f"vs_bloom={t_cadd / t_badd:.2f}x")
+    csv.add("window/counting_remove", t_crm * 1e6,
+            f"Mkeys/s={n_keys / t_crm / 1e6:.1f}")
+    csv.add("window/counting_contains", t_cq * 1e6,
+            f"Mkeys/s={n_keys / t_cq / 1e6:.1f}")
+
+    # --- decay --------------------------------------------------------------
+    t_decay = time_fn(lambda f: V.counting_decay(cspec, f), cnt1)
+    gb = cspec.storage_words * 4 * 2 / 1e9       # read + write
+    csv.add("window/decay", t_decay * 1e6, f"GB/s={gb / t_decay:.2f}")

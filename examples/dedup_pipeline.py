@@ -1,15 +1,20 @@
 """Distributed training-data dedup with Bloom filters.
 
-Runs the data pipeline with the paper's technique at both deployment shapes:
-  1. single-host DedupFilter (bulk ops);
-  2. 8-device replicated engine with butterfly OR merges (spawn with
+Runs the data pipeline with the paper's technique at three deployment shapes:
+  1. single-host DedupFilter (bulk ops, insert-only);
+  2. streaming dedup with eviction: a WindowedFilter generation ring drops
+     duplicates within a sliding window and retires old signatures in O(1),
+     so an unbounded stream never saturates the filter;
+  3. 8-device replicated engine with butterfly OR merges (spawn with
      XLA_FLAGS=--xla_force_host_platform_device_count=8 to see >1 device).
 
-Both shapes are the same ``repro.api`` surface — the deployment is just a
-``backend=`` choice.
+All shapes are the same ``repro.api``/``repro.window`` surface — the
+deployment is just a constructor choice.
 
     PYTHONPATH=src python examples/dedup_pipeline.py
 """
+import itertools
+
 import numpy as np
 import jax
 from jax.sharding import Mesh
@@ -29,6 +34,22 @@ def single_host():
           f"engine {dd.filt.backend!r}")
     rows = list(DP.batches(iter(kept), batch_size=8, seq_len=256))
     print(f"[single-host] packed into {len(rows)} batches of (8, 256)")
+
+
+def streaming_with_eviction():
+    """Unbounded stream: window dedup keeps memory/FPR stationary and lets
+    a duplicate through again once its first occurrence has expired."""
+    sd = D.StreamingDedupFilter(window_docs=2048, generations=4,
+                                batch_docs=128)
+    # loop a small corpus 3x: an insert-only filter would drop every repeat
+    # forever; the window re-admits docs once they fall out of it
+    cfg = DP.CorpusConfig(n_docs=3000, dup_fraction=0.2, seed=2)
+    stream = itertools.chain(*(DP.synthetic_corpus(cfg) for _ in range(3)))
+    kept = sum(1 for _ in sd.filter_stream(stream))
+    print(f"[streaming] {sd.stats.seen} docs -> kept {kept} "
+          f"(dropped {sd.stats.dropped}, {sd.stats.advances} ring advances) "
+          f"window fill {sd.window.fill_fraction():.3f} "
+          f"per-gen fill {np.round(sd.window.generation_fill(), 3)}")
 
 
 def multi_host_replicated():
@@ -57,4 +78,5 @@ def multi_host_replicated():
 
 if __name__ == "__main__":
     single_host()
+    streaming_with_eviction()
     multi_host_replicated()

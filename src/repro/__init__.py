@@ -9,7 +9,7 @@ Public filter surface (see DESIGN.md):
     f = api.filter_for_n_items(1_000_000, bits_per_key=16)
     f = f.add(keys); hits = f.contains(keys)
 """
-__version__ = "0.2.0"
+__version__ = "0.3.0"
 
 from repro import api                                          # noqa: E402
 from repro.api import (Filter, FilterSpec, make_filter,        # noqa: F401

@@ -48,15 +48,19 @@ registry.register_alias("pallas", _legacy_pallas)
 def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
                 block_bits: int = 256, z: int = 1, backend: str = "auto",
                 layout=None, tile: Optional[int] = None, mesh=None,
-                axis: str = "data", capacity: Optional[int] = None) -> Filter:
+                axis: str = "data", capacity: Optional[int] = None,
+                generations: Optional[int] = None) -> Filter:
     """Build an empty :class:`Filter` for an explicit geometry.
 
     ``backend="auto"`` runs the registry's ranked query (pass ``mesh=`` to
-    bring the distributed engines into the candidate set)."""
+    bring the distributed engines into the candidate set). Forgetting
+    filters: ``variant="countingbf"`` selects the counting engine
+    (``remove``/``decay``); ``generations=G`` selects the windowed engine
+    (``advance``)."""
     spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
                       block_bits=block_bits, z=z)
     options = BackendOptions(layout=layout, tile=tile, mesh=mesh, axis=axis,
-                             capacity=capacity)
+                             capacity=capacity, generations=generations)
     eng = registry.select(spec, backend, options.ctx())
     return Filter(spec=spec, words=eng.init(spec, options), backend=eng.name,
                   options=options)
@@ -74,7 +78,7 @@ def filter_for_n_items(n: int, bits_per_key: float = 16.0,
         if variant == "csbf":
             z = kw.get("z", 1)
             k = max(z, (k // z) * z)
-        if variant == "sbf":
+        if variant in ("sbf", "countingbf"):
             s = block_bits // _V.WORD_BITS
             k = max(s, (k // s) * s) if k >= s else k
         k = min(k, 32)

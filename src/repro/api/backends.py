@@ -1,12 +1,21 @@
-"""Single-host engines: the jnp reference and the two Pallas regimes.
+"""Single-host engines: jnp reference, two Pallas regimes, and the
+forgetting engines (counting, windowed).
 
 Cost model (relative, lower = better): the jnp engine is the baseline at
 1.0 on every platform. On TPU the Pallas kernels win (the whole point of
 the paper); off-TPU they run in interpret mode — bit-exact but orders of
 magnitude slower, so ``"auto"`` keeps them for validation only.
+
+The ``counting`` and ``windowed`` engines claim their workloads
+*exclusively*: ``countingbf`` specs belong to ``counting`` and a context
+with ``generations`` set belongs to ``windowed``, so the plain bit engines
+decline both (see ``_plain_bits``). Each dispatches internally — Pallas
+kernels on TPU, jnp reference elsewhere — because there is exactly one
+engine per forgetting strategy and it must be fast everywhere.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import variants as V
@@ -21,6 +30,12 @@ def _single_host(ctx: SelectionContext) -> bool:
     return ctx.mesh is None
 
 
+def _plain_bits(spec: FilterSpec, ctx: SelectionContext) -> bool:
+    """Workloads the ordinary bit engines compete for: not a counting spec,
+    not a windowed (generations) context."""
+    return not spec.is_counting and ctx.generations is None
+
+
 class JnpBackend(Backend):
     """Vectorized pure-jnp reference: one row gather per lookup
     (``contains_rows``) and the sorted segmented-OR bulk insert
@@ -29,7 +44,7 @@ class JnpBackend(Backend):
     name = "jnp"
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
-        return _single_host(ctx)
+        return _single_host(ctx) and _plain_bits(spec, ctx)
 
     def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
         return 1.0
@@ -80,8 +95,8 @@ class PallasVmemBackend(_PallasBackend):
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         from repro.kernels import ops
-        return (_single_host(ctx) and ops.kernel_supported(spec)
-                and self._fits_vmem(spec))
+        return (_single_host(ctx) and _plain_bits(spec, ctx)
+                and ops.kernel_supported(spec) and self._fits_vmem(spec))
 
     def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
         return 0.4 if ctx.platform == "tpu" else _INTERPRET_PENALTY
@@ -97,8 +112,8 @@ class PallasHbmBackend(_PallasBackend):
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         from repro.kernels import ops
         # the classical variant has no block locality to stream by
-        return (_single_host(ctx) and ops.kernel_supported(spec)
-                and spec.variant != "cbf")
+        return (_single_host(ctx) and _plain_bits(spec, ctx)
+                and ops.kernel_supported(spec) and spec.variant != "cbf")
 
     def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
         base = 0.7 if ctx.platform == "tpu" else _INTERPRET_PENALTY + 10.0
@@ -106,7 +121,128 @@ class PallasHbmBackend(_PallasBackend):
         return base if not self._fits_vmem(spec) else base + 0.5
 
 
+class CountingBackend(Backend):
+    """Counting Bloom filter (variant='countingbf'): packed 4-bit saturating
+    counters enabling ``remove`` and ``decay``. Pallas kernels on TPU
+    (ownership-partitioned RMW instead of atomicAdd), jnp bit-plane
+    reference elsewhere. 4x the memory of the equivalent bit filter."""
+
+    name = "counting"
+    supports_remove = True
+    supports_decay = True
+
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        return (_single_host(ctx) and spec.is_counting
+                and ctx.generations is None)
+
+    def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
+        return 1.0   # sole claimant of countingbf specs
+
+    def init(self, spec: FilterSpec, options) -> jnp.ndarray:
+        return V.init(spec)                      # (4*n_words,) counters
+
+    def _tpu(self) -> bool:
+        return jax.default_backend() == "tpu"
+
+    def add(self, spec, words, keys, options):
+        if self._tpu():
+            from repro.kernels import ops
+            return ops.counting_add(spec, words, keys,
+                                    layout=options.layout,
+                                    **({"tile": options.tile}
+                                       if options.tile else {}))
+        return V.counting_add(spec, words, keys)
+
+    def remove(self, spec, words, keys, options):
+        if self._tpu():
+            from repro.kernels import ops
+            return ops.counting_remove(spec, words, keys,
+                                       layout=options.layout,
+                                       **({"tile": options.tile}
+                                          if options.tile else {}))
+        return V.counting_remove(spec, words, keys)
+
+    def contains(self, spec, words, keys, options):
+        if self._tpu():
+            from repro.kernels import ops
+            return ops.counting_contains(spec, words, keys,
+                                         layout=options.layout,
+                                         **({"tile": options.tile}
+                                            if options.tile else {}))
+        return V.counting_contains(spec, words, keys)
+
+    def decay(self, spec, words, options):
+        if self._tpu():
+            from repro.kernels import ops
+            return ops.counting_decay(spec, words)
+        return V.counting_decay(spec, words)
+
+    def merge(self, spec, a, b, options):
+        """Counter-true union: nibble-wise saturating add (NOT bitwise OR —
+        merged counts must support the merged removes)."""
+        nib_a = V._unpack_nibbles(spec, a)
+        nib_b = V._unpack_nibbles(spec, b)
+        return V._pack_nibbles(
+            spec, jnp.minimum(nib_a + nib_b, jnp.uint32(V.COUNTER_MAX)))
+
+    def to_dense(self, spec, words, options):
+        """Canonical view is the occupancy bit filter (counts are an engine
+        detail; cross-engine merge/checkpoint interop stays uniform)."""
+        return V.counting_to_bloom(spec, words)
+
+    def from_dense(self, spec, dense, options):
+        """Occupancy -> counters at 1. Membership-preserving, count-lossy."""
+        return V.counting_from_bloom(spec, dense)
+
+
+class WindowedBackend(Backend):
+    """Generation-ring sliding window (``options.generations`` = G):
+    inserts land in the head generation, queries OR the ring in one fused
+    pass, ``advance()`` retires the oldest generation in O(1). Forgets by
+    *age class*, not per key — 1x memory per generation."""
+
+    name = "windowed"
+    supports_advance = True
+
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        return (_single_host(ctx) and ctx.generations is not None
+                and not spec.is_counting and spec.variant != "cbf")
+
+    def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
+        return 1.0   # sole claimant of generations contexts
+
+    def init(self, spec: FilterSpec, options) -> jnp.ndarray:
+        from repro.window.ring import ring_init
+        return ring_init(spec, options.generations)
+
+    def add(self, spec, words, keys, options):
+        from repro.window.ring import ring_add
+        return ring_add(spec, words, keys, options.head)
+
+    def contains(self, spec, words, keys, options):
+        from repro.window.ring import ring_contains_dispatch
+        return ring_contains_dispatch(spec, words, keys)
+
+    def advance(self, spec, words, options):
+        import dataclasses
+        from repro.window.ring import ring_advance
+        words, head = ring_advance(words, options.head)
+        return words, dataclasses.replace(options, head=head)
+
+    def to_dense(self, spec, words, options):
+        from repro.window.ring import ring_dense
+        return ring_dense(words)
+
+    def from_dense(self, spec, dense, options):
+        """Restore the whole window into the head generation (age classes
+        are not recoverable from the canonical form)."""
+        words = jnp.zeros((options.generations, dense.shape[0]), jnp.uint32)
+        return words.at[options.head].set(dense)
+
+
 def register_all():
     register(JnpBackend())
     register(PallasVmemBackend())
     register(PallasHbmBackend())
+    register(CountingBackend())
+    register(WindowedBackend())

@@ -46,7 +46,10 @@ def _pad_split(keys: jnp.ndarray, n_dev: int):
 
 class _DistBackend(Backend):
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
-        return ctx.mesh is not None
+        # counting specs and windowed (generations) contexts belong to the
+        # single-host forgetting engines for now
+        return (ctx.mesh is not None and not spec.is_counting
+                and ctx.generations is None)
 
     def init(self, spec: FilterSpec, options) -> jnp.ndarray:
         raise NotImplementedError
@@ -95,7 +98,7 @@ class ShardedBackend(_DistBackend):
     name = "sharded"
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
-        if ctx.mesh is None or spec.variant == "cbf":
+        if not _DistBackend.supports(self, spec, ctx) or spec.variant == "cbf":
             return False   # classical filter has no block locality to shard
         n_dev = ctx.mesh.shape[ctx.axis]
         return (n_dev & (n_dev - 1)) == 0 and spec.n_blocks % n_dev == 0

@@ -44,10 +44,13 @@ class BackendOptions:
     mesh: Optional[object] = None      # jax.sharding.Mesh
     axis: str = "data"
     capacity: Optional[int] = None     # sharded routing capacity per (src,dst)
+    generations: Optional[int] = None  # windowed engine: ring size G
+    head: int = 0                      # windowed engine: insert generation
 
     def ctx(self, n_keys_hint: Optional[int] = None) -> registry.SelectionContext:
         return registry.SelectionContext.current(
-            mesh=self.mesh, axis=self.axis, n_keys_hint=n_keys_hint)
+            mesh=self.mesh, axis=self.axis, n_keys_hint=n_keys_hint,
+            generations=self.generations)
 
 
 def as_keys(keys) -> jnp.ndarray:
@@ -113,6 +116,45 @@ class Filter:
             return jnp.zeros((0,), jnp.bool_)
         return _jit_contains(self, keys)
 
+    def remove(self, keys) -> "Filter":
+        """Delete a batch of keys (counting engine only). Safe under the
+        counting contract: no false negatives for keys still present."""
+        if not self.engine.supports_remove:
+            raise NotImplementedError(
+                f"backend {self.backend!r} cannot remove keys; build the "
+                f"filter with variant='countingbf' (engine 'counting')")
+        keys = as_keys(keys)
+        if keys.shape[0] == 0:
+            return self
+        return _jit_remove(self, keys)
+
+    def decay(self, steps: int = 1) -> "Filter":
+        """Age the filter: ``steps`` uniform decrements of every counter
+        (counting engine only). Keys inserted once disappear after one
+        step; keys re-inserted every step persist — time-decayed
+        membership."""
+        if not self.engine.supports_decay:
+            raise NotImplementedError(
+                f"backend {self.backend!r} cannot decay; build the filter "
+                f"with variant='countingbf' (engine 'counting')")
+        out = self
+        for _ in range(steps):
+            out = _jit_decay(out)
+        return out
+
+    def advance(self) -> "Filter":
+        """Slide the window one generation (windowed engine only): the
+        oldest generation is retired in O(1) and becomes the new insert
+        target. Happens at the host level — the head index is static aux
+        data, like rotating to a fresh filter."""
+        if not self.engine.supports_advance:
+            raise NotImplementedError(
+                f"backend {self.backend!r} cannot advance; build the filter "
+                f"with generations=G (engine 'windowed')")
+        words, options = self.engine.advance(self.spec, self.words,
+                                             self.options)
+        return self.replace(words=words, options=options)
+
     def merge(self, other: "Filter") -> "Filter":
         """OR-union. Same spec required; engines may differ (the other
         filter's state is densified and re-homed into self's engine)."""
@@ -159,7 +201,9 @@ class Filter:
 
     @property
     def nbytes(self) -> int:
-        return self.spec.m_bits // 8
+        """Actual backing storage (counting: 4x the bit filter; windowed:
+        G generations; replicated: one replica per device)."""
+        return int(self.words.size) * self.words.dtype.itemsize
 
     # -- checkpointing -------------------------------------------------------
     def to_state(self) -> dict:
@@ -167,10 +211,17 @@ class Filter:
 
         ``checkpoint.save`` accepts either a ``Filter`` directly (it is a
         pytree) or this canonical form; the latter restores into *any*
-        engine via :meth:`from_state`."""
-        return {"words": self.dense_words(),
-                "spec": dataclasses.asdict(self.spec),
-                "backend": self.backend}
+        engine via :meth:`from_state`. Windowed filters additionally
+        record their ring geometry so the default round-trip re-selects
+        the windowed engine (age classes themselves are not part of the
+        canonical form — see DESIGN.md §10)."""
+        state = {"words": self.dense_words(),
+                 "spec": dataclasses.asdict(self.spec),
+                 "backend": self.backend}
+        if self.options.generations is not None:
+            state["options"] = {"generations": self.options.generations,
+                                "head": self.options.head}
+        return state
 
     @classmethod
     def from_state(cls, state: dict, backend: Optional[str] = None,
@@ -178,6 +229,14 @@ class Filter:
         spec = FilterSpec(**{k: (v if isinstance(v, str) else int(v))
                              for k, v in state["spec"].items()})
         name = backend or state.get("backend", "jnp")
+        st_opts = state.get("options") or {}
+        if name == "windowed" and options.generations is None \
+                and "generations" in st_opts:
+            # restore the ring geometry saved by to_state(); an explicit
+            # non-windowed ``backend=`` re-homes the dense union instead
+            options = dataclasses.replace(
+                options, generations=int(st_opts["generations"]),
+                head=int(st_opts.get("head", 0)))
         eng = registry.select(spec, name, options.ctx())
         dense = jnp.asarray(state["words"], jnp.uint32)
         return cls(spec=spec, words=eng.from_dense(spec, dense, options),
@@ -200,3 +259,15 @@ def _jit_add(filt: Filter, keys: jnp.ndarray) -> Filter:
 @jax.jit
 def _jit_contains(filt: Filter, keys: jnp.ndarray) -> jnp.ndarray:
     return filt.engine.contains(filt.spec, filt.words, keys, filt.options)
+
+
+@jax.jit
+def _jit_remove(filt: Filter, keys: jnp.ndarray) -> Filter:
+    new = filt.engine.remove(filt.spec, filt.words, keys, filt.options)
+    return filt.replace(words=new)
+
+
+@jax.jit
+def _jit_decay(filt: Filter) -> Filter:
+    new = filt.engine.decay(filt.spec, filt.words, filt.options)
+    return filt.replace(words=new)

@@ -43,12 +43,14 @@ class SelectionContext:
     mesh: Optional[object] = None      # jax.sharding.Mesh for distributed
     axis: str = "data"
     n_keys_hint: Optional[int] = None  # expected bulk-op batch size
+    generations: Optional[int] = None  # ring size -> selects the windowed engine
 
     @classmethod
     def current(cls, mesh=None, axis: str = "data",
-                n_keys_hint: Optional[int] = None) -> "SelectionContext":
+                n_keys_hint: Optional[int] = None,
+                generations: Optional[int] = None) -> "SelectionContext":
         return cls(platform=jax.default_backend(), mesh=mesh, axis=axis,
-                   n_keys_hint=n_keys_hint)
+                   n_keys_hint=n_keys_hint, generations=generations)
 
 
 class Backend:
@@ -63,6 +65,14 @@ class Backend:
 
     name: str = "?"
 
+    # Capability flags: which beyond-insert ops this engine implements.
+    # ``Filter.remove``/``decay``/``advance`` check these before dispatch so
+    # unsupported engines fail with a clear error instead of an attribute
+    # surprise deep in jit.
+    supports_remove: bool = False      # per-key deletion (counting)
+    supports_decay: bool = False       # uniform aging step (counting)
+    supports_advance: bool = False     # window slide (generation ring)
+
     # -- capability / ranking ------------------------------------------------
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         raise NotImplementedError
@@ -73,7 +83,10 @@ class Backend:
         raise NotImplementedError
 
     def describe(self) -> Dict[str, str]:
-        return {"name": self.name, "doc": (self.__doc__ or "").strip()}
+        return {"name": self.name, "doc": (self.__doc__ or "").strip(),
+                "supports_remove": self.supports_remove,
+                "supports_decay": self.supports_decay,
+                "supports_advance": self.supports_advance}
 
     # -- storage -------------------------------------------------------------
     def init(self, spec: FilterSpec, options) -> jnp.ndarray:
@@ -106,6 +119,27 @@ class Backend:
               options) -> jnp.ndarray:
         """OR-union of two same-shape word arrays (default: elementwise)."""
         return a | b
+
+    # -- forgetting ops (counting / windowed engines only) -------------------
+    def remove(self, spec: FilterSpec, words: jnp.ndarray, keys: jnp.ndarray,
+               options) -> jnp.ndarray:
+        """Delete ``keys`` (counting engines); returns new words."""
+        raise NotImplementedError(
+            f"engine {self.name!r} does not support remove(); use the "
+            f"'counting' engine (variant='countingbf')")
+
+    def decay(self, spec: FilterSpec, words: jnp.ndarray, options
+              ) -> jnp.ndarray:
+        """One uniform aging step (counting engines); returns new words."""
+        raise NotImplementedError(
+            f"engine {self.name!r} does not support decay(); use the "
+            f"'counting' engine (variant='countingbf')")
+
+    def advance(self, spec: FilterSpec, words: jnp.ndarray, options):
+        """Slide the window (windowed engine): returns (words, options)."""
+        raise NotImplementedError(
+            f"engine {self.name!r} does not support advance(); use the "
+            f"'windowed' engine (generations=...)")
 
 
 _REGISTRY: Dict[str, Backend] = {}

@@ -1,8 +1,9 @@
 """Core: the paper's contribution — TPU-native Bloom filter substrate."""
 from repro.core.variants import (FilterSpec, VARIANTS, WORD_BITS, init, add,
                                  add_loop, add_scatter, contains,
+                                 counting_add, counting_contains,
+                                 counting_decay, counting_remove,
                                  fill_fraction, fpr_theory, fpr_cbf, fpr_bbf,
                                  fpr_sbf, fpr_csbf, optimal_k, fpr_min,
                                  space_optimal_n)
-from repro.core.filter import BloomFilter
 from repro.core import hashing

@@ -25,12 +25,11 @@ Two deployment shapes, both built on ``shard_map``:
     is dropped (a missed dedup, not a correctness bug).
 
 This module holds the **pure collective transforms** (``replicated_*`` /
-``sharded_*`` functions). They are consumed two ways:
-
-* the ``"replicated"`` / ``"sharded"`` engines in ``repro.api.registry`` —
-  the supported surface, conforming to the uniform ``Filter`` protocol;
-* the legacy ``ReplicatedFilter`` / ``ShardedFilter`` classes below, kept
-  for one release as deprecation shims.
+``sharded_*`` functions), consumed by the ``"replicated"`` / ``"sharded"``
+engines in ``repro.api.registry`` — the supported surface, conforming to
+the uniform ``Filter`` protocol. (The one-release ``ReplicatedFilter`` /
+``ShardedFilter`` shims have been removed; use
+``repro.api.make_filter(..., backend=..., mesh=...)``.)
 
 Scale note (1000+ nodes): the sharded shape keeps per-device memory at m/n
 and turns the paper's DRAM-random-access bound into a VMEM-resident-segment
@@ -38,9 +37,6 @@ workload — the multi-device generalization of the paper's cache-resident
 fast path.
 """
 from __future__ import annotations
-
-import dataclasses
-import warnings
 
 import numpy as np
 import jax
@@ -264,95 +260,3 @@ def sharded_contains(spec: FilterSpec, mesh: Mesh, axis: str, capacity: int,
     return fn(words, keys_sharded)
 
 
-# ---------------------------------------------------------------------------
-# Legacy class shims (deprecated — use repro.api.make_filter instead)
-# ---------------------------------------------------------------------------
-
-def _warn_deprecated(old: str):
-    warnings.warn(
-        f"{old} is deprecated; use repro.api.make_filter(..., "
-        f"backend=..., mesh=...) — the pytree-native Filter over the same "
-        f"collectives.", DeprecationWarning, stacklevel=3)
-
-
-@dataclasses.dataclass
-class ReplicatedFilter:
-    """Deprecated shim over the ``replicated_*`` transforms (one release)."""
-
-    spec: FilterSpec
-    mesh: Mesh
-    axis: str
-    words: jnp.ndarray                    # (n_dev, n_words): one replica per device
-    pending_syncs: int = 0
-
-    @classmethod
-    def create(cls, spec: FilterSpec, mesh: Mesh, axis: str = "data"):
-        _warn_deprecated("ReplicatedFilter")
-        return cls(spec=spec, mesh=mesh, axis=axis,
-                   words=replicated_init(spec, mesh, axis))
-
-    def add_local(self, keys_sharded: jnp.ndarray) -> "ReplicatedFilter":
-        self.words = replicated_add_local(self.spec, self.mesh, self.axis,
-                                          self.words, keys_sharded)
-        self.pending_syncs += 1
-        return self
-
-    # NB: deliberately NOT aliased to ``add``/``contains`` — the uniform
-    # Filter protocol takes flat (n, 2) keys and promises no false
-    # negatives, while these legacy methods take (n_dev, n_local, 2) and
-    # expose the pre-sync per-replica view. The protocol-conforming
-    # spelling is repro.api.make_filter(..., backend="replicated").
-
-    def sync(self, method: str = "butterfly") -> "ReplicatedFilter":
-        self.words = replicated_sync(self.spec, self.mesh, self.axis,
-                                     self.words, method=method)
-        self.pending_syncs = 0
-        return self
-
-    def contains_local(self, keys_sharded: jnp.ndarray) -> jnp.ndarray:
-        return replicated_contains_local(self.spec, self.mesh, self.axis,
-                                         self.words, keys_sharded)
-
-    def global_words(self) -> jnp.ndarray:
-        """Host view of replica 0 (call after sync() for the global filter)."""
-        return self.words[0]
-
-
-@dataclasses.dataclass
-class ShardedFilter:
-    """Deprecated shim over the ``sharded_*`` transforms (one release)."""
-
-    spec: FilterSpec
-    mesh: Mesh
-    axis: str
-    words: jnp.ndarray                    # (n_words,) sharded on `axis`
-    capacity: int                         # per (src, dst) routing capacity
-
-    @classmethod
-    def create(cls, spec: FilterSpec, mesh: Mesh, axis: str = "data",
-               capacity: int = 1024):
-        _warn_deprecated("ShardedFilter")
-        return cls(spec=spec, mesh=mesh, axis=axis,
-                   words=sharded_init(spec, mesh, axis), capacity=capacity)
-
-    @property
-    def n_dev(self) -> int:
-        return self.mesh.shape[self.axis]
-
-    @property
-    def blocks_per_seg(self) -> int:
-        return self.spec.n_blocks // self.n_dev
-
-    def add(self, keys_sharded: jnp.ndarray) -> "ShardedFilter":
-        """keys_sharded: (n_dev, n_local, 2) sharded on axis 0."""
-        self.words = sharded_add(self.spec, self.mesh, self.axis,
-                                 self.capacity, self.words, keys_sharded)
-        return self
-
-    def contains(self, keys_sharded: jnp.ndarray) -> jnp.ndarray:
-        """Returns (n_dev, n_local) bool, sharded like the keys."""
-        return sharded_contains(self.spec, self.mesh, self.axis,
-                                self.capacity, self.words, keys_sharded)
-
-    def fill_fraction(self) -> float:
-        return float(V.fill_fraction(self.words))

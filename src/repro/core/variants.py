@@ -24,12 +24,20 @@ SBF    bit i lives in word ``i mod s`` of the block — even spread, whole-word
        test, vectorizable (the paper's main subject).
 CSBF   the s words are split into z groups of g = s/z; one word per group is
        selected by hash and receives k/z bits (Lang et al. layout).
+COUNTINGBF
+       SBF bit placement, but every logical bit is a packed 4-bit saturating
+       counter (8 per uint32), enabling ``remove`` and ``decay`` — the
+       deletable-filter capability GPU counting filters buy with atomicAdd
+       and we buy with ownership partitioning (DESIGN.md §10). Storage is
+       4x the bit filter: logical word w expands to counter words
+       [4w, 4w+4); bit i of w lives in counter word 4w + i//8, nibble i%8.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from functools import partial
+from typing import Optional
 
 import numpy as np
 import jax
@@ -40,7 +48,14 @@ from repro.core import hashing as H
 WORD_BITS = 32
 _LOG2_WORD = 5
 
-VARIANTS = ("cbf", "bbf", "rbbf", "sbf", "csbf")
+VARIANTS = ("cbf", "bbf", "rbbf", "sbf", "csbf", "countingbf")
+
+# Packed 4-bit counters (countingbf): expansion factor and nibble geometry.
+COUNTER_BITS = 4
+NIBBLES_PER_WORD = WORD_BITS // COUNTER_BITS          # 8
+COUNTER_WORDS_PER_WORD = WORD_BITS // NIBBLES_PER_WORD  # 4
+COUNTER_MAX = (1 << COUNTER_BITS) - 1                 # 15 (saturation value)
+_NIB_LSB = np.uint32(0x11111111)                      # LSB of every nibble
 
 
 def _log2i(x: int) -> int:
@@ -78,6 +93,22 @@ class FilterSpec:
         return self.m_bits // WORD_BITS
 
     @property
+    def is_counting(self) -> bool:
+        return self.variant == "countingbf"
+
+    @property
+    def storage_words(self) -> int:
+        """uint32 words of backing storage: 4x the logical words for the
+        counting variant (4-bit counter per logical bit), 1x otherwise."""
+        return self.n_words * (COUNTER_WORDS_PER_WORD if self.is_counting
+                               else 1)
+
+    @property
+    def counter_row_words(self) -> int:
+        """Counter words per block (countingbf): 4 per logical word."""
+        return self.s * COUNTER_WORDS_PER_WORD
+
+    @property
     def s(self) -> int:
         """Words per block."""
         return self.block_bits // WORD_BITS
@@ -101,7 +132,7 @@ class FilterSpec:
 
 
 def init(spec: FilterSpec) -> jnp.ndarray:
-    return jnp.zeros((spec.n_words,), dtype=jnp.uint32)
+    return jnp.zeros((spec.storage_words,), dtype=jnp.uint32)
 
 
 # ---------------------------------------------------------------------------
@@ -124,7 +155,7 @@ def block_patterns(spec: FilterSpec, h_pattern: jnp.ndarray,
     s = spec.s
     masks = jnp.zeros((n, s), dtype=jnp.uint32)
 
-    if spec.variant in ("sbf",):
+    if spec.variant in ("sbf", "countingbf"):   # identical bit placement
         # `batched=False` keeps every salt a scalar literal — required inside
         # Pallas kernel bodies, which may not capture array constants.
         if spec.k % s == 0 and batched:
@@ -204,6 +235,8 @@ def _hashes(keys: jnp.ndarray):
 
 def contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
     """Vectorized bulk membership test. Returns (n,) bool."""
+    if spec.is_counting:
+        return counting_contains(spec, filt, keys)
     h1, h2 = _hashes(keys)
     if spec.variant == "cbf":
         pos = cbf_positions(spec, h1, h2)                       # (n, k)
@@ -286,7 +319,7 @@ def contains_rows(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray
     the paper's one-cache-line-per-query property, restored at the XLA
     gather level. Semantics identical to ``contains``.
     """
-    if spec.variant == "cbf":
+    if spec.variant == "cbf" or spec.is_counting:
         return contains(spec, filt, keys)
     h1, h2 = _hashes(keys)
     blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
@@ -335,6 +368,8 @@ def add_rows(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray
 
 def add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
         method: str = "rows") -> jnp.ndarray:
+    if spec.is_counting:
+        return counting_add(spec, filt, keys)
     if method == "loop":
         return add_loop(spec, filt, keys)
     if method == "scatter":
@@ -348,6 +383,233 @@ def fill_fraction(filt: jnp.ndarray) -> jnp.ndarray:
     """Fraction of set bits (useful health metric for dedup filters)."""
     pop = jax.lax.population_count(filt.view(jnp.int32) if filt.dtype != jnp.uint32 else filt)
     return jnp.sum(pop.astype(jnp.float32)) / (filt.shape[0] * WORD_BITS)
+
+
+# ---------------------------------------------------------------------------
+# Counting filter (countingbf): packed 4-bit saturating counters
+# ---------------------------------------------------------------------------
+# Nibble-parallel bit tricks operate on all 8 counters of a uint32 at once;
+# they are plain vector ops, so the same helpers run inside Pallas kernel
+# bodies (kernels/countingbf.py) and in the jnp reference below.
+#
+# Update semantics (order-independent within one bulk op, which is what
+# makes the sequential kernels bit-exact against the vectorized reference):
+#   increment: saturate at 15; a saturated counter sticks forever (it can no
+#              longer prove its true count, so decrements must skip it too —
+#              the standard counting-Bloom rule that preserves
+#              no-false-negatives under remove).
+#   remove:    decrement counters in (0, 15); 0 is an underflow guard, 15 is
+#              sticky.
+#   decay:     decrement EVERY nonzero counter, including saturated ones —
+#              aging deliberately forgets; stale keys gaining false
+#              negatives is the point.
+
+
+def nib_saturated(w: jnp.ndarray) -> jnp.ndarray:
+    """1 at the LSB of each nibble that equals 15 (saturated)."""
+    return w & (w >> jnp.uint32(1)) & (w >> jnp.uint32(2)) \
+        & (w >> jnp.uint32(3)) & _NIB_LSB
+
+
+def nib_nonzero(w: jnp.ndarray) -> jnp.ndarray:
+    """1 at the LSB of each nibble that is nonzero."""
+    return (w | (w >> jnp.uint32(1)) | (w >> jnp.uint32(2))
+            | (w >> jnp.uint32(3))) & _NIB_LSB
+
+
+def sat_inc_word(w: jnp.ndarray, inc: jnp.ndarray) -> jnp.ndarray:
+    """Saturating +1 on the nibbles flagged (value 1) in ``inc``."""
+    return w + (inc & ~nib_saturated(w))
+
+
+def guard_dec_word(w: jnp.ndarray, dec: jnp.ndarray) -> jnp.ndarray:
+    """Guarded -1 on flagged nibbles: skips 0 (underflow) and 15 (sticky)."""
+    return w - (dec & nib_nonzero(w) & ~nib_saturated(w))
+
+
+def decay_word(w: jnp.ndarray) -> jnp.ndarray:
+    """-1 on every nonzero nibble (aging step; saturated counters decay too)."""
+    return w - nib_nonzero(w)
+
+
+def expand_mask_words(masks: jnp.ndarray) -> jnp.ndarray:
+    """Logical bit masks -> nibble-increment words, (..., s) -> (..., 4s).
+
+    Byte c of logical word j maps to counter word 4j+c; bit b of that byte
+    becomes nibble b (value 1). All loops unroll at trace time."""
+    cols = []
+    for c in range(COUNTER_WORDS_PER_WORD):
+        byte = (masks >> jnp.uint32(8 * c)) & jnp.uint32(0xFF)
+        inc = jnp.zeros_like(masks)
+        for b in range(NIBBLES_PER_WORD):
+            inc = inc | (((byte >> jnp.uint32(b)) & jnp.uint32(1))
+                         << jnp.uint32(COUNTER_BITS * b))
+        cols.append(inc)
+    out = jnp.stack(cols, axis=-1)
+    return out.reshape(*masks.shape[:-1],
+                       masks.shape[-1] * COUNTER_WORDS_PER_WORD)
+
+
+def collapse_counter_words(cwords: jnp.ndarray) -> jnp.ndarray:
+    """Occupancy view: counter words -> logical bit words, (..., 4s) -> (..., s).
+
+    Bit i of the result is set iff the counter for logical bit i is nonzero.
+    Exact inverse direction of :func:`expand_mask_words`."""
+    nzb = nib_nonzero(cwords)                 # bit 4b <-> nibble b nonzero
+    byte = jnp.zeros_like(cwords)
+    for b in range(NIBBLES_PER_WORD):
+        byte = byte | (((nzb >> jnp.uint32(COUNTER_BITS * b))
+                        & jnp.uint32(1)) << jnp.uint32(b))
+    b4 = byte.reshape(*cwords.shape[:-1],
+                      cwords.shape[-1] // COUNTER_WORDS_PER_WORD,
+                      COUNTER_WORDS_PER_WORD)
+    return (b4[..., 0] | (b4[..., 1] << jnp.uint32(8))
+            | (b4[..., 2] << jnp.uint32(16)) | (b4[..., 3] << jnp.uint32(24)))
+
+
+def counting_to_bloom(spec: FilterSpec, counters: jnp.ndarray) -> jnp.ndarray:
+    """Collapse a counting filter to the equivalent (n_words,) bit filter."""
+    assert spec.is_counting
+    return collapse_counter_words(counters[None])[0]
+
+
+def counting_from_bloom(spec: FilterSpec, bits: jnp.ndarray) -> jnp.ndarray:
+    """Bit filter -> counting filter with every set bit's counter at 1.
+
+    Membership-preserving but count-lossy — the inverse of
+    :func:`counting_to_bloom` only up to occupancy."""
+    assert spec.is_counting
+    return expand_mask_words(bits[None])[0]
+
+
+def _counting_layout(spec: FilterSpec, keys: jnp.ndarray):
+    h1, h2 = _hashes(keys)
+    blk = H.block_index(h2, spec.n_blocks)
+    masks = block_patterns(spec, h1)                   # (n, s) logical masks
+    return blk, masks
+
+
+def _bit_counts(spec: FilterSpec, blk: jnp.ndarray, masks: jnp.ndarray,
+                valid: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """(n_words, 32) uint32: number of (valid) keys targeting each logical
+    bit. Column order == flat nibble order, so it aligns with
+    :func:`_unpack_nibbles` without any permutation."""
+    word_idx = (blk[:, None] * jnp.uint32(spec.s)
+                + jnp.arange(spec.s, dtype=jnp.uint32)[None, :]
+                ).astype(jnp.int32).reshape(-1)
+    vals = masks
+    if valid is not None:
+        vals = vals * valid.astype(jnp.uint32)[:, None]
+    vals = vals.reshape(-1)
+    counts = jnp.zeros((spec.n_words, WORD_BITS), jnp.uint32)
+    for b in range(WORD_BITS):
+        plane = (vals >> jnp.uint32(b)) & jnp.uint32(1)
+        counts = counts.at[word_idx, b].add(plane)
+    return counts
+
+
+def _unpack_nibbles(spec: FilterSpec, counters: jnp.ndarray) -> jnp.ndarray:
+    """(4*n_words,) packed -> (n_words, 32) one uint32 per logical bit."""
+    nib = jnp.stack([(counters >> jnp.uint32(COUNTER_BITS * b))
+                     & jnp.uint32(COUNTER_MAX)
+                     for b in range(NIBBLES_PER_WORD)], axis=-1)
+    return nib.reshape(spec.n_words, WORD_BITS)
+
+
+def _pack_nibbles(spec: FilterSpec, nib: jnp.ndarray) -> jnp.ndarray:
+    """(n_words, 32) -> (4*n_words,) packed counter words."""
+    nib = nib.reshape(-1, NIBBLES_PER_WORD)
+    out = jnp.zeros((nib.shape[0],), jnp.uint32)
+    for b in range(NIBBLES_PER_WORD):
+        out = out | (nib[:, b].astype(jnp.uint32)
+                     << jnp.uint32(COUNTER_BITS * b))
+    return out
+
+
+def counting_add(spec: FilterSpec, counters: jnp.ndarray, keys: jnp.ndarray,
+                 valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Vectorized bulk increment (saturating at 15).
+
+    Saturating increments commute, so the batch result equals any sequential
+    order: new = min(old + per-bit-count, 15). ``valid`` masks padded slots —
+    counting updates are NOT idempotent, so repeat-key padding is forbidden
+    here (see kernels/ops.py)."""
+    assert spec.is_counting
+    blk, masks = _counting_layout(spec, keys)
+    counts = _bit_counts(spec, blk, masks, valid)
+    nib = _unpack_nibbles(spec, counters)
+    new = jnp.minimum(nib + counts, jnp.uint32(COUNTER_MAX))
+    return _pack_nibbles(spec, new)
+
+
+def counting_remove(spec: FilterSpec, counters: jnp.ndarray, keys: jnp.ndarray,
+                    valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Vectorized bulk decrement (guarded: 0 floors, 15 is sticky)."""
+    assert spec.is_counting
+    blk, masks = _counting_layout(spec, keys)
+    counts = _bit_counts(spec, blk, masks, valid)
+    nib = _unpack_nibbles(spec, counters).astype(jnp.int32)
+    dec = jnp.maximum(nib - counts.astype(jnp.int32), 0).astype(jnp.uint32)
+    new = jnp.where(nib == COUNTER_MAX, jnp.uint32(COUNTER_MAX), dec)
+    return _pack_nibbles(spec, new)
+
+
+def counting_contains(spec: FilterSpec, counters: jnp.ndarray,
+                      keys: jnp.ndarray) -> jnp.ndarray:
+    """(n,) bool: all k counters of the key nonzero (one row gather/key)."""
+    assert spec.is_counting
+    blk, masks = _counting_layout(spec, keys)
+    rows = counters.reshape(spec.n_blocks, spec.counter_row_words
+                            )[blk.astype(jnp.int32)]             # (n, 4s)
+    logical = collapse_counter_words(rows)                       # (n, s)
+    return jnp.all((logical & masks) == masks, axis=-1)
+
+
+def counting_count(spec: FilterSpec, counters: jnp.ndarray,
+                   keys: jnp.ndarray) -> jnp.ndarray:
+    """(n,) uint32 min-counter estimate of each key's multiplicity
+    (count-min style upper bound; 15 means 'at least 15')."""
+    assert spec.is_counting
+    blk, masks = _counting_layout(spec, keys)
+    rows = counters.reshape(spec.n_blocks, spec.counter_row_words
+                            )[blk.astype(jnp.int32)]             # (n, 4s)
+    nib = jnp.stack([(rows >> jnp.uint32(COUNTER_BITS * b))
+                     & jnp.uint32(COUNTER_MAX)
+                     for b in range(NIBBLES_PER_WORD)], axis=-1)
+    nib = nib.reshape(rows.shape[0], spec.s, WORD_BITS)          # (n, s, 32)
+    bit = (masks[:, :, None] >> jnp.arange(WORD_BITS, dtype=jnp.uint32)
+           [None, None, :]) & jnp.uint32(1)
+    sel = jnp.where(bit == 1, nib, jnp.uint32(COUNTER_MAX + 1))
+    return jnp.min(sel.reshape(rows.shape[0], -1), axis=-1)
+
+
+def counting_decay(spec: FilterSpec, counters: jnp.ndarray) -> jnp.ndarray:
+    """One aging step: every nonzero counter loses 1 (pure elementwise)."""
+    assert spec.is_counting
+    return decay_word(counters)
+
+
+def counting_update_loop(spec: FilterSpec, counters: jnp.ndarray,
+                         keys: jnp.ndarray, valid: Optional[jnp.ndarray],
+                         op: str) -> jnp.ndarray:
+    """Sequential (fori_loop) oracle mirroring the Pallas kernels exactly:
+    one dynamic-slice RMW of the key's 4s-word counter row per key."""
+    assert spec.is_counting and op in ("add", "remove")
+    blk, masks = _counting_layout(spec, keys)
+    cmasks = expand_mask_words(masks)                            # (n, 4s)
+    if valid is not None:
+        cmasks = cmasks * valid.astype(jnp.uint32)[:, None]
+    cs = spec.counter_row_words
+    starts = (blk * jnp.uint32(cs)).astype(jnp.int32)
+    update = sat_inc_word if op == "add" else guard_dec_word
+
+    def body(i, f):
+        start = starts[i]
+        row = jax.lax.dynamic_slice(f, (start,), (cs,))
+        return jax.lax.dynamic_update_slice(f, update(row, cmasks[i]),
+                                            (start,))
+
+    return jax.lax.fori_loop(0, keys.shape[0], body, counters)
 
 
 # ---------------------------------------------------------------------------
@@ -420,7 +682,7 @@ def fpr_theory(spec: FilterSpec, n: int) -> float:
         return fpr_cbf(spec.m_bits, n, spec.k)
     if spec.variant in ("bbf", "rbbf"):
         return fpr_bbf(spec.block_bits, c, spec.k)
-    if spec.variant == "sbf":
+    if spec.variant in ("sbf", "countingbf"):   # identical bit placement
         return fpr_sbf(spec.block_bits, WORD_BITS, c, spec.k)
     if spec.variant == "csbf":
         return fpr_csbf(spec.block_bits, WORD_BITS, c, spec.k, spec.z)

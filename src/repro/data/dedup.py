@@ -12,6 +12,17 @@ Bloom semantics for dedup: a false positive drops a *unique* document
 (bounded by the filter's FPR — pick c accordingly); a false negative never
 happens, so no duplicate is ever *guaranteed* through. Near-duplicates are
 out of scope (signature equality = exact token match).
+
+Two deployment shapes:
+
+* :class:`DedupFilter` — insert-only, exact over the whole corpus; right
+  when the corpus is bounded and sized for up front.
+* :class:`StreamingDedupFilter` — **sliding-window dedup with eviction**
+  over a :class:`repro.window.WindowedFilter` generation ring: duplicates
+  are dropped only while their first occurrence is within the last
+  ``window_docs`` documents; older signatures are retired in O(1) by
+  ring advances, so memory and FPR stay bounded on an *unbounded* stream
+  (the insert-only filter would saturate and drop everything).
 """
 from __future__ import annotations
 
@@ -21,6 +32,7 @@ from typing import Iterator, List, Optional
 import numpy as np
 
 from repro import api
+from repro.window import WindowedFilter
 
 
 def doc_signature(tokens: np.ndarray) -> np.ndarray:
@@ -101,18 +113,6 @@ class DedupFilter:
         self.batch_docs = batch_docs
         self.stats = DedupStats()
 
-    @property
-    def bf(self):
-        """Deprecated read-only alias for ``filt`` (was a mutable
-        BloomFilter). ``dd.bf.add(...)`` no longer mutates the stage —
-        reassign ``dd.filt`` instead."""
-        import warnings
-        warnings.warn("DedupFilter.bf is deprecated and read-only; calling "
-                      ".add() on it does NOT update the dedup stage. Use "
-                      "DedupFilter.filt (reassign it to mutate).",
-                      DeprecationWarning, stacklevel=2)
-        return self.filt
-
     def filter_stream(self, docs: Iterator[np.ndarray]) -> Iterator[np.ndarray]:
         buf: List[np.ndarray] = []
         for doc in docs:
@@ -150,5 +150,81 @@ class DedupFilter:
             kept = set()
         self.stats.seen += len(docs)
         self.stats.dropped += len(docs) - len(kept)
+        for i in sorted(kept):
+            yield docs[i]
+
+
+@dataclasses.dataclass
+class StreamingDedupStats(DedupStats):
+    advances: int = 0     # generations retired (evictions happen here)
+
+
+class StreamingDedupFilter:
+    """Sliding-window dedup over an unbounded stream, with eviction.
+
+    Holds a :class:`repro.window.WindowedFilter`: signatures land in the
+    head generation, lookups OR the ring in one fused pass, and every
+    ``window_docs / generations`` admitted documents the ring advances —
+    retiring the oldest generation (its signatures become re-admissible).
+    Memory is fixed at ``generations`` sub-filters each sized for the
+    per-generation load, so drop-rate and FPR are stationary no matter how
+    long the stream runs.
+
+    Within the live window the no-false-negative guarantee holds: a
+    duplicate of a document seen fewer than ``window_docs`` (at least
+    ``window_docs * (G-1)/G``) documents ago is always dropped.
+    """
+
+    def __init__(self, window_docs: int = 1 << 16, generations: int = 4,
+                 bits_per_key: float = 16.0, variant: str = "sbf",
+                 block_bits: int = 256, batch_docs: int = 256):
+        self.window = WindowedFilter.for_window(
+            window_docs, bits_per_key=bits_per_key, generations=generations,
+            variant=variant, block_bits=block_bits)
+        self.batch_docs = batch_docs
+        self.advance_every = max(window_docs // generations, 1)
+        self._since_advance = 0
+        self.stats = StreamingDedupStats()
+
+    def filter_stream(self, docs: Iterator[np.ndarray]) -> Iterator[np.ndarray]:
+        buf: List[np.ndarray] = []
+        for doc in docs:
+            buf.append(doc)
+            if len(buf) >= self.batch_docs:
+                yield from self._flush(buf)
+                buf = []
+        if buf:
+            yield from self._flush(buf)
+
+    def _flush(self, docs: List[np.ndarray]):
+        sigs = doc_signatures_batch(docs)                        # (n, 2)
+        present = np.asarray(self.window.contains(sigs))
+        fresh_idx = np.nonzero(~present)[0]
+        kept = set()
+        if len(fresh_idx):
+            seen_in_batch = {}
+            keep = []
+            for i in fresh_idx:
+                key = sigs[i].tobytes()
+                if key not in seen_in_batch:
+                    seen_in_batch[key] = True
+                    keep.append(i)
+            # pad to batch capacity: ring generations are bit filters, so
+            # repeat-key padding stays OR-idempotent (stable shapes)
+            add_sigs = sigs[np.array(keep)]
+            pad = self.batch_docs - len(add_sigs)
+            if pad > 0:
+                add_sigs = np.concatenate(
+                    [add_sigs, np.repeat(add_sigs[-1:], pad, axis=0)])
+            self.window = self.window.add(add_sigs)
+            kept = set(keep)
+        self.stats.seen += len(docs)
+        self.stats.dropped += len(docs) - len(kept)
+        # advance on *admitted* docs: the window is measured in kept load
+        self._since_advance += len(kept)
+        while self._since_advance >= self.advance_every:
+            self.window = self.window.advance()
+            self.stats.advances += 1
+            self._since_advance -= self.advance_every
         for i in sorted(kept):
             yield docs[i]

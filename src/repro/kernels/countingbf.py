@@ -1,0 +1,395 @@
+"""Pallas TPU kernels for the counting Bloom filter (countingbf).
+
+Same (Θ, Φ) layout machinery and residency regimes as ``kernels.sbf``, but
+every logical bit is a packed 4-bit saturating counter, so three things
+change:
+
+* rows are **4s counter words** per block instead of s bit words — the Φ
+  chunking runs over the expanded row;
+* the per-key op is a **read-modify-write with carry-free nibble
+  arithmetic** (``sat_inc_word`` / ``guard_dec_word`` from core.variants —
+  plain vector ops, so the identical helpers run in the jnp reference);
+* **padding is valid-masked, never repeat-key**: counting updates are not
+  OR-idempotent, so a repeated padding key would double-count. Invalid
+  slots carry an all-zero increment row (RMW no-op).
+
+Ownership replaces atomics exactly as for the bit kernels: sequential-grid
+RMW in the vmem/hbm paths, and a PARALLEL grid over exclusively-owned
+filter segments in the partitioned path (``update_partitioned``) — the
+TPU answer to the GPU's per-counter ``atomicAdd``/``atomicSub``
+(DESIGN.md §10). Decrements ride the same partitioned path as increments.
+
+All kernels validate bit-exactly against ``core.variants.counting_*`` /
+``counting_update_loop`` in interpret mode (tests/test_counting.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing as H
+from repro.core import variants as V
+from repro.core.variants import FilterSpec
+from repro.kernels.sbf import (DEFAULT_TILE, Layout, _COMPILER_PARAMS,
+                               _mask_row, _take_scalar)
+
+
+def _cfingerprints(spec: FilterSpec, keys: jnp.ndarray,
+                   valid: jnp.ndarray = None):
+    """Lockstep phase 1 for counting kernels.
+
+    Returns (cstarts[int32], cmasks[uint32 (n, 4s)]): counter-row starts and
+    nibble-increment words, already valid-masked (padded slots -> all-zero
+    rows, an RMW no-op)."""
+    h1 = H.xxh32_u64x2(keys, H.SEED_PATTERN)
+    h2 = H.xxh32_u64x2(keys, H.SEED_BLOCK)
+    blk = H.block_index(h2, spec.n_blocks)
+    masks = V.block_patterns(spec, h1, batched=False)
+    cmasks = V.expand_mask_words(masks)                       # (n, 4s)
+    if valid is not None:
+        cmasks = cmasks * valid.astype(jnp.uint32)[:, None]
+    cstarts = (blk * jnp.uint32(spec.counter_row_words)).astype(jnp.int32)
+    return cstarts, cmasks
+
+
+def _update(op: str):
+    return V.sat_inc_word if op == "add" else V.guard_dec_word
+
+
+def counting_layout(spec: FilterSpec, layout: Layout, tile: int) -> Layout:
+    """Validate a (Θ, Φ) layout against the expanded 4s-word counter row."""
+    cs = spec.counter_row_words
+    phi = min(layout.phi, cs)
+    assert cs % phi == 0, f"phi={phi} must divide 4s={cs}"
+    assert tile % layout.theta == 0
+    return Layout(layout.theta, phi)
+
+
+def default_counting_layout(spec: FilterSpec, op: str) -> Layout:
+    """Counting analogue of ``sbf.default_layout``: same Θ̂ rules, Φ scaled
+    to the 4x-wider counter row."""
+    cs = spec.counter_row_words
+    if op == "contains":
+        theta = min(max(1, spec.block_bits // 256), 8)
+        return Layout(theta, max(1, min(8, cs // theta)))
+    theta = min(spec.s, 8)
+    return Layout(theta, max(1, min(cs // theta, 8)))
+
+
+# ---------------------------------------------------------------------------
+# VMEM-resident kernels
+# ---------------------------------------------------------------------------
+
+def _update_vmem_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
+                        spec: FilterSpec, layout: Layout, tile: int, op: str):
+    cs, theta, phi = spec.counter_row_words, layout.theta, layout.phi
+    n_chunks = cs // phi
+    update = _update(op)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...])
+
+    def group_body(g, carry):
+        base = g * theta
+        for t in range(theta):                      # static unroll over Θ
+            i = base + t
+            st = _take_scalar(cstarts, i)
+            mrow = _mask_row(cmasks, i, cs)
+            for c in range(n_chunks):               # static unroll over Φ chunks
+                idx = (pl.ds(st + c * phi, phi),)
+                w = pl.load(out_ref, idx)
+                inc = jax.lax.dynamic_slice(mrow, (c * phi,), (phi,))
+                pl.store(out_ref, idx, update(w, inc))
+        return carry
+
+    jax.lax.fori_loop(0, tile // theta, group_body, jnp.int32(0))
+
+
+def _contains_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
+                          layout: Layout, tile: int):
+    cs, theta, phi = spec.counter_row_words, layout.theta, layout.phi
+    n_chunks = cs // phi
+    h1 = H.xxh32_u64x2(keys_ref[...], H.SEED_PATTERN)
+    h2 = H.xxh32_u64x2(keys_ref[...], H.SEED_BLOCK)
+    blk = H.block_index(h2, spec.n_blocks)
+    masks = V.block_patterns(spec, h1, batched=False)          # logical (n, s)
+    cstarts = (blk * jnp.uint32(cs)).astype(jnp.int32)
+
+    def group_body(g, acc):
+        base = g * theta
+        lanes = []
+        for t in range(theta):                      # static unroll over Θ
+            i = base + t
+            st = _take_scalar(cstarts, i)
+            chunks = [pl.load(filt_ref, (pl.ds(st + c * phi, phi),))
+                      for c in range(n_chunks)]
+            lanes.append((jnp.concatenate(chunks),            # (4s,)
+                          _mask_row(masks, i, spec.s)))
+        Cm = jnp.stack([c for c, _ in lanes])                 # (theta, 4s)
+        Mm = jnp.stack([m for _, m in lanes])                 # (theta, s)
+        occ = V.collapse_counter_words(Cm)                    # (theta, s)
+        ok = jnp.all((occ & Mm) == Mm, axis=-1)
+        return jax.lax.dynamic_update_slice(acc, ok, (base,))
+
+    out = jax.lax.fori_loop(0, tile // theta, group_body,
+                            jnp.zeros((tile,), jnp.bool_))
+    out_ref[...] = out
+
+
+def update_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                valid: jnp.ndarray, op: str, layout: Layout = None,
+                tile: int = DEFAULT_TILE, interpret: bool = True
+                ) -> jnp.ndarray:
+    """Bulk increment/decrement, whole counter array pinned in VMEM."""
+    n = keys.shape[0]
+    assert n % tile == 0
+    layout = counting_layout(spec, layout or default_counting_layout(spec, op),
+                             tile)
+    kern = functools.partial(_update_vmem_kernel, spec=spec, layout=layout,
+                             tile=tile, op=op)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),              # valid mask
+            pl.BlockSpec((spec.storage_words,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((spec.storage_words,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((spec.storage_words,), jnp.uint32),
+        interpret=interpret,
+    )(keys, valid, filt)
+
+
+def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                  layout: Layout = None, tile: int = DEFAULT_TILE,
+                  interpret: bool = True) -> jnp.ndarray:
+    n = keys.shape[0]
+    assert n % tile == 0
+    layout = counting_layout(
+        spec, layout or default_counting_layout(spec, "contains"), tile)
+    kern = functools.partial(_contains_vmem_kernel, spec=spec, layout=layout,
+                             tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((spec.storage_words,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(keys, filt)
+
+
+# ---------------------------------------------------------------------------
+# HBM-resident kernels — DMA-streamed counter rows
+# ---------------------------------------------------------------------------
+
+def _update_hbm_kernel(keys_ref, valid_ref, filt_hbm, out_hbm, scratch,
+                       sem_r, sem_w, *, spec: FilterSpec, tile: int, op: str):
+    """DMA read row -> nibble update -> DMA write back; serialized per key
+    (two consecutive keys may share a block, and counting RMW windows must
+    never overlap — same ownership argument as the bit add)."""
+    cs = spec.counter_row_words
+    update = _update(op)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        cp = pltpu.make_async_copy(filt_hbm, out_hbm, sem_r.at[0])
+        cp.start()
+        cp.wait()
+
+    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...])
+
+    def body(i, carry):
+        st = _take_scalar(cstarts, i)
+        rd = pltpu.make_async_copy(out_hbm.at[pl.ds(st, cs)], scratch.at[0],
+                                   sem_r.at[0])
+        rd.start()
+        rd.wait()
+        row = pl.load(scratch, (pl.ds(0, 1), slice(None)))[0]
+        new = update(row, _mask_row(cmasks, i, cs))
+        pl.store(scratch, (pl.ds(1, 1), slice(None)), new[None])
+        wr = pltpu.make_async_copy(scratch.at[1], out_hbm.at[pl.ds(st, cs)],
+                                   sem_w.at[0])
+        wr.start()
+        wr.wait()
+        return carry
+
+    jax.lax.fori_loop(0, tile, body, jnp.int32(0))
+
+
+def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
+                         spec: FilterSpec, tile: int):
+    """Double-buffered row streaming, counting analogue of sbf contains_hbm."""
+    cs = spec.counter_row_words
+    h1 = H.xxh32_u64x2(keys_ref[...], H.SEED_PATTERN)
+    h2 = H.xxh32_u64x2(keys_ref[...], H.SEED_BLOCK)
+    blk = H.block_index(h2, spec.n_blocks)
+    masks = V.block_patterns(spec, h1, batched=False)
+    cstarts = (blk * jnp.uint32(cs)).astype(jnp.int32)
+
+    def dma(i, slot):
+        st = _take_scalar(cstarts, i)
+        return pltpu.make_async_copy(
+            filt_hbm.at[pl.ds(st, cs)], scratch.at[slot], sem.at[slot])
+
+    dma(0, 0).start()
+
+    def body(i, acc):
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < tile)
+        def _prefetch():
+            dma(i + 1, nxt).start()
+
+        dma(i, slot).wait()
+        row = pl.load(scratch, (pl.ds(slot, 1), slice(None)))[0]   # (4s,)
+        occ = V.collapse_counter_words(row[None])[0]               # (s,)
+        m = _mask_row(masks, i, spec.s)
+        ok = jnp.all((occ & m) == m)
+        return jax.lax.dynamic_update_slice(acc, ok[None], (i,))
+
+    out = jax.lax.fori_loop(0, tile, body, jnp.zeros((tile,), jnp.bool_))
+    out_ref[...] = out
+
+
+def update_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+               valid: jnp.ndarray, op: str, tile: int = DEFAULT_TILE,
+               interpret: bool = True) -> jnp.ndarray:
+    n = keys.shape[0]
+    assert n % tile == 0
+    kern = functools.partial(_update_hbm_kernel, spec=spec, tile=tile, op=op)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((spec.storage_words,), jnp.uint32),
+        scratch_shapes=[
+            pltpu.VMEM((2, spec.counter_row_words), jnp.uint32),
+            pltpu.SemaphoreType.DMA((1,)),
+            pltpu.SemaphoreType.DMA((1,)),
+        ],
+        interpret=interpret,
+    )(keys, valid, filt)
+
+
+def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                 tile: int = DEFAULT_TILE, interpret: bool = True
+                 ) -> jnp.ndarray:
+    n = keys.shape[0]
+    assert n % tile == 0
+    kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        scratch_shapes=[
+            pltpu.VMEM((2, spec.counter_row_words), jnp.uint32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(keys, filt)
+
+
+# ---------------------------------------------------------------------------
+# Partitioned-ownership update — PARALLEL grid, one segment per step
+# ---------------------------------------------------------------------------
+
+def _update_partitioned_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
+                               spec: FilterSpec, seg_cwords: int,
+                               capacity: int, op: str):
+    """One grid step owns one counter segment exclusively (PARALLEL-safe).
+
+    Keys were pre-partitioned by block segment; padded slots have valid=0
+    and therefore all-zero increment rows. This is the path that replaces
+    the GPU's atomicAdd/atomicSub for counter updates."""
+    cs = spec.counter_row_words
+    update = _update(op)
+    out_ref[...] = filt_ref[...]
+    keys = pl.load(keys_ref, (pl.ds(0, 1), slice(None), slice(None)))[0]
+    valid = pl.load(valid_ref, (pl.ds(0, 1), slice(None)))[0]
+    cstarts, cmasks = _cfingerprints(spec, keys, valid)
+    # counter-word offset within this segment
+    cstarts = jax.lax.rem(cstarts, jnp.int32(seg_cwords))
+
+    def body(i, carry):
+        st = _take_scalar(cstarts, i)
+        idx = (pl.ds(st, cs),)
+        w = pl.load(out_ref, idx)
+        pl.store(out_ref, idx, update(w, _mask_row(cmasks, i, cs)))
+        return carry
+
+    jax.lax.fori_loop(0, capacity, body, jnp.int32(0))
+
+
+def update_partitioned(spec: FilterSpec, filt: jnp.ndarray,
+                       keys_by_seg: jnp.ndarray, valid: jnp.ndarray,
+                       n_segments: int, op: str, interpret: bool = True
+                       ) -> jnp.ndarray:
+    """keys_by_seg: (n_segments, capacity, 2); valid: (n_segments, capacity)."""
+    assert spec.storage_words % n_segments == 0
+    seg_cwords = spec.storage_words // n_segments
+    capacity = keys_by_seg.shape[1]
+    kern = functools.partial(_update_partitioned_kernel, spec=spec,
+                             seg_cwords=seg_cwords, capacity=capacity, op=op)
+    return pl.pallas_call(
+        kern,
+        grid=(n_segments,),
+        in_specs=[
+            pl.BlockSpec((1, capacity, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, capacity), lambda i: (i, 0)),
+            pl.BlockSpec((seg_cwords,), lambda i: (i,)),       # own segment only
+        ],
+        out_specs=pl.BlockSpec((seg_cwords,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((spec.storage_words,), jnp.uint32),
+        interpret=interpret,
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel",)),                # segments independent
+    )(keys_by_seg, valid, filt)
+
+
+# ---------------------------------------------------------------------------
+# Decay — embarrassingly parallel elementwise aging pass
+# ---------------------------------------------------------------------------
+
+def _decay_kernel(filt_ref, out_ref):
+    out_ref[...] = V.decay_word(filt_ref[...])
+
+
+def decay(spec: FilterSpec, filt: jnp.ndarray, tile_words: int = 4096,
+          interpret: bool = True) -> jnp.ndarray:
+    """One aging step over the whole counter array (PARALLEL word tiles)."""
+    nw = spec.storage_words
+    tile_words = min(tile_words, nw)
+    assert nw % tile_words == 0
+    return pl.pallas_call(
+        _decay_kernel,
+        grid=(nw // tile_words,),
+        in_specs=[pl.BlockSpec((tile_words,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile_words,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nw,), jnp.uint32),
+        interpret=interpret,
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel",)),
+    )(filt)

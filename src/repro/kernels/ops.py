@@ -9,14 +9,18 @@
   split;
 * ``bloom_add_bulk`` additionally offers the partitioned ownership path
   (sort keys by segment, then a PARALLEL-grid kernel) — our beyond-paper
-  TPU-native optimization.
+  TPU-native optimization;
+* ``counting_*`` dispatch the counting-filter kernels. Counting updates are
+  NOT OR-idempotent, so their padding switches from repeat-last-key to
+  **valid-masking** (``_pad_keys_valid``): padded slots carry valid=0 and
+  contribute an all-zero increment row.
 
 On non-TPU backends the kernels run in interpret mode (kernel body executed
 with jnp semantics) — bit-exact, which is what the test sweeps rely on.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 import jax
@@ -25,6 +29,8 @@ import jax.numpy as jnp
 from repro.core import partition as P
 from repro.core.variants import FilterSpec
 from repro.kernels import cbf as cbf_k
+from repro.kernels import countingbf as cnt_k
+from repro.kernels import ring as ring_k
 from repro.kernels import sbf as sbf_k
 from repro.kernels.sbf import (DEFAULT_TILE, Layout, VMEM_FILTER_BYTES,
                                default_layout)
@@ -35,18 +41,27 @@ def _interpret() -> bool:
 
 
 def kernel_supported(spec: FilterSpec) -> bool:
-    return spec.variant in ("cbf", "bbf", "rbbf", "sbf", "csbf")
+    return spec.variant in ("cbf", "bbf", "rbbf", "sbf", "csbf",
+                            "countingbf")
 
 
 def _regime(spec: FilterSpec, regime: str) -> str:
     if regime != "auto":
         return regime
-    return "vmem" if spec.n_words * 4 <= VMEM_FILTER_BYTES else "hbm"
+    return "vmem" if spec.storage_words * 4 <= VMEM_FILTER_BYTES else "hbm"
+
+
+def _clamp_tile(n: int, tile: int) -> int:
+    """Shrink the key tile for small batches: next pow2 >= n, floor 8 (the
+    sublane width) — so a 10-key call doesn't pad to a 256-wide tile."""
+    return min(tile, max(8, 1 << int(np.ceil(np.log2(n)))))
 
 
 def _pad_keys(keys: jnp.ndarray, tile: int) -> jnp.ndarray:
-    """Pad to a tile multiple by repeating the last key — OR-idempotent, and
-    a repeated *contains* result is simply discarded."""
+    """Pad to a tile multiple by repeating the last key — valid ONLY for the
+    OR-idempotent bit-filter ops: a repeated add ORs the same mask twice
+    (no-op) and a repeated *contains* result is simply discarded. Counting
+    updates must use :func:`_pad_keys_valid` instead."""
     n = keys.shape[0]
     pad = (-n) % tile
     if pad == 0:
@@ -54,13 +69,32 @@ def _pad_keys(keys: jnp.ndarray, tile: int) -> jnp.ndarray:
     return jnp.concatenate([keys, jnp.broadcast_to(keys[-1:], (pad, 2))])
 
 
+def _pad_keys_valid(keys: jnp.ndarray, tile: int,
+                    valid: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad to a tile multiple with an explicit validity mask.
+
+    Counting increments/decrements are not idempotent, so repeat-key padding
+    would double-count; padded slots instead carry valid=0 (the kernels zero
+    their increment rows). Returns (padded keys, (n_padded,) uint8 valid)."""
+    n = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), jnp.uint8)
+    pad = (-n) % tile
+    if pad == 0:
+        return keys, valid
+    return (jnp.concatenate([keys, jnp.zeros((pad, 2), keys.dtype)]),
+            jnp.concatenate([valid, jnp.zeros((pad,), jnp.uint8)]))
+
+
 def bloom_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                    layout: Optional[Layout] = None, regime: str = "auto",
                    tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    assert not spec.is_counting, "use counting_contains for countingbf"
     n = keys.shape[0]
     if n == 0:
         return jnp.zeros((0,), jnp.bool_)
-    tile = min(tile, max(8, 1 << int(np.ceil(np.log2(n)))))
+    tile = _clamp_tile(n, tile)
     padded = _pad_keys(keys, tile)
     interp = _interpret()
     if spec.variant == "cbf":
@@ -77,10 +111,11 @@ def bloom_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 def bloom_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
               layout: Optional[Layout] = None, regime: str = "auto",
               tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    assert not spec.is_counting, "use counting_add/counting_remove"
     n = keys.shape[0]
     if n == 0:
         return filt
-    tile = min(tile, max(8, 1 << int(np.ceil(np.log2(n)))))
+    tile = _clamp_tile(n, tile)
     padded = _pad_keys(keys, tile)
     interp = _interpret()
     if spec.variant == "cbf":
@@ -97,8 +132,117 @@ def bloom_add_partitioned(spec: FilterSpec, filt: jnp.ndarray, keys,
     """Beyond-paper path: radix-partition keys by filter segment, then run a
     PARALLEL-grid kernel where each step owns its segment exclusively."""
     assert spec.variant != "cbf", "classical filter has no block locality"
+    assert not spec.is_counting, "use counting_update_partitioned"
     keys_np = np.asarray(keys, dtype=np.uint32)
     by_seg, valid, _ = P.partition_host(spec, keys_np, n_segments)
     return sbf_k.add_partitioned(spec, filt, jnp.asarray(by_seg),
                                  jnp.asarray(valid), n_segments,
                                  interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Counting-filter dispatch (valid-masked padding; see module docstring)
+# ---------------------------------------------------------------------------
+
+def _counting_update(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                     op: str, layout: Optional[Layout], regime: str,
+                     tile: int, valid: Optional[jnp.ndarray]) -> jnp.ndarray:
+    assert spec.is_counting
+    n = keys.shape[0]
+    if n == 0:
+        return filt
+    tile = _clamp_tile(n, tile)
+    padded, pvalid = _pad_keys_valid(keys, tile, valid)
+    interp = _interpret()
+    if _regime(spec, regime) == "vmem":
+        return cnt_k.update_vmem(spec, filt, padded, pvalid, op,
+                                 layout=layout, tile=tile, interpret=interp)
+    return cnt_k.update_hbm(spec, filt, padded, pvalid, op, tile=tile,
+                            interpret=interp)
+
+
+def counting_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                 layout: Optional[Layout] = None, regime: str = "auto",
+                 tile: int = DEFAULT_TILE,
+                 valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Bulk saturating increment of each key's k counters."""
+    return _counting_update(spec, filt, keys, "add", layout, regime, tile,
+                            valid)
+
+
+def counting_remove(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                    layout: Optional[Layout] = None, regime: str = "auto",
+                    tile: int = DEFAULT_TILE,
+                    valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Bulk guarded decrement (0 floors, saturated counters stick)."""
+    return _counting_update(spec, filt, keys, "remove", layout, regime, tile,
+                            valid)
+
+
+def counting_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                      layout: Optional[Layout] = None, regime: str = "auto",
+                      tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """Bulk membership against the counter occupancy (read-only, so
+    repeat-key padding is safe here — results are sliced off)."""
+    assert spec.is_counting
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    tile = _clamp_tile(n, tile)
+    padded = _pad_keys(keys, tile)
+    interp = _interpret()
+    if _regime(spec, regime) == "vmem":
+        out = cnt_k.contains_vmem(spec, filt, padded, layout=layout,
+                                  tile=tile, interpret=interp)
+    else:
+        out = cnt_k.contains_hbm(spec, filt, padded, tile=tile,
+                                 interpret=interp)
+    return out[:n]
+
+
+def counting_decay(spec: FilterSpec, filt: jnp.ndarray) -> jnp.ndarray:
+    """One aging step (every nonzero counter -1) as a PARALLEL Pallas pass."""
+    assert spec.is_counting
+    return cnt_k.decay(spec, filt, interpret=_interpret())
+
+
+def counting_update_partitioned(spec: FilterSpec, filt: jnp.ndarray, keys,
+                                op: str = "add", n_segments: int = 8
+                                ) -> jnp.ndarray:
+    """Ownership path for counter updates: radix-partition keys by segment,
+    then a PARALLEL grid where each step owns its counter segment — the
+    atomics-free route for increments AND decrements."""
+    assert spec.is_counting
+    keys_np = np.asarray(keys, dtype=np.uint32)
+    by_seg, valid, _ = P.partition_host(spec, keys_np, n_segments)
+    return cnt_k.update_partitioned(spec, filt, jnp.asarray(by_seg),
+                                    jnp.asarray(valid), n_segments, op,
+                                    interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Generation-ring dispatch (window subsystem)
+# ---------------------------------------------------------------------------
+
+def ring_contains(spec: FilterSpec, rings: jnp.ndarray, keys: jnp.ndarray,
+                  regime: str = "auto", tile: int = DEFAULT_TILE
+                  ) -> jnp.ndarray:
+    """Fused membership across a (G, n_words) generation ring: one hash
+    phase per key, G row loads ORed before a single mask test."""
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    tile = _clamp_tile(n, tile)
+    padded = _pad_keys(keys, tile)
+    interp = _interpret()
+    n_gen = rings.shape[0]
+    if regime == "auto":
+        regime = ("vmem" if n_gen * spec.n_words * 4 <= VMEM_FILTER_BYTES
+                  else "hbm")
+    if regime == "vmem":
+        out = ring_k.ring_contains_vmem(spec, rings, padded, tile=tile,
+                                        interpret=interp)
+    else:
+        out = ring_k.ring_contains_hbm(spec, rings, padded, tile=tile,
+                                       interpret=interp)
+    return out[:n]

@@ -32,6 +32,9 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--guard", action="store_true",
                     help="enable the Bloom n-gram repetition guard")
+    ap.add_argument("--guard-decay-every", type=int, default=None,
+                    help="time-decayed guard: counting filter + one decay "
+                         "per N observed steps (long-running serve loops)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -44,8 +47,9 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     print(f"[serve] {args.arch} ({model.param_count()/1e6:.1f}M params)")
 
-    guard = (NGramGuard(batch=args.batch, n=3, top_k=64)
-             if args.guard else None)
+    guard = (NGramGuard(batch=args.batch, n=3, top_k=64,
+                        decay_every=args.guard_decay_every)
+             if args.guard or args.guard_decay_every else None)
     engine = Engine(model, params, batch=args.batch, max_len=args.max_len,
                     guard=guard)
     rng = np.random.RandomState(0)
@@ -61,7 +65,9 @@ def main(argv=None):
           f"({n_tok/dt:.1f} tok/s)")
     if guard:
         print(f"[serve] guard: {guard.stats.observed} n-grams recorded, "
-              f"{guard.stats.penalized} candidates penalized")
+              f"{guard.stats.penalized} candidates penalized, "
+              f"{guard.stats.decays} decays "
+              f"(engine {guard.filt.backend!r})")
     print(f"[serve] sample: {outs[0][:12]}")
     return 0
 

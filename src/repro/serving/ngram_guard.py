@@ -13,6 +13,15 @@ TPU) and the guard state is an ordinary pytree leaf for checkpointing.
 
 False positives penalize a novel n-gram (harmless, sampling just shifts);
 false negatives never happen, so true loops are always caught.
+
+**Time-decayed mode** (``decay_every=D``): the guard switches to the
+counting engine (variant='countingbf') and applies one uniform
+``decay()`` every D observed decode steps. N-grams seen once fade after
+~D steps; only n-grams the model keeps re-emitting stay penalized — so a
+long-running serve loop never saturates the filter, and a phrase that was
+legitimate 10k tokens ago is not penalized forever. The insert-only mode
+caps every long session at "grow until saturated"; decay makes guard
+state sustainable under production traffic.
 """
 from __future__ import annotations
 
@@ -45,35 +54,31 @@ def _mix_rows(mat: np.ndarray) -> np.ndarray:
 class GuardStats:
     observed: int = 0
     penalized: int = 0
+    decays: int = 0
 
 
 class NGramGuard:
-    """One guard serves a whole decode batch (keys are (seq_id, ngram))."""
+    """One guard serves a whole decode batch (keys are (seq_id, ngram)).
+
+    ``decay_every=D`` enables the time-decayed mode: a counting filter plus
+    one uniform decay per D observed steps (see module docstring).
+    """
 
     def __init__(self, batch: int, n: int = 4, m_bits: int = 1 << 18,
                  top_k: int = 64, penalty: float = -1e9,
-                 backend: str = "auto"):
+                 backend: str = "auto", decay_every: Optional[int] = None):
         self.n = n
         self.batch = batch
         self.top_k = top_k
         self.penalty = penalty
-        self.filt = api.make_filter("sbf", m_bits=m_bits, k=8,
+        self.decay_every = decay_every
+        variant = "countingbf" if decay_every else "sbf"
+        self.filt = api.make_filter(variant, m_bits=m_bits, k=8,
                                     block_bits=256, backend=backend)
         # rolling buffer of the last n-1 tokens per sequence
         self.hist = np.zeros((batch, n - 1), np.int64) - 1
         self.stats = GuardStats()
-
-    @property
-    def bf(self):
-        """Deprecated read-only alias for ``filt`` (was a mutable
-        BloomFilter). ``guard.bf.add(...)`` no longer records n-grams —
-        reassign ``guard.filt`` instead."""
-        import warnings
-        warnings.warn("NGramGuard.bf is deprecated and read-only; calling "
-                      ".add() on it does NOT update the guard. Use "
-                      "NGramGuard.filt (reassign it to mutate).",
-                      DeprecationWarning, stacklevel=2)
-        return self.filt
+        self._steps_since_decay = 0
 
     def observe(self, tokens: np.ndarray):
         """Record the n-gram completed by `tokens` (B,) and roll history."""
@@ -86,6 +91,12 @@ class NGramGuard:
             keys = _mix_rows(full[ready].astype(np.uint32))
             self.filt = self.filt.add(keys)
             self.stats.observed += int(ready.sum())
+            if self.decay_every:
+                self._steps_since_decay += 1
+                if self._steps_since_decay >= self.decay_every:
+                    self.filt = self.filt.decay()
+                    self.stats.decays += 1
+                    self._steps_since_decay = 0
         self.hist = np.concatenate([self.hist[:, 1:], tokens[:, None]], axis=1)
 
     def penalize(self, logits) -> jnp.ndarray:

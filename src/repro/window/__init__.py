@@ -1,0 +1,20 @@
+"""``repro.window`` — sliding-window (time-decaying) membership state.
+
+Two forgetting mechanisms over the same filter substrate:
+
+* :class:`WindowedFilter` — a **generation ring**: G same-spec Bloom
+  sub-filters; inserts land in the head generation, queries OR the whole
+  ring in one fused kernel pass, and ``advance()`` retires the oldest
+  generation in O(1) — sliding-window semantics without per-key deletes.
+* the ``countingbf`` variant (``repro.api`` engine ``"counting"``) — per-key
+  ``remove()`` and uniform ``decay()`` via packed 4-bit counters.
+
+Rule of thumb: when you know *when* to forget (a window), ring a
+WindowedFilter; when you know *what* to forget (explicit deletes), use a
+counting filter.
+"""
+from repro.window.ring import (WindowedFilter, ring_add, ring_advance,
+                               ring_contains_dispatch, ring_init)
+
+__all__ = ["WindowedFilter", "ring_init", "ring_add", "ring_advance",
+           "ring_contains_dispatch"]

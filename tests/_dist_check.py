@@ -14,7 +14,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import variants as V
 from repro.core import hashing as H
-from repro.core.distributed import ReplicatedFilter, ShardedFilter, or_allreduce
+from repro.core import distributed as D
+from repro.core.distributed import or_allreduce
 from jax.experimental.shard_map import shard_map
 
 
@@ -42,40 +43,41 @@ def main():
             np.testing.assert_array_equal(np.asarray(out)[d], expect)
     print("or_allreduce ok")
 
-    # --- ReplicatedFilter: local adds + sync == global reference -------------
-    rf = ReplicatedFilter.create(spec, mesh)
-    rf.add_local(keys)
+    # --- replicated transforms: local adds + sync == global reference --------
+    rw = D.replicated_init(spec, mesh)
+    rw = D.replicated_add_local(spec, mesh, "data", rw, keys)
     # pre-sync: each replica only knows its shard -> some misses across shards
-    pre = np.asarray(rf.contains_local(keys))
+    pre = np.asarray(D.replicated_contains_local(spec, mesh, "data", rw, keys))
     assert pre.all()  # own shard always found
-    cross = np.asarray(rf.contains_local(
-        jnp.roll(keys, 1, axis=0)))  # other device's keys
+    cross = np.asarray(D.replicated_contains_local(
+        spec, mesh, "data", rw, jnp.roll(keys, 1, axis=0)))  # other device's keys
     assert not cross.all(), "pre-sync replicas should not know remote keys"
-    rf.sync()
+    rw = D.replicated_sync(spec, mesh, "data", rw)
     for d in range(8):
-        np.testing.assert_array_equal(np.asarray(rf.words)[d], np.asarray(ref))
-    post = np.asarray(rf.contains_local(jnp.roll(keys, 3, axis=0)))
+        np.testing.assert_array_equal(np.asarray(rw)[d], np.asarray(ref))
+    post = np.asarray(D.replicated_contains_local(
+        spec, mesh, "data", rw, jnp.roll(keys, 3, axis=0)))
     assert post.all()
     print("replicated ok")
 
-    # --- ShardedFilter: all_to_all routing == global reference ---------------
-    sf = ShardedFilter.create(spec, mesh, capacity=n_local)
-    sf.add(keys)
-    np.testing.assert_array_equal(np.asarray(sf.words), np.asarray(ref))
-    res = np.asarray(sf.contains(keys))
+    # --- sharded transforms: all_to_all routing == global reference ----------
+    sw = D.sharded_init(spec, mesh)
+    sw = D.sharded_add(spec, mesh, "data", n_local, sw, keys)
+    np.testing.assert_array_equal(np.asarray(sw), np.asarray(ref))
+    res = np.asarray(D.sharded_contains(spec, mesh, "data", n_local, sw, keys))
     assert res.all()
     # negatives: unseen keys should mostly be absent (FPR-bounded)
     probe = jax.device_put(
         jnp.asarray(H.random_u64x2(8 * n_local, seed=99)).reshape(8, n_local, 2),
         NamedSharding(mesh, P("data")))
-    neg = np.asarray(sf.contains(probe))
+    neg = np.asarray(D.sharded_contains(spec, mesh, "data", n_local, sw, probe))
     assert neg.mean() < 0.05, neg.mean()
     print("sharded ok")
 
     # --- capacity overflow degrades conservatively ---------------------------
-    sf2 = ShardedFilter.create(spec, mesh, capacity=8)   # force overflow
-    sf2.add(keys)
-    res2 = np.asarray(sf2.contains(keys))
+    sw2 = D.sharded_init(spec, mesh)
+    sw2 = D.sharded_add(spec, mesh, "data", 8, sw2, keys)   # force overflow
+    res2 = np.asarray(D.sharded_contains(spec, mesh, "data", 8, sw2, keys))
     assert res2.all(), "overflow must never produce a false negative"
     print("overflow ok")
 

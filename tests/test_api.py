@@ -5,14 +5,15 @@ Covers the acceptance contract of the API redesign:
   without host round-trips;
 * every registered engine is bit-identical to the ``"jnp"`` reference on a
   spec sweep (cross-backend parity);
-* deprecation shims (BloomFilter, ReplicatedFilter/ShardedFilter, the
-  ``"pallas"`` alias) still work and warn;
+* the ``"pallas"`` legacy alias still resolves (the class shims from PR 1
+  are gone);
+* the forgetting engines: ``counting`` (remove/decay) and ``windowed``
+  (advance) honor their capability flags, and other engines refuse those
+  ops with a clear error;
 * engine-independent checkpointing via to_state/from_state and
   checkpoint.save_filter/restore_filter;
 * FPR probes are structurally disjoint from insert keys.
 """
-import warnings
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -99,7 +100,7 @@ def test_registry_lists_required_engines():
     names = api.backends()
     assert len(names) >= 4
     for required in ("jnp", "pallas-vmem", "pallas-hbm", "replicated",
-                     "sharded"):
+                     "sharded", "counting", "windowed"):
         assert required in names
     descs = api.describe_backends()
     assert all(d["name"] for d in descs)
@@ -271,48 +272,128 @@ def test_save_filter_restore_filter(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims
+# Legacy spellings + shim removal
 # ---------------------------------------------------------------------------
-
-def test_bloomfilter_shim_warns_and_matches():
-    keys = _keys(500, seed=31)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        from repro.core.filter import BloomFilter
-        bf = BloomFilter.create("sbf", 1 << 14, 8, backend="jnp")
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    bf.add(keys)   # mutating style still works
-    assert bool(np.asarray(bf.contains(keys)).all())
-    ref = api.make_filter("sbf", m_bits=1 << 14, k=8, backend="jnp").add(keys)
-    np.testing.assert_array_equal(np.asarray(bf.words), np.asarray(ref.words))
-
 
 def test_pallas_alias_still_resolves():
     f = api.make_filter("sbf", m_bits=1 << 14, k=8, backend="pallas")
     assert f.backend in ("pallas-vmem", "pallas-hbm")
 
 
-def test_distributed_shims_warn():
-    spec = V.FilterSpec("sbf", 1 << 14, 8, block_bits=256)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        from repro.core.distributed import ReplicatedFilter, ShardedFilter
-        rf = ReplicatedFilter.create(spec, _mesh1())
-        sf = ShardedFilter.create(spec, _mesh1())
-        assert sum(issubclass(x.category, DeprecationWarning)
-                   for x in w) >= 2
-    keys = _keys(128, seed=33).reshape(1, 128, 2)
-    rf.add_local(keys).sync()
-    assert bool(np.asarray(rf.contains_local(keys)).all())
-    sf.add(keys)
-    assert bool(np.asarray(sf.contains(keys)).all())
+def test_class_shims_are_gone():
+    """The one-release shims promised in PR 1 have been removed."""
+    import repro.core as core
+    import repro.core.distributed as dist
+    assert not hasattr(core, "BloomFilter")
+    assert not hasattr(dist, "ReplicatedFilter")
+    assert not hasattr(dist, "ShardedFilter")
+    with pytest.raises(ImportError):
+        from repro.core.filter import BloomFilter  # noqa: F401
 
 
 def test_dedupfilter_uses_api_filter():
     from repro.data.dedup import DedupFilter
     dd = DedupFilter(expected_docs=1 << 12, backend="jnp", batch_docs=32)
     assert isinstance(dd.filt, api.Filter)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        assert dd.bf is dd.filt   # back-compat alias, warns on access
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+# ---------------------------------------------------------------------------
+# Forgetting engines: counting (remove/decay) + windowed (advance)
+# ---------------------------------------------------------------------------
+
+def test_counting_engine_remove_decay():
+    keys = _keys(400, seed=41)
+    f = api.make_filter("countingbf", m_bits=1 << 14, k=8)
+    assert f.backend == "counting"
+    assert f.words.shape == (4 * f.spec.n_words,)    # 4-bit counters
+    f = f.add(keys)
+    assert bool(np.asarray(f.contains(keys)).all())
+    g = f.remove(keys)
+    assert not bool(np.asarray(g.contains(keys)).any())
+    # decay of a twice-added set needs two steps
+    f2 = f.add(keys)
+    assert bool(np.asarray(f2.decay(1).contains(keys)).all())
+    assert not bool(np.asarray(f2.decay(2).contains(keys)).any())
+
+
+def test_counting_merge_preserves_counts():
+    keys = _keys(200, seed=42)
+    a = api.make_filter("countingbf", m_bits=1 << 14, k=8).add(keys)
+    b = api.make_filter("countingbf", m_bits=1 << 14, k=8).add(keys)
+    u = api.union(a, b)                       # counter-true union: counts add
+    u = u.remove(keys)
+    assert bool(np.asarray(u.contains(keys)).all())
+    u = u.remove(keys)
+    assert not bool(np.asarray(u.contains(keys)).any())
+
+
+def test_windowed_engine_advance():
+    gens = [_keys(200, seed=50 + g) for g in range(3)]
+    f = api.make_filter("sbf", m_bits=1 << 14, k=8, generations=3)
+    assert f.backend == "windowed"
+    f = f.add(gens[0]).advance().add(gens[1]).advance().add(gens[2])
+    for g in gens:
+        assert bool(np.asarray(f.contains(g)).all())   # whole window live
+    f = f.advance()                                    # retires gens[0]
+    assert float(np.asarray(f.contains(gens[0])).mean()) < 0.05
+    assert bool(np.asarray(f.contains(gens[1])).all())
+    assert bool(np.asarray(f.contains(gens[2])).all())
+
+
+def test_capability_flags_enforced():
+    plain = api.make_filter("sbf", m_bits=1 << 14, k=8, backend="jnp")
+    keys = _keys(10, seed=60)
+    with pytest.raises(NotImplementedError):
+        plain.remove(keys)
+    with pytest.raises(NotImplementedError):
+        plain.decay()
+    with pytest.raises(NotImplementedError):
+        plain.advance()
+    counting = api.make_filter("countingbf", m_bits=1 << 14, k=8)
+    with pytest.raises(NotImplementedError):
+        counting.advance()
+    descs = {d["name"]: d for d in api.describe_backends()}
+    assert descs["counting"]["supports_remove"]
+    assert descs["counting"]["supports_decay"]
+    assert descs["windowed"]["supports_advance"]
+    assert not descs["jnp"]["supports_remove"]
+
+
+def test_windowed_state_roundtrip():
+    """to_state records the ring geometry; the default from_state re-selects
+    the windowed engine, and an explicit backend re-homes the dense union."""
+    gens = [_keys(150, seed=70 + g) for g in range(2)]
+    f = api.make_filter("sbf", m_bits=1 << 14, k=8, generations=3)
+    f = f.add(gens[0]).advance().add(gens[1])
+    st = f.to_state()
+    g = api.Filter.from_state(st)
+    assert g.backend == "windowed"
+    assert g.options.generations == 3 and g.options.head == f.options.head
+    for k in gens:
+        assert bool(np.asarray(g.contains(k)).all())
+    g.advance()                                  # still a working window
+    h = api.Filter.from_state(st, backend="jnp")  # re-home the union
+    assert h.backend == "jnp"
+    for k in gens:
+        assert bool(np.asarray(h.contains(k)).all())
+
+
+def test_nbytes_reflects_actual_storage():
+    plain = api.make_filter("sbf", m_bits=1 << 14, k=8, backend="jnp")
+    assert plain.nbytes == (1 << 14) // 8
+    counting = api.make_filter("countingbf", m_bits=1 << 14, k=8)
+    assert counting.nbytes == 4 * (1 << 14) // 8          # 4-bit counters
+    windowed = api.make_filter("sbf", m_bits=1 << 14, k=8, generations=3)
+    assert windowed.nbytes == 3 * (1 << 14) // 8          # G generations
+
+
+def test_counting_state_roundtrip_membership():
+    keys = _keys(300, seed=43)
+    f = api.make_filter("countingbf", m_bits=1 << 14, k=8).add(keys)
+    st = f.to_state()
+    # canonical state is the occupancy bit view; restoring re-homes it into
+    # the counting engine (counters at 1 — membership kept, counts lossy)
+    g = api.Filter.from_state(st)
+    assert g.backend == "counting"
+    assert bool(np.asarray(g.contains(keys)).all())
+    assert not bool(np.asarray(g.remove(keys).contains(keys)).any())

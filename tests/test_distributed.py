@@ -17,7 +17,7 @@ from jax.sharding import Mesh
 
 from repro.core import variants as V
 from repro.core import hashing as H
-from repro.core.distributed import ReplicatedFilter, ShardedFilter
+from repro.core import distributed as D
 
 SPEC = V.FilterSpec("sbf", 1 << 16, 8, block_bits=256)
 
@@ -28,29 +28,31 @@ def _mesh1():
 
 def test_replicated_single_device_matches_ref():
     mesh = _mesh1()
-    rf = ReplicatedFilter.create(SPEC, mesh)
+    words = D.replicated_init(SPEC, mesh)
     keys = jnp.asarray(H.random_u64x2(512, seed=1)).reshape(1, 512, 2)
-    rf.add_local(keys).sync()
+    words = D.replicated_add_local(SPEC, mesh, "data", words, keys)
+    words = D.replicated_sync(SPEC, mesh, "data", words)
     ref = V.add_scatter(SPEC, V.init(SPEC), keys[0])
-    np.testing.assert_array_equal(np.asarray(rf.global_words()), np.asarray(ref))
-    assert bool(np.asarray(rf.contains_local(keys)).all())
+    np.testing.assert_array_equal(np.asarray(words[0]), np.asarray(ref))
+    assert bool(np.asarray(
+        D.replicated_contains_local(SPEC, mesh, "data", words, keys)).all())
 
 
 def test_sharded_single_device_matches_ref():
     mesh = _mesh1()
-    sf = ShardedFilter.create(SPEC, mesh, capacity=1024)
+    words = D.sharded_init(SPEC, mesh)
     keys = jnp.asarray(H.random_u64x2(700, seed=2)).reshape(1, 700, 2)
-    sf.add(keys)
+    words = D.sharded_add(SPEC, mesh, "data", 1024, words, keys)
     ref = V.add_scatter(SPEC, V.init(SPEC), keys[0])
-    np.testing.assert_array_equal(np.asarray(sf.words), np.asarray(ref))
-    assert bool(np.asarray(sf.contains(keys)).all())
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(ref))
+    assert bool(np.asarray(
+        D.sharded_contains(SPEC, mesh, "data", 1024, words, keys)).all())
 
 
 def test_sharded_requires_pow2_devices():
-    # geometry validation happens at create()
-    mesh = _mesh1()
-    sf = ShardedFilter.create(SPEC, mesh)   # 1 is pow2 — fine
-    assert sf.n_dev == 1
+    # geometry validation happens at init
+    words = D.sharded_init(SPEC, _mesh1())   # 1 is pow2 — fine
+    assert words.shape == (SPEC.n_words,)
 
 
 @pytest.mark.multidevice

@@ -155,13 +155,14 @@ def test_empty_keys_noop():
     assert c.shape == (0,)
 
 
-def test_facade_pallas_backend_roundtrip():
-    from repro.core.filter import BloomFilter
-    bf = BloomFilter.create("sbf", 1 << 16, 8, block_bits=256, backend="pallas")
+def test_api_pallas_backend_roundtrip():
+    from repro import api
+    f = api.make_filter("sbf", m_bits=1 << 16, k=8, block_bits=256,
+                        backend="pallas")   # legacy alias -> a pallas engine
     keys = H.random_u64x2(500, seed=21)
-    bf.add(keys)
-    assert bool(np.asarray(bf.contains(keys)).all())
-    # facade pallas path == facade jnp path
-    bf2 = BloomFilter.create("sbf", 1 << 16, 8, block_bits=256, backend="jnp")
-    bf2.add(keys)
-    np.testing.assert_array_equal(np.asarray(bf.words), np.asarray(bf2.words))
+    f = f.add(keys)
+    assert bool(np.asarray(f.contains(keys)).all())
+    # pallas path == jnp path
+    f2 = api.make_filter("sbf", m_bits=1 << 16, k=8, block_bits=256,
+                         backend="jnp").add(keys)
+    np.testing.assert_array_equal(np.asarray(f.words), np.asarray(f2.words))

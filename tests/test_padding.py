@@ -1,0 +1,119 @@
+"""Key-padding semantics of the kernel dispatch layer (kernels/ops.py).
+
+The bit-filter ops pad key batches to a tile multiple by repeating the last
+key — sound ONLY because OR is idempotent (add) and lookup results are
+sliced back to n (contains). Counting updates are not idempotent, so their
+padding must be valid-masked: padded slots carry valid=0 and contribute
+nothing. These tests pin those three contracts.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import variants as V
+from repro.core import hashing as H
+from repro.kernels import ops, ref
+
+M = 1 << 14
+SPEC = V.FilterSpec("sbf", M, 8, block_bits=256)
+CSPEC = V.FilterSpec("countingbf", M, 8, block_bits=256)
+
+
+def _keys(n, seed=0):
+    return jnp.asarray(H.random_u64x2(n, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# Bloom add: repeat-padding is OR-idempotent
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 63, 65, 100])
+def test_repeat_padding_is_or_idempotent_for_add(n):
+    """A tile-padded add equals the unpadded oracle: the repeated last key
+    ORs an already-set mask (no-op)."""
+    keys = _keys(n, seed=n)
+    padded = ops._pad_keys(keys, 64)
+    assert padded.shape[0] % 64 == 0
+    if n % 64:
+        # padding really is the repeated last key
+        np.testing.assert_array_equal(np.asarray(padded[n:]),
+                                      np.tile(np.asarray(keys[-1:]),
+                                              (padded.shape[0] - n, 1)))
+    f_pad = ops.bloom_add(SPEC, V.init(SPEC), keys, tile=64)
+    f_ref = ref.bloom_add_ref(SPEC, V.init(SPEC), keys)
+    np.testing.assert_array_equal(np.asarray(f_pad), np.asarray(f_ref))
+
+
+def test_repeat_padding_changes_counting_state():
+    """Negative control: feeding repeat-padded keys through a counting add
+    (without a valid mask) DOES corrupt counts — which is exactly why the
+    counting dispatch must never use _pad_keys."""
+    keys = _keys(33, seed=3)
+    padded = ops._pad_keys(keys, 64)            # 31 repeats of the last key
+    c_bad = V.counting_add(CSPEC, V.init(CSPEC), padded)
+    cnt = int(np.asarray(V.counting_count(CSPEC, c_bad, keys[-1:]))[0])
+    assert cnt >= 15 or cnt == 32, cnt          # inflated (saturates at 15)
+
+
+# ---------------------------------------------------------------------------
+# Bloom contains: padded lanes are sliced off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 9, 63, 65])
+def test_contains_padding_sliced_off(n):
+    keys = _keys(n, seed=n + 1)
+    filt = ref.bloom_add_ref(SPEC, V.init(SPEC), keys)
+    out = ops.bloom_contains(SPEC, filt, keys, tile=64)
+    assert out.shape == (n,)                     # result length == n exactly
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.bloom_contains_ref(SPEC, filt, keys)))
+
+
+# ---------------------------------------------------------------------------
+# Counting paths: valid-masked padding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 33, 63, 100])
+def test_counting_padding_is_valid_masked(n):
+    """Counting add/remove through the kernel dispatch give EXACT counts for
+    non-tile-multiple batches: padded slots are masked, not repeated."""
+    keys = _keys(n, seed=n + 2)
+    padded, valid = ops._pad_keys_valid(keys, 64)
+    assert padded.shape[0] % 64 == 0
+    assert int(valid.sum()) == n                 # only real slots are valid
+    assert not np.asarray(valid[n:]).any()
+    c = ops.counting_add(CSPEC, V.init(CSPEC), keys, tile=64)
+    ref_c = V.counting_add(CSPEC, V.init(CSPEC), keys)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(ref_c))
+    # one remove of the same batch returns to empty (exact inverse)
+    c2 = ops.counting_remove(CSPEC, c, keys, tile=64)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(V.init(CSPEC)))
+
+
+def test_counting_single_key_count_is_one():
+    """The sharpest pad-inflation probe: one key through a 64-wide tile must
+    count exactly 1 (repeat-padding would make it 64 -> saturated 15)."""
+    k1 = _keys(1, seed=9)
+    c = ops.counting_add(CSPEC, V.init(CSPEC), k1, tile=64)
+    assert int(np.asarray(V.counting_count(CSPEC, c, k1))[0]) == 1
+
+
+def test_counting_explicit_valid_mask_passthrough():
+    """Callers can pre-mask slots; dispatch preserves and extends the mask."""
+    keys = _keys(40, seed=11)
+    valid = jnp.concatenate([jnp.ones((30,), jnp.uint8),
+                             jnp.zeros((10,), jnp.uint8)])
+    c = ops.counting_add(CSPEC, V.init(CSPEC), keys, tile=64, valid=valid)
+    ref_c = V.counting_add(CSPEC, V.init(CSPEC), keys[:30])
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(ref_c))
+
+
+def test_partitioned_counting_padding_masked():
+    """The ownership-partitioned path pads per-segment to capacity; those
+    slots are valid-masked too (exact counts, PARALLEL grid)."""
+    keys = _keys(123, seed=13)
+    c = ops.counting_update_partitioned(CSPEC, V.init(CSPEC),
+                                        np.asarray(keys), op="add",
+                                        n_segments=8)
+    ref_c = V.counting_add(CSPEC, V.init(CSPEC), keys)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(ref_c))

@@ -33,6 +33,27 @@ def test_measured_tuner_runs():
     assert isinstance(best, Layout)
 
 
+def test_measured_tuner_best_of_k(monkeypatch):
+    """measure mode runs each candidate `repeats` times post-warmup and
+    scores by the minimum."""
+    import repro.core.tuning as T
+    calls = {"n": 0}
+    real_counter = T.time.perf_counter
+
+    def counting_counter():
+        calls["n"] += 1
+        return real_counter()
+
+    monkeypatch.setattr(T.time, "perf_counter", counting_counter)
+    spec = V.FilterSpec("sbf", 1 << 12, 8, block_bits=256)
+    _, table = tune_layout(spec, "add", mode="measure", n_keys=64, repeats=2)
+    # 2 perf_counter calls per timed rep, 2 reps per candidate
+    assert calls["n"] == 2 * 2 * len(table)
+    # distinct repeats values are distinct cache keys (lru_cache)
+    _, table3 = tune_layout(spec, "add", mode="measure", n_keys=64, repeats=1)
+    assert len(table3) == len(table)
+
+
 def test_train_driver_cli_smoke():
     from repro.launch.train import main
     rc = main(["--arch", "rwkv6-3b", "--steps", "4", "--batch", "2",
@@ -44,4 +65,12 @@ def test_serve_driver_cli_smoke():
     from repro.launch.serve import main
     rc = main(["--arch", "mistral-nemo-12b", "--requests", "2", "--batch",
                "2", "--prompt-len", "8", "--new-tokens", "4", "--guard"])
+    assert rc == 0
+
+
+def test_serve_driver_decayed_guard_smoke():
+    from repro.launch.serve import main
+    rc = main(["--arch", "mistral-nemo-12b", "--requests", "2", "--batch",
+               "2", "--prompt-len", "8", "--new-tokens", "4",
+               "--guard-decay-every", "4"])
     assert rc == 0

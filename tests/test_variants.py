@@ -11,7 +11,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import variants as V
 from repro.core import hashing as H
-from repro.core.filter import BloomFilter
 
 SPECS = [
     V.FilterSpec("cbf", 1 << 16, 8),
@@ -169,7 +168,7 @@ def test_fill_fraction_matches_expectation():
 
 
 # ---------------------------------------------------------------------------
-# Spec validation + facade
+# Spec validation + API sizing
 # ---------------------------------------------------------------------------
 
 def test_spec_validation():
@@ -183,16 +182,18 @@ def test_spec_validation():
         V.FilterSpec("nope", 1 << 16, 8)            # unknown variant
 
 
-def test_facade_for_n_items_sizing():
-    bf = BloomFilter.for_n_items(10_000, bits_per_key=16, variant="sbf",
-                                 backend="jnp")
-    assert bf.spec.m_bits >= 10_000 * 16
-    bf.add(H.random_u64x2(10_000, seed=8))
-    assert bf.measure_fpr(10_000) < 0.01  # c=16 should be well under 1%
+def test_for_n_items_sizing():
+    from repro import api
+    f = api.filter_for_n_items(10_000, bits_per_key=16, variant="sbf",
+                               backend="jnp")
+    assert f.spec.m_bits >= 10_000 * 16
+    f = f.add(H.random_u64x2(10_000, seed=8))
+    assert f.measure_fpr() < 0.01  # c=16 should be well under 1%
 
 
-def test_facade_accepts_uint64_numpy():
-    bf = BloomFilter.create("sbf", 1 << 14, 8, backend="jnp")
+def test_filter_accepts_uint64_numpy():
+    from repro import api
+    f = api.make_filter("sbf", m_bits=1 << 14, k=8, backend="jnp")
     keys = np.array([1, 2, 3], dtype=np.uint64)
-    bf.add(keys)
-    assert bool(np.asarray(bf.contains(keys)).all())
+    f = f.add(keys)
+    assert bool(np.asarray(f.contains(keys)).all())

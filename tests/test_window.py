@@ -1,0 +1,138 @@
+"""Generation-ring window subsystem: fused kernel parity + aging semantics.
+
+Acceptance: the fused ring-contains kernel is bit-exact against the OR-fold
+oracle in both regimes; ``advance()`` provably drops retired-generation
+keys — the empirical hit rate on expired keys returns to the analytic FPR
+of the surviving load; and the streaming-dedup consumer re-admits evicted
+documents.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import variants as V
+from repro.core import hashing as H
+from repro.kernels import ops
+from repro.kernels.ring import ring_contains_ref
+from repro.window import WindowedFilter
+
+SPEC = V.FilterSpec("sbf", 1 << 14, 8, block_bits=256)
+
+
+def _keys(n, seed=0):
+    return jnp.asarray(H.random_u64x2(n, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel == OR-fold oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_gen", [2, 3, 4])
+@pytest.mark.parametrize("regime", ["vmem", "hbm"])
+def test_ring_contains_kernel_matches_ref(n_gen, regime):
+    gens = [_keys(200, seed=g) for g in range(n_gen)]
+    rings = jnp.stack([V.add(SPEC, V.init(SPEC), k) for k in gens])
+    mixed = jnp.concatenate(gens + [_keys(333, seed=99)])   # hits + misses
+    ref = ring_contains_ref(SPEC, rings, mixed)
+    got = ops.ring_contains(SPEC, rings, mixed, regime=regime, tile=64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # every in-window key is found through the fused pass
+    assert np.asarray(got)[: n_gen * 200].all()
+
+
+def test_ring_contains_equals_union_filter():
+    """hit(ring) == hit(single filter holding the union) — the fused OR is
+    semantically the materialized union, minus the O(m) materialization."""
+    gens = [_keys(150, seed=g + 10) for g in range(3)]
+    rings = jnp.stack([V.add(SPEC, V.init(SPEC), k) for k in gens])
+    union = V.add(SPEC, V.add(SPEC, V.add(
+        SPEC, V.init(SPEC), gens[0]), gens[1]), gens[2])
+    probes = jnp.asarray(H.probe_u64x2(2048, seed=5))
+    np.testing.assert_array_equal(
+        np.asarray(ring_contains_ref(SPEC, rings, probes)),
+        np.asarray(V.contains(SPEC, union, probes)))
+
+
+# ---------------------------------------------------------------------------
+# WindowedFilter aging semantics
+# ---------------------------------------------------------------------------
+
+def test_advance_is_o1_and_preserves_live_generations():
+    wf = WindowedFilter.create("sbf", m_bits=1 << 14, k=8, generations=3)
+    a, b, c = (_keys(200, seed=s) for s in (1, 2, 3))
+    wf = wf.add(a).advance().add(b).advance().add(c)   # all 3 gens occupied
+    before = np.asarray(wf.rings)
+    wf2 = wf.advance()                                 # retires a's gen
+    after = np.asarray(wf2.rings)
+    # exactly one generation changed (zeroed) — no copies, no rehash
+    changed = [g for g in range(3)
+               if not (before[g] == after[g]).all()]
+    assert changed == [wf2.head]
+    assert not after[wf2.head].any()
+    assert bool(np.asarray(wf2.contains(b)).all())     # live gens intact
+    assert bool(np.asarray(wf2.contains(c)).all())
+
+
+def test_expired_keys_fpr_returns_to_theory():
+    """THE aging acceptance test: after a generation is retired, hits on its
+    keys are plain false positives — the measured rate matches the analytic
+    FPR of the load still in the window, not the ~1.0 of membership."""
+    G, per_gen = 3, 400
+    wf = WindowedFilter.for_window(G * per_gen, bits_per_key=16,
+                                   generations=G)
+    gens = [_keys(per_gen, seed=100 + g) for g in range(G + 1)]
+    wf = wf.add(gens[0])
+    for g in range(1, G + 1):                  # G more inserts+advances ...
+        wf = wf.advance().add(gens[g])
+    # ... so gens[0]'s generation has been zeroed; window holds gens[1..G]
+    live_n = G * per_gen
+    theory = wf.fpr_theory(live_n)
+    expired_hits = float(np.asarray(wf.contains(gens[0])).mean())
+    assert expired_hits <= max(3.0 * theory, 8.0 / per_gen), (
+        expired_hits, theory)
+    for g in range(1, G + 1):                  # live gens: zero false negs
+        assert bool(np.asarray(wf.contains(gens[g])).all())
+    # fresh-probe FPR agrees with the same theory (sanity anchor)
+    assert wf.measure_fpr(1 << 14) <= max(3.0 * theory, 1e-3)
+
+
+def test_windowed_sizing_hits_target_fpr():
+    """for_window sizes each generation for the FULL window load (shared
+    hashes make the queried union one m-bit filter of window_n keys)."""
+    wf = WindowedFilter.for_window(2000, bits_per_key=16, generations=4)
+    for g in range(5):
+        wf = wf.add(_keys(500, seed=g)).advance()
+    assert wf.measure_fpr(1 << 14) < 0.01
+
+
+def test_streaming_dedup_readmits_after_eviction():
+    """The consumer contract: a duplicate inside the window is dropped; the
+    same document re-sent after its window expired is admitted again."""
+    from repro.data.dedup import StreamingDedupFilter
+    rng = np.random.RandomState(0)
+    docs = [rng.randint(0, 1000, 20) for _ in range(64)]
+    # guaranteed retention is (G-1)/G * window = 96 admitted docs — longer
+    # than the 64-doc replay distance, so the replay must be fully dropped
+    sd = StreamingDedupFilter(window_docs=128, generations=4, batch_docs=32)
+    # pass 1: all unique -> all kept
+    kept1 = list(sd.filter_stream(iter(docs)))
+    assert len(kept1) == 64
+    # immediate replay: inside the window -> all dropped
+    kept2 = list(sd.filter_stream(iter(docs)))
+    assert len(kept2) == 0
+    # push enough fresh docs through to expire the originals ...
+    fresh = [rng.randint(1000, 2000, 20) for _ in range(96)]
+    list(sd.filter_stream(iter(fresh)))
+    # ... then replay: evicted -> re-admitted
+    kept3 = list(sd.filter_stream(iter(docs)))
+    assert len(kept3) >= 32, len(kept3)
+    assert sd.stats.advances >= 2
+
+
+def test_windowed_filter_is_pytree():
+    import jax
+    wf = WindowedFilter.create("sbf", m_bits=1 << 12, k=8, generations=2)
+    leaves, treedef = jax.tree_util.tree_flatten(wf)
+    assert len(leaves) == 1 and leaves[0] is wf.rings
+    wf2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert wf2.spec == wf.spec and wf2.head == wf.head
