@@ -38,11 +38,41 @@ def keys_u64x2(n: int, seed: int = 0):
 class Csv:
     def __init__(self):
         self.rows: List[str] = []
+        self.records: List[dict] = []
 
-    def add(self, name: str, us_per_call: float, derived: str = ""):
+    def add(self, name: str, us_per_call: float, derived: str = "",
+            n_ops: int = None):
+        """One bench row. ``n_ops`` (ops per timed call) derives Mops for
+        the machine-readable record so future PRs can diff throughput."""
         row = f"{name},{us_per_call:.3f},{derived}"
         self.rows.append(row)
+        rec = {"name": name, "us_per_call": round(float(us_per_call), 3),
+               "derived": derived}
+        if n_ops and us_per_call > 0:
+            rec["mops"] = round(n_ops / us_per_call, 3)
+        self.records.append(rec)
         print(row, flush=True)
 
     def header(self):
         print("name,us_per_call,derived", flush=True)
+
+    def write_json(self, path: str):
+        """Persist the perf trajectory: {meta, benches:[{name, us_per_call,
+        mops?, derived}]} — the diffable artifact committed as BENCH_PR*.json
+        and uploaded by the CI bench-json step."""
+        import json
+        import platform
+        payload = {
+            "meta": {
+                "backend": jax.default_backend(),
+                "interpret_mode": jax.default_backend() != "tpu",
+                "python": platform.python_version(),
+                "jax": jax.__version__,
+            },
+            "benches": self.records,
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(self.records)} bench records -> {path}",
+              flush=True)

@@ -110,7 +110,39 @@ def run(csv: Csv):
     for name, t in [("6_cbf_add", t5), ("7_sbf_add", t6),
                     ("8_plus_partitioned", t7), ("9_plus_segscan_rows", t8)]:
         csv.add(f"fig9/add/{name}", t * 1e6,
-                f"GElem/s={N_ADD/t/1e9:.4f} speedup_vs_cbf={t5/t:.2f}x")
+                f"GElem/s={N_ADD/t/1e9:.4f} speedup_vs_cbf={t5/t:.2f}x",
+                n_ops=N_ADD)
+
+    # ---- probe-strategy column (kernel schedule, interpret mode) -----------
+    # The Pallas kernels on a small VMEM-resident spec: per-key (Θ, Φ) loop
+    # vs the whole-tile gather engine. Interpret-mode wall time tracks the
+    # number of scheduled ops, so the ratio is the schedule-count win the
+    # vectorized path must show (acceptance: gather wins or ties).
+    from repro.core import tuning
+    from repro.kernels import ops as kops
+    from repro.kernels.sbf import default_layout
+    sbf_v = V.FilterSpec("sbf", 1 << 17, K, block_bits=B)   # VMEM-resident
+    pkeys = keys_u64x2(1 << 10, seed=11)
+    filt_v = V.add_scatter(sbf_v, V.init(sbf_v), pkeys)
+    for op in ("contains", "add"):
+        lay = default_layout(sbf_v, op)
+        times = {}
+        for probe in ("loop", "gather"):
+            if op == "contains":
+                fn = lambda f, k, p=probe: kops.bloom_contains(
+                    sbf_v, f, k, probe=p)
+                t = time_fn(fn, filt_v, pkeys, warmup=1, reps=3)
+            else:
+                fn = lambda f, k, p=probe: kops.bloom_add(
+                    sbf_v, f, k, probe=p)
+                t = time_fn(fn, V.init(sbf_v), pkeys, warmup=1, reps=3)
+            times[probe] = t
+            steps = tuning.probe_schedule_steps(sbf_v, lay, op, 256, probe)
+            csv.add(f"fig9/probe/{op}/{probe}", t * 1e6,
+                    f"sched_steps={steps:.0f}", n_ops=pkeys.shape[0])
+        csv.add(f"fig9/probe/{op}/winner", 0,
+                f"best={'gather' if times['gather'] <= times['loop'] else 'loop'} "
+                f"gather_speedup={times['loop']/times['gather']:.2f}x")
 
 
 if __name__ == "__main__":

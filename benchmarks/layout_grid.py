@@ -20,6 +20,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import Csv, keys_u64x2, time_fn
+from repro.core import tuning
 from repro.core import variants as V
 from repro.kernels import ops
 from repro.kernels.sbf import Layout, default_layout
@@ -49,20 +50,50 @@ def run(csv: Csv, measure: bool = True):
         for theta, phi in layouts:
             lay = Layout(theta, phi)
             sc = structural_cost(s, theta, phi, "contains")
+            steps_loop = tuning.probe_schedule_steps(spec, lay, "contains",
+                                                     256, "loop")
+            steps_gather = tuning.probe_schedule_steps(spec, lay, "contains",
+                                                       256, "gather")
+            probe_win = "gather" if steps_gather <= steps_loop else "loop"
             derived = (f"loads={sc['loads']} steps={sc['steps']} "
-                       f"vec={sc['vec_width']}")
+                       f"vec={sc['vec_width']} "
+                       f"probe_steps(loop/gather)={steps_loop:.0f}/"
+                       f"{steps_gather:.0f} probe_best={probe_win}")
             if measure:
                 t = time_fn(
                     lambda f, k, lay=lay, spec=spec:
-                        ops.bloom_contains(spec, f, k, layout=lay, tile=256),
+                        ops.bloom_contains(spec, f, k, layout=lay, tile=256,
+                                           probe="loop"),
                     filt, keys, warmup=1, reps=3)
                 base_t = base_t or t
                 derived += f" rel_time={t/base_t:.2f}"
             csv.add(f"layout/B{B}/Θ{theta}Φ{phi}", (t * 1e6) if measure else 0,
-                    derived)
+                    derived, n_ops=N_KEYS)
+        # the whole-tile gather engine is layout-free: one row per (B, op)
+        for op in ("contains", "add"):
+            steps_loop = tuning.probe_schedule_steps(
+                spec, default_layout(spec, op), op, 256, "loop")
+            steps_gather = tuning.probe_schedule_steps(
+                spec, default_layout(spec, op), op, 256, "gather")
+            if measure:
+                if op == "contains":
+                    fn = lambda f, k, spec=spec: ops.bloom_contains(
+                        spec, f, k, tile=256, probe="gather")
+                    t = time_fn(fn, filt, keys, warmup=1, reps=3)
+                else:
+                    fn = lambda f, k, spec=spec: ops.bloom_add(
+                        spec, f, k, tile=256, probe="gather")
+                    t = time_fn(fn, V.init(spec), keys, warmup=1, reps=3)
+            csv.add(f"layout/B{B}/gather/{op}", (t * 1e6) if measure else 0,
+                    f"probe_steps(loop/gather)={steps_loop:.0f}/"
+                    f"{steps_gather:.0f} "
+                    f"speedup_structural={steps_loop/max(steps_gather,1e-9):.1f}x",
+                    n_ops=N_KEYS)
         d = default_layout(spec, "contains")
+        plan = tuning.tune_plan(spec, "contains", regime="vmem", tile=256)
         csv.add(f"layout/B{B}/default", 0,
-                f"picked=Θ{d.theta}Φ{d.phi} (paper rule Θ̂=max(1,B/256))")
+                f"picked=Θ{d.theta}Φ{d.phi} (paper rule Θ̂=max(1,B/256)) "
+                f"plan_probe={plan.probe} plan_depth={plan.depth}")
 
 
 if __name__ == "__main__":

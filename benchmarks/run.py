@@ -31,6 +31,10 @@ def main(argv=None) -> None:
                     help="skip the interpret-mode layout grid (slow)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-size CI subset (harness health, not perf)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable bench records "
+                         "(per-bench us_per_call + derived Mops) to PATH — "
+                         "the perf-trajectory artifact (BENCH_PR*.json)")
     args = ap.parse_args(argv)
 
     csv = Csv()
@@ -48,6 +52,8 @@ def main(argv=None) -> None:
             dedup_pipeline.run(csv, n_docs=300)
         if "api_backends" in only:
             api_backends.run(csv, m_bits=1 << 14, n_keys=1 << 8)
+        if args.json:
+            csv.write_json(args.json)
         return
 
     benches = {
@@ -77,6 +83,8 @@ def main(argv=None) -> None:
             benches[name]()
     if (only is None and not args.skip_layout) or (only and "layout_grid" in only):
         layout_grid.run(csv)
+    if args.json:
+        csv.write_json(args.json)
 
 
 if __name__ == "__main__":

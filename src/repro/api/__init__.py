@@ -47,7 +47,8 @@ registry.register_alias("pallas", _legacy_pallas)
 
 def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
                 block_bits: int = 256, z: int = 1, backend: str = "auto",
-                layout=None, tile: Optional[int] = None, mesh=None,
+                layout=None, tile: Optional[int] = None,
+                probe: str = "auto", depth: Optional[int] = None, mesh=None,
                 axis: str = "data", capacity: Optional[int] = None,
                 generations: Optional[int] = None) -> Filter:
     """Build an empty :class:`Filter` for an explicit geometry.
@@ -56,10 +57,13 @@ def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
     bring the distributed engines into the candidate set). Forgetting
     filters: ``variant="countingbf"`` selects the counting engine
     (``remove``/``decay``); ``generations=G`` selects the windowed engine
-    (``advance``)."""
+    (``advance``). Kernel knobs (``layout``, ``tile``, ``probe``,
+    ``depth``) default to the autotuner's plan (``core.tuning.tune_plan``);
+    pass explicit values to pin them."""
     spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
                       block_bits=block_bits, z=z)
-    options = BackendOptions(layout=layout, tile=tile, mesh=mesh, axis=axis,
+    options = BackendOptions(layout=layout, tile=tile, probe=probe,
+                             depth=depth, mesh=mesh, axis=axis,
                              capacity=capacity, generations=generations)
     eng = registry.select(spec, backend, options.ctx())
     return Filter(spec=spec, words=eng.init(spec, options), backend=eng.name,

@@ -70,7 +70,7 @@ class _PallasBackend(Backend):
         return V.init(spec)
 
     def _kw(self, options):
-        kw = {"regime": self.regime}
+        kw = {"regime": self.regime, "probe": options.probe}
         if options.layout is not None:
             kw["layout"] = options.layout
         if options.tile is not None:
@@ -83,7 +83,10 @@ class _PallasBackend(Backend):
 
     def contains(self, spec, words, keys, options):
         from repro.kernels import ops
-        return ops.bloom_contains(spec, words, keys, **self._kw(options))
+        # depth only applies to the HBM streaming pipeline; the kernels
+        # resolve None through core.tuning.tune_plan.
+        return ops.bloom_contains(spec, words, keys, depth=options.depth,
+                                  **self._kw(options))
 
 
 class PallasVmemBackend(_PallasBackend):
@@ -144,31 +147,30 @@ class CountingBackend(Backend):
     def _tpu(self) -> bool:
         return jax.default_backend() == "tpu"
 
+    def _kw(self, options):
+        kw = {"layout": options.layout, "probe": options.probe}
+        if options.tile is not None:
+            kw["tile"] = options.tile
+        return kw
+
     def add(self, spec, words, keys, options):
         if self._tpu():
             from repro.kernels import ops
-            return ops.counting_add(spec, words, keys,
-                                    layout=options.layout,
-                                    **({"tile": options.tile}
-                                       if options.tile else {}))
+            return ops.counting_add(spec, words, keys, **self._kw(options))
         return V.counting_add(spec, words, keys)
 
     def remove(self, spec, words, keys, options):
         if self._tpu():
             from repro.kernels import ops
-            return ops.counting_remove(spec, words, keys,
-                                       layout=options.layout,
-                                       **({"tile": options.tile}
-                                          if options.tile else {}))
+            return ops.counting_remove(spec, words, keys, **self._kw(options))
         return V.counting_remove(spec, words, keys)
 
     def contains(self, spec, words, keys, options):
         if self._tpu():
             from repro.kernels import ops
             return ops.counting_contains(spec, words, keys,
-                                         layout=options.layout,
-                                         **({"tile": options.tile}
-                                            if options.tile else {}))
+                                         depth=options.depth,
+                                         **self._kw(options))
         return V.counting_contains(spec, words, keys)
 
     def decay(self, spec, words, options):
@@ -238,6 +240,26 @@ class WindowedBackend(Backend):
         are not recoverable from the canonical form)."""
         words = jnp.zeros((options.generations, dense.shape[0]), jnp.uint32)
         return words.at[options.head].set(dense)
+
+
+def tuned_options(spec: FilterSpec, op: str = "contains",
+                  regime: str = "auto", tile: int = None):
+    """Pin a ``BackendOptions`` to the autotuner's plan for (spec, op).
+
+    ``make_filter(probe="auto")`` already resolves lazily per call; this
+    helper materializes the tuned (layout, probe, depth) eagerly — useful
+    when the caller wants the plan recorded in the pytree aux data (one
+    cached-jit executable per pinned plan) or inspected/logged.
+    """
+    from repro.core import tuning
+    from repro.kernels import ops as kops
+    from repro.kernels.sbf import DEFAULT_TILE
+    from repro.api.filter import BackendOptions
+    tile = tile or DEFAULT_TILE
+    plan = tuning.tune_plan(spec, op, regime=kops._regime(spec, regime),
+                            tile=tile)
+    return BackendOptions(layout=plan.layout, tile=tile, probe=plan.probe,
+                          depth=plan.depth)
 
 
 def register_all():

@@ -35,12 +35,19 @@ class BackendOptions:
     """Static (hashable) engine parameters carried in the pytree aux data.
 
     Unused fields are ignored by engines that don't need them: ``layout`` /
-    ``tile`` steer the Pallas kernels, ``mesh``/``axis``/``capacity`` the
-    distributed engines.
+    ``tile`` / ``probe`` / ``depth`` steer the Pallas kernels,
+    ``mesh``/``axis``/``capacity`` the distributed engines.
+
+    ``probe="auto"`` and ``depth=None`` resolve through
+    ``core.tuning.tune_plan`` at trace time — the tuned plan (probe
+    strategy, DMA pipeline depth, layout) flows from the disk-persisted
+    tuning cache into every kernel launched through the API.
     """
 
     layout: Optional[object] = None    # kernels.sbf.Layout
     tile: Optional[int] = None         # Pallas key-tile override
+    probe: str = "auto"                # vmem phase 2: "loop"|"gather"|"auto"
+    depth: Optional[int] = None        # HBM contains DMA pipeline depth
     mesh: Optional[object] = None      # jax.sharding.Mesh
     axis: str = "data"
     capacity: Optional[int] = None     # sharded routing capacity per (src,dst)

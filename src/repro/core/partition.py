@@ -16,7 +16,7 @@ capacity, validity-masked) implementation are provided.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import numpy as np
 import jax
@@ -24,6 +24,22 @@ import jax.numpy as jnp
 
 from repro.core import hashing as H
 from repro.core.variants import FilterSpec
+
+
+class JitPartition(NamedTuple):
+    """Result of :func:`partition_jit` (all device arrays, fixed shapes).
+
+    ``keep`` marks the keys that landed inside their segment's capacity;
+    ``overflow`` counts the ones that did NOT (they are absent from
+    ``keys_by_seg`` and the caller MUST handle them — retry with a larger
+    capacity, or apply a residual pass over ``~keep``). Silent key loss
+    through this path is a bug, not a policy.
+    """
+
+    keys_by_seg: jnp.ndarray   # (n_segments, capacity, 2) uint32
+    valid: jnp.ndarray         # (n_segments, capacity) uint8
+    keep: jnp.ndarray          # (n,) bool — key survived into its segment
+    overflow: jnp.ndarray      # () int32 — number of dropped keys
 
 
 def segment_ids(spec: FilterSpec, keys: jnp.ndarray, n_segments: int) -> jnp.ndarray:
@@ -61,12 +77,15 @@ def partition_host(spec: FilterSpec, keys: np.ndarray, n_segments: int
 
 
 def partition_jit(spec: FilterSpec, keys: jnp.ndarray, n_segments: int,
-                  capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                  capacity: int) -> JitPartition:
     """jit-compatible partition with static per-segment capacity.
 
-    Overflowing keys (beyond ``capacity`` in a segment) are dropped — callers
-    choose capacity with headroom (mean * 4 is ~collision-free for uniform
-    hashes) or fall back to the host path. Returns (keys_by_seg, valid).
+    Keys beyond ``capacity`` in a segment do not fit the fixed-shape output;
+    instead of silently dropping them this reports ``keep``/``overflow`` so
+    dispatch (`kernels.ops.bloom_add_partitioned`) can escalate capacity
+    (concrete callers) or run a vectorized residual pass over the dropped
+    keys (traced callers). Capacity of mean * 4 is ~overflow-free for
+    uniform hashes. Returns a :class:`JitPartition`.
     """
     n = keys.shape[0]
     seg = segment_ids(spec, keys, n_segments)                    # (n,)
@@ -81,5 +100,8 @@ def partition_jit(spec: FilterSpec, keys: jnp.ndarray, n_segments: int,
                           ).at[slot].set(keys, mode="drop")
     flat_valid = jnp.zeros((n_segments * capacity + 1,), jnp.uint8
                            ).at[slot].set(1, mode="drop")
-    return (flat_keys[:-1].reshape(n_segments, capacity, 2),
-            flat_valid[:-1].reshape(n_segments, capacity))
+    return JitPartition(
+        flat_keys[:-1].reshape(n_segments, capacity, 2),
+        flat_valid[:-1].reshape(n_segments, capacity),
+        keep,
+        jnp.int32(n) - jnp.sum(keep).astype(jnp.int32))

@@ -1,34 +1,120 @@
-"""(Θ, Φ) layout autotuner — the paper's Table 1/2 grid search as a library.
+"""(Θ, Φ, probe, depth, segments) autotuner — the paper's Table 1/2 grid
+search as a library, extended to every axis the kernels expose.
 
 The paper's headline empirical result is that the optimal vectorization
 layout depends on (operation, block size, residency). ``tune_layout`` sweeps
-the valid (Θ, Φ) grid for a spec and returns the fastest layout:
+the valid (Θ, Φ) grid for a (spec, tile) and returns the fastest layout;
+``tune_plan`` additionally picks the probe strategy (per-key loop vs
+whole-tile gather), the HBM DMA pipeline depth and the partitioned-add
+segment count, returning a :class:`Plan` that `api.backends` threads into
+the kernels:
 
 * ``mode="measure"`` times the Pallas kernels, best-of-``repeats`` after a
   warmup run to de-noise the grid (meaningful on real TPU; in interpret
   mode the ratios reflect schedule structure);
-* ``mode="structural"`` scores layouts analytically (loads per block,
-  strided steps, vector width — the §4.1 derivations) and applies the
-  paper's empirical tie-breaks (Θ̂_c = max(1, B/256), Θ̂_a = s), giving a
-  deterministic offline choice for dry-run/compile-only environments.
+* ``mode="structural"`` scores candidates analytically (loads per block,
+  strided steps, vector width, schedule-step counts, DMA stall model — the
+  §4.1 derivations) and applies the paper's empirical tie-breaks
+  (Θ̂_c = max(1, B/256), Θ̂_a = s), giving a deterministic offline choice
+  for dry-run/compile-only environments.
 
-Results are cached per (spec, op, mode).
+Results are cached per (spec, op, mode, tile[, regime]) in-process AND in a
+disk-persisted JSON cache (``REPRO_TUNING_CACHE`` env var, default
+``~/.cache/repro/tuning.json``) so a fleet of processes pays the grid
+search once. The cache key includes every axis that changes the valid
+candidate set — in particular ``tile``: a layout tuned for tile=256 is NOT
+valid for tile=8 (Θ must divide the tile), which is why tile lives in the
+key and every candidate is re-validated against it.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import json
+import os
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import hashing as H
 from repro.core.variants import FilterSpec
-from repro.kernels.sbf import Layout, default_layout
+from repro.kernels.sbf import (DEFAULT_TILE, DMA_DEPTHS, Layout,
+                               VMEM_FILTER_BYTES, default_layout)
+
+TUNABLE_DEPTHS = (2, 4, 8)        # the sweep; depth=1 (serial) is debug-only
+TUNABLE_SEGMENTS = (4, 8, 16, 32)
 
 
-def valid_layouts(spec: FilterSpec, tile: int = 256) -> List[Layout]:
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One tuned kernel configuration (static, hashable — carried through
+    `api.BackendOptions` and closed over by the cached-jit dispatch)."""
+
+    layout: Layout
+    probe: str = "gather"          # "loop" | "gather" (vmem-regime phase 2)
+    depth: int = 2                 # HBM contains DMA pipeline depth
+    n_segments: int = 8            # partitioned bulk-add grid width
+
+    def to_dict(self) -> dict:
+        return {"theta": self.layout.theta, "phi": self.layout.phi,
+                "probe": self.probe, "depth": self.depth,
+                "n_segments": self.n_segments}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        return cls(Layout(int(d["theta"]), int(d["phi"])), str(d["probe"]),
+                   int(d["depth"]), int(d["n_segments"]))
+
+
+# ---------------------------------------------------------------------------
+# Disk-persisted cache
+# ---------------------------------------------------------------------------
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_TUNING_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "tuning.json"))
+
+
+def _load_disk() -> dict:
+    try:
+        with open(cache_path()) as f:
+            data = json.load(f)
+        return data if isinstance(data, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_disk(key: str, value: dict) -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        data = _load_disk()
+        data[key] = value
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=0, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass                       # cache is an optimization, never an error
+
+
+def _plan_key(spec: FilterSpec, op: str, regime: str, mode: str,
+              tile: int) -> str:
+    # The backend is part of the key: measure-mode timings taken in CPU
+    # interpret mode must never pin a plan for a real TPU run (the same
+    # stale-key class of bug as omitting tile).
+    return f"plan|{jax.default_backend()}|{spec}|{op}|{regime}|{mode}|tile{tile}"
+
+
+# ---------------------------------------------------------------------------
+# (Θ, Φ) layout grid
+# ---------------------------------------------------------------------------
+
+def valid_layouts(spec: FilterSpec, tile: int = DEFAULT_TILE) -> List[Layout]:
     s = spec.s
     out = []
     for theta in (1, 2, 4, 8, 16):
@@ -57,8 +143,51 @@ def structural_score(spec: FilterSpec, lay: Layout, op: str) -> float:
     return score
 
 
-def _measure(spec: FilterSpec, lay: Layout, op: str, n_keys: int,
-             repeats: int = 3) -> float:
+def probe_schedule_steps(spec: FilterSpec, lay: Layout, op: str, tile: int,
+                         probe: str) -> float:
+    """Interpret-mode schedule-step count of one key tile's phase 2.
+
+    loop:   (tile/Θ) trips, each issuing s/Φ loads + 1 fused compare (or
+            s/Φ RMW pairs for add) — the per-key scalar walk.
+    gather: a constant number of whole-tile vector ops — index build,
+            ONE gather, ONE fused compare for contains; sort (log²-depth
+            bitonic analogue), segmented scan, gather, scatter for add.
+    """
+    if probe == "loop":
+        per_trip = spec.s // lay.phi + (1 if op == "contains" else
+                                        spec.s // lay.phi)
+        return (tile // lay.theta) * per_trip
+    import math
+    if op == "contains":
+        return 3.0
+    lg = max(math.log2(max(tile, 2)), 1.0)
+    return 2.0 * lg + 4.0          # sort + segmented scan + gather + scatter
+
+
+def depth_structural_score(spec: FilterSpec, depth: int) -> float:
+    """Stall model for the HBM contains pipeline: a row DMA costs a fixed
+    issue latency plus the row transfer; each in-flight slot hides one
+    row's compute. Deeper pipelines win for small rows (latency-bound) and
+    waste scratch for large rows (bandwidth-bound)."""
+    s = spec.s
+    latency = 32.0 + s             # fixed DMA latency + transfer (words)
+    compute = float(s)             # per-row test cost
+    stall = max(latency - (depth - 1) * compute, 0.0)
+    return stall + compute + 0.1 * depth * s   # + scratch pressure tiebreak
+
+
+def segments_structural_score(spec: FilterSpec, n_segments: int) -> float:
+    """Prefer the smallest grid whose exclusive segment fits the VMEM
+    budget (each partitioned-grid step pins one segment)."""
+    if spec.n_blocks % n_segments or spec.storage_words % n_segments:
+        return float("inf")
+    seg_bytes = spec.storage_words * 4 / n_segments
+    penalty = 0.0 if seg_bytes <= VMEM_FILTER_BYTES else seg_bytes
+    return penalty + n_segments    # grid-launch overhead tiebreak
+
+
+def _measure(spec: FilterSpec, op: str, n_keys: int, repeats: int,
+             **kw) -> float:
     """Best-of-``repeats`` post-warmup wall time.
 
     A single timed run is dominated by scheduler/allocator noise at the
@@ -69,9 +198,9 @@ def _measure(spec: FilterSpec, lay: Layout, op: str, n_keys: int,
     keys = jnp.asarray(H.random_u64x2(n_keys, seed=7))
     filt = jnp.zeros((spec.n_words,), jnp.uint32)
     if op == "contains":
-        fn = lambda: ops.bloom_contains(spec, filt, keys, layout=lay)
+        fn = lambda: ops.bloom_contains(spec, filt, keys, **kw)
     else:
-        fn = lambda: ops.bloom_add(spec, filt, keys, layout=lay)
+        fn = lambda: ops.bloom_add(spec, filt, keys, **kw)
     jax.block_until_ready(fn())                       # warmup (compile)
     best = float("inf")
     for _ in range(max(repeats, 1)):
@@ -81,24 +210,93 @@ def _measure(spec: FilterSpec, lay: Layout, op: str, n_keys: int,
     return best
 
 
-@functools.lru_cache(maxsize=128)
+@functools.lru_cache(maxsize=256)
 def tune_layout(spec: FilterSpec, op: str = "contains",
                 mode: str = "structural", n_keys: int = 1024,
-                repeats: int = 3
+                repeats: int = 3, tile: int = DEFAULT_TILE
                 ) -> Tuple[Layout, List[Tuple[str, float]]]:
     """Returns (best layout, [(layout-name, score/time) ...]).
 
+    ``tile`` is part of the cache key AND the validation constraint: Θ must
+    divide the tile, so the candidate grid differs per tile and a layout
+    tuned for one tile must never be silently reused for another.
     ``repeats`` (measure mode) de-noises the grid search: each candidate is
     timed ``repeats`` times post-warmup and scored by its best run."""
     assert op in ("contains", "add")
-    cands = valid_layouts(spec)
+    cands = []
+    for lay in valid_layouts(spec, tile):
+        try:
+            cands.append(lay.validate(spec, tile))
+        except AssertionError:
+            continue
+    cands = sorted(set(cands), key=lambda l: (l.theta, l.phi))
     if not cands:
         return default_layout(spec, op), []
     if mode == "structural":
         scored = [(str(l), structural_score(spec, l, op)) for l in cands]
     else:
-        scored = [(str(l), _measure(spec, l, op, n_keys, repeats))
+        scored = [(str(l), _measure(spec, op, n_keys, repeats,
+                                    layout=l, tile=tile, probe="loop"))
                   for l in cands]
     best_name, _ = min(scored, key=lambda kv: kv[1])
     best = next(l for l in cands if str(l) == best_name)
     return best, sorted(scored, key=lambda kv: kv[1])
+
+
+# ---------------------------------------------------------------------------
+# Full-plan sweep: probe strategy x depth x segments (+ the layout grid)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def tune_plan(spec: FilterSpec, op: str = "contains", regime: str = "vmem",
+              mode: str = "structural", n_keys: int = 1024, repeats: int = 3,
+              tile: int = DEFAULT_TILE) -> Plan:
+    """Pick (layout, probe, depth, n_segments) for a (spec, op, regime).
+
+    Checks the disk cache first; a miss runs the sweep (structural scores
+    or best-of-k measurements) and persists the winner, so every process
+    on a host converges to one tuned plan per configuration.
+    """
+    assert op in ("contains", "add")
+    key = _plan_key(spec, op, regime, mode, tile)
+    cached = _load_disk().get(key)
+    if cached is not None:
+        try:
+            plan = Plan.from_dict(cached)
+            # Re-validate against the CURRENT constraint sets — a stale
+            # entry from an older library version (depth no longer in the
+            # sweep, renamed probe, Θ that stopped dividing the tile) must
+            # re-tune, not crash every probe="auto" call until the user
+            # deletes the cache file by hand.
+            from repro.kernels.sbf import DMA_DEPTHS, PROBES
+            if (plan.probe in PROBES and plan.depth in DMA_DEPTHS
+                    and plan.n_segments in TUNABLE_SEGMENTS):
+                plan.layout.validate(spec, tile)
+                return plan
+        except (KeyError, ValueError, TypeError, AssertionError):
+            pass                   # stale/corrupt entry: re-tune
+    layout, _ = tune_layout(spec, op, mode=mode, n_keys=n_keys,
+                            repeats=repeats, tile=tile)
+    if mode == "measure" and regime == "vmem":
+        t_loop = _measure(spec, op, n_keys, repeats, layout=layout,
+                          tile=tile, probe="loop", regime="vmem")
+        t_gather = _measure(spec, op, n_keys, repeats, tile=tile,
+                            probe="gather", regime="vmem")
+        probe = "gather" if t_gather <= t_loop else "loop"
+    else:
+        steps = {p: probe_schedule_steps(spec, layout, op, tile, p)
+                 for p in ("loop", "gather")}
+        probe = min(steps, key=steps.get)
+    if mode == "measure" and regime == "hbm" and op == "contains":
+        timed = {d: _measure(spec, op, n_keys, repeats, regime="hbm",
+                             tile=tile, depth=d) for d in TUNABLE_DEPTHS}
+        depth = min(timed, key=timed.get)
+    else:
+        depth = min(TUNABLE_DEPTHS,
+                    key=lambda d: depth_structural_score(spec, d))
+    n_segments = min(TUNABLE_SEGMENTS,
+                     key=lambda ns: segments_structural_score(spec, ns))
+    plan = Plan(layout=layout, probe=probe, depth=depth,
+                n_segments=n_segments)
+    _store_disk(key, plan.to_dict())
+    return plan

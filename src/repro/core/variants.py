@@ -309,6 +309,31 @@ def add_scatter(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray) -> jnp.n
     return acc
 
 
+def segment_totals(sorted_ids: jnp.ndarray, vals: jnp.ndarray,
+                   combine) -> jnp.ndarray:
+    """Per-row full-segment reduction of ``vals`` grouped by ``sorted_ids``.
+
+    ``sorted_ids``: (n,) nondecreasing segment ids; ``vals``: (n, w) rows;
+    ``combine``: associative elementwise op (e.g. ``jnp.bitwise_or``,
+    :func:`nib_sat_add_words`). Returns (n, w) where every row holds the
+    reduction of its *whole* segment (broadcast back from the segment end),
+    via one segmented associative scan — no data-dependent loop, so it runs
+    identically in the jnp reference and inside Pallas kernel bodies.
+    """
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+
+    def seg_combine(a, b):
+        m1, f1 = a
+        m2, f2 = b
+        return jnp.where(f2[:, None], m2, combine(m1, m2)), f1 | f2
+
+    scanned, _ = jax.lax.associative_scan(seg_combine, (vals, seg_start),
+                                          axis=0)
+    end_idx = jnp.searchsorted(sorted_ids, sorted_ids, side="right") - 1
+    return scanned[end_idx]
+
+
 def contains_rows(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray
                   ) -> jnp.ndarray:
     """Row-gather membership test (§Perf iteration B1).
@@ -345,21 +370,22 @@ def add_rows(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray
     h1, h2 = _hashes(keys)
     blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
     masks = block_patterns(spec, h1)
+    return or_rows(spec, filt, blk, masks)
+
+
+def or_rows(spec: FilterSpec, filt: jnp.ndarray, blk: jnp.ndarray,
+            masks: jnp.ndarray) -> jnp.ndarray:
+    """Conflict-free whole-batch OR of per-key ``masks`` into their blocks.
+
+    Sort by block, segment-OR the masks of same-block keys, then ONE row
+    gather + ONE row scatter. Duplicate scatter indices carry identical
+    values, so ``set`` is deterministic. Rows with all-zero masks are OR
+    no-ops, which is what makes this the overflow-residual backstop of the
+    jit partition path (`kernels.ops`) as well as the `add_rows` engine.
+    """
     order = jnp.argsort(blk)
     sb = blk[order]
-    sm = masks[order]
-    seg_start = jnp.concatenate(
-        [jnp.ones((1,), bool), sb[1:] != sb[:-1]])
-
-    def combine(a, b):
-        m1, f1 = a
-        m2, f2 = b
-        return jnp.where(f2[:, None], m2, m1 | m2), f1 | f2
-
-    scanned, _ = jax.lax.associative_scan(combine, (sm, seg_start), axis=0)
-    # last row of each segment holds the full OR; broadcast it back
-    end_idx = jnp.searchsorted(sb, sb, side="right") - 1
-    or_full = scanned[end_idx]                                # (n, s)
+    or_full = segment_totals(sb, masks[order], jnp.bitwise_or)    # (n, s)
     filt2d = filt.reshape(spec.n_blocks, spec.s)
     rows = filt2d[sb]
     new = filt2d.at[sb].set(rows | or_full)                   # identical dups
@@ -430,6 +456,52 @@ def guard_dec_word(w: jnp.ndarray, dec: jnp.ndarray) -> jnp.ndarray:
 def decay_word(w: jnp.ndarray) -> jnp.ndarray:
     """-1 on every nonzero nibble (aging step; saturated counters decay too)."""
     return w - nib_nonzero(w)
+
+
+# Multi-count nibble arithmetic (whole-tile gather/scatter probe engine).
+# The per-key kernels apply 0/1 increments one key at a time; the gather
+# engine instead segment-reduces all same-block increments first and applies
+# the TOTAL in one RMW. Saturation makes that exact: counts clip at 15
+# during the reduction, and min(old + c, 15) / max(old - c, 0) for c >= 15
+# equal the c = 15 results, so the batched formulas below reproduce the
+# sequential per-key semantics bit-for-bit.
+_NIB_EVEN = np.uint32(0x0F0F0F0F)     # even-nibble byte lanes
+_BYTE_BIT4 = np.uint32(0x10101010)    # bit 4 of every byte (carry/borrow flag)
+
+
+def _halves(w: jnp.ndarray):
+    """Split packed nibbles into even/odd byte lanes (each value fits a byte
+    with headroom, so per-byte +/- is carry-free SWAR)."""
+    return w & _NIB_EVEN, (w >> jnp.uint32(4)) & _NIB_EVEN
+
+
+def nib_sat_add_words(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Nibble-wise saturating add of two packed counter words: min(a+b, 15).
+
+    Associative and commutative, so it is a valid segmented-scan combiner
+    (the counting analogue of the bit filters' segment OR)."""
+    def half(x, y):
+        s = x + y                               # per-byte sums <= 30
+        ov = s & _BYTE_BIT4                     # set iff the byte is >= 16
+        return (s | (ov - (ov >> jnp.uint32(4)))) & _NIB_EVEN
+    ae, ao = _halves(a)
+    be, bo = _halves(b)
+    return half(ae, be) | (half(ao, bo) << jnp.uint32(4))
+
+
+def nib_guard_sub_words(w: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Nibble-wise guarded multi-decrement: where(w == 15, 15, max(w - c, 0)).
+
+    The batched form of ``c`` applications of :func:`guard_dec_word` —
+    sticky saturation and the 0 floor are preserved per nibble."""
+    def half(x, y):
+        d = (x | _BYTE_BIT4) - y                # bias: per-byte in [1, 31]
+        ok = d & _BYTE_BIT4                     # set iff x >= y (no borrow)
+        return d & (ok - (ok >> jnp.uint32(4))) & _NIB_EVEN
+    we, wo = _halves(w)
+    ce, co = _halves(c)
+    sub = half(we, ce) | (half(wo, co) << jnp.uint32(4))
+    return sub | (nib_saturated(w) * jnp.uint32(COUNTER_MAX))   # 15 sticks
 
 
 def expand_mask_words(masks: jnp.ndarray) -> jnp.ndarray:

@@ -34,8 +34,9 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import hashing as H
 from repro.core import variants as V
 from repro.core.variants import FilterSpec
-from repro.kernels.sbf import (DEFAULT_TILE, Layout, _COMPILER_PARAMS,
-                               _mask_row, _take_scalar)
+from repro.kernels.sbf import (DEFAULT_DMA_DEPTH, DEFAULT_TILE, DMA_DEPTHS,
+                               Layout, PROBES, _COMPILER_PARAMS, _mask_row,
+                               _take_scalar)
 
 
 def _cfingerprints(spec: FilterSpec, keys: jnp.ndarray,
@@ -112,6 +113,53 @@ def _update_vmem_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
     jax.lax.fori_loop(0, tile // theta, group_body, jnp.int32(0))
 
 
+# ---------------------------------------------------------------------------
+# Whole-tile gather-probe kernels (probe="gather") — counting analogue
+# ---------------------------------------------------------------------------
+# Counting updates cannot use the bit filters' segment OR: increments are
+# not idempotent. The conflict-free construction is instead a segmented
+# SATURATING NIBBLE ADD (`nib_sat_add_words` — associative because
+# min(Σ, 15) is grouping-independent for nonnegative nibbles): all
+# same-block increment rows collapse to one total row, then ONE row gather
+# + ONE row scatter applies min(old + total, 15) (add) or the guarded
+# where(old == 15, 15, max(old - total, 0)) (remove) — bit-exact against
+# the sequential per-key kernels because counts clip at 15 either way.
+
+def _accumulate(op: str):
+    return V.nib_sat_add_words if op == "add" else V.nib_guard_sub_words
+
+
+def _update_vmem_gather_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
+                               spec: FilterSpec, tile: int, op: str):
+    cs = spec.counter_row_words
+    apply = _accumulate(op)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...])
+    blk = jax.lax.div(cstarts, jnp.int32(cs))
+    order = jnp.argsort(blk)
+    sb = blk[order]
+    totals = V.segment_totals(sb, cmasks[order], V.nib_sat_add_words)
+    f2d = out_ref[...].reshape(-1, cs)
+    rows = jnp.take(f2d, sb, axis=0)
+    out_ref[...] = f2d.at[sb].set(apply(rows, totals)).reshape(-1)
+
+
+def _contains_vmem_gather_kernel(keys_ref, filt_ref, out_ref, *,
+                                 spec: FilterSpec, tile: int):
+    cs = spec.counter_row_words
+    h1 = H.xxh32_u64x2(keys_ref[...], H.SEED_PATTERN)
+    h2 = H.xxh32_u64x2(keys_ref[...], H.SEED_BLOCK)
+    blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
+    masks = V.block_patterns(spec, h1, batched=False)          # logical (n, s)
+    rows = jnp.take(filt_ref[...].reshape(-1, cs), blk, axis=0)  # (tile, 4s)
+    occ = V.collapse_counter_words(rows)                       # (tile, s)
+    out_ref[...] = jnp.all((occ & masks) == masks, axis=-1)
+
+
 def _contains_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
                           layout: Layout, tile: int):
     cs, theta, phi = spec.counter_row_words, layout.theta, layout.phi
@@ -145,15 +193,22 @@ def _contains_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
 
 def update_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                 valid: jnp.ndarray, op: str, layout: Layout = None,
-                tile: int = DEFAULT_TILE, interpret: bool = True
-                ) -> jnp.ndarray:
+                tile: int = DEFAULT_TILE, interpret: bool = True,
+                probe: str = "loop") -> jnp.ndarray:
     """Bulk increment/decrement, whole counter array pinned in VMEM."""
     n = keys.shape[0]
     assert n % tile == 0
-    layout = counting_layout(spec, layout or default_counting_layout(spec, op),
-                             tile)
-    kern = functools.partial(_update_vmem_kernel, spec=spec, layout=layout,
-                             tile=tile, op=op)
+    assert probe in PROBES, probe
+    # An explicitly-passed layout is validated regardless of probe — the
+    # gather engine ignores it, but never silently accepts an invalid one.
+    layout = counting_layout(
+        spec, layout or default_counting_layout(spec, op), tile)
+    if probe == "gather":
+        kern = functools.partial(_update_vmem_gather_kernel, spec=spec,
+                                 tile=tile, op=op)
+    else:
+        kern = functools.partial(_update_vmem_kernel, spec=spec, layout=layout,
+                                 tile=tile, op=op)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -170,13 +225,18 @@ def update_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                   layout: Layout = None, tile: int = DEFAULT_TILE,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool = True, probe: str = "loop") -> jnp.ndarray:
     n = keys.shape[0]
     assert n % tile == 0
+    assert probe in PROBES, probe
     layout = counting_layout(
         spec, layout or default_counting_layout(spec, "contains"), tile)
-    kern = functools.partial(_contains_vmem_kernel, spec=spec, layout=layout,
-                             tile=tile)
+    if probe == "gather":
+        kern = functools.partial(_contains_vmem_gather_kernel, spec=spec,
+                                 tile=tile)
+    else:
+        kern = functools.partial(_contains_vmem_kernel, spec=spec,
+                                 layout=layout, tile=tile)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -196,11 +256,13 @@ def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 def _update_hbm_kernel(keys_ref, valid_ref, filt_hbm, out_hbm, scratch,
                        sem_r, sem_w, *, spec: FilterSpec, tile: int, op: str):
-    """DMA read row -> nibble update -> DMA write back; serialized per key
-    (two consecutive keys may share a block, and counting RMW windows must
-    never overlap — same ownership argument as the bit add)."""
+    """Block-sorted coalesced DMA RMW: the tile is sorted by counter row
+    and same-row increments collapse to one total via the segmented
+    saturating nibble add, so the DMA loop touches each *unique* row once
+    (vs one serialized RMW per key). Distinct rows are disjoint word
+    ranges — the ownership argument needs no atomics."""
     cs = spec.counter_row_words
-    update = _update(op)
+    apply = _accumulate(op)
 
     @pl.when(pl.program_id(0) == 0)
     def _seed():
@@ -209,28 +271,35 @@ def _update_hbm_kernel(keys_ref, valid_ref, filt_hbm, out_hbm, scratch,
         cp.wait()
 
     cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...])
+    order = jnp.argsort(cstarts)
+    sst = cstarts[order]
+    totals = V.segment_totals(sst, cmasks[order], V.nib_sat_add_words)
+    is_end = jnp.concatenate([sst[1:] != sst[:-1], jnp.ones((1,), bool)])
 
     def body(i, carry):
-        st = _take_scalar(cstarts, i)
-        rd = pltpu.make_async_copy(out_hbm.at[pl.ds(st, cs)], scratch.at[0],
-                                   sem_r.at[0])
-        rd.start()
-        rd.wait()
-        row = pl.load(scratch, (pl.ds(0, 1), slice(None)))[0]
-        new = update(row, _mask_row(cmasks, i, cs))
-        pl.store(scratch, (pl.ds(1, 1), slice(None)), new[None])
-        wr = pltpu.make_async_copy(scratch.at[1], out_hbm.at[pl.ds(st, cs)],
-                                   sem_w.at[0])
-        wr.start()
-        wr.wait()
+        @pl.when(_take_scalar(is_end, i))
+        def _rmw():                        # one RMW per unique counter row
+            st = _take_scalar(sst, i)
+            rd = pltpu.make_async_copy(out_hbm.at[pl.ds(st, cs)],
+                                       scratch.at[0], sem_r.at[0])
+            rd.start()
+            rd.wait()
+            row = pl.load(scratch, (pl.ds(0, 1), slice(None)))[0]
+            new = apply(row, _mask_row(totals, i, cs))
+            pl.store(scratch, (pl.ds(1, 1), slice(None)), new[None])
+            wr = pltpu.make_async_copy(scratch.at[1],
+                                       out_hbm.at[pl.ds(st, cs)], sem_w.at[0])
+            wr.start()
+            wr.wait()
         return carry
 
     jax.lax.fori_loop(0, tile, body, jnp.int32(0))
 
 
 def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
-                         spec: FilterSpec, tile: int):
-    """Double-buffered row streaming, counting analogue of sbf contains_hbm."""
+                         spec: FilterSpec, tile: int, depth: int):
+    """Depth-tunable row-streaming pipeline, counting analogue of sbf
+    contains_hbm: up to depth-1 row DMAs in flight ahead of the test."""
     cs = spec.counter_row_words
     h1 = H.xxh32_u64x2(keys_ref[...], H.SEED_PATTERN)
     h2 = H.xxh32_u64x2(keys_ref[...], H.SEED_BLOCK)
@@ -243,15 +312,16 @@ def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
         return pltpu.make_async_copy(
             filt_hbm.at[pl.ds(st, cs)], scratch.at[slot], sem.at[slot])
 
-    dma(0, 0).start()
+    for d in range(depth - 1):             # static prologue: fill the pipe
+        dma(d, d).start()
 
     def body(i, acc):
-        slot = jax.lax.rem(i, 2)
-        nxt = jax.lax.rem(i + 1, 2)
+        slot = jax.lax.rem(i, depth)
 
-        @pl.when(i + 1 < tile)
+        # depth=1: the offset-0 "prefetch" starts the current DMA (serial).
+        @pl.when(i + depth - 1 < tile)
         def _prefetch():
-            dma(i + 1, nxt).start()
+            dma(i + depth - 1, jax.lax.rem(i + depth - 1, depth)).start()
 
         dma(i, slot).wait()
         row = pl.load(scratch, (pl.ds(slot, 1), slice(None)))[0]   # (4s,)
@@ -290,11 +360,14 @@ def update_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 
 def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
-                 tile: int = DEFAULT_TILE, interpret: bool = True
-                 ) -> jnp.ndarray:
+                 tile: int = DEFAULT_TILE, interpret: bool = True,
+                 depth: int = DEFAULT_DMA_DEPTH) -> jnp.ndarray:
     n = keys.shape[0]
     assert n % tile == 0
-    kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile)
+    assert depth in DMA_DEPTHS, f"depth={depth} not in {DMA_DEPTHS}"
+    depth = min(depth, tile)
+    kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile,
+                             depth=depth)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -305,8 +378,8 @@ def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
         out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
         scratch_shapes=[
-            pltpu.VMEM((2, spec.counter_row_words), jnp.uint32),
-            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((depth, spec.counter_row_words), jnp.uint32),
+            pltpu.SemaphoreType.DMA((depth,)),
         ],
         interpret=interpret,
     )(keys, filt)

@@ -7,9 +7,24 @@
 * regime: filter words <= VMEM budget -> ``*_vmem`` (cache-resident
   analogue), else ``*_hbm`` (DMA streaming) — mirroring the paper's §5.3/§5.2
   split;
-* ``bloom_add_bulk`` additionally offers the partitioned ownership path
-  (sort keys by segment, then a PARALLEL-grid kernel) — our beyond-paper
-  TPU-native optimization;
+* probe strategy (vmem regime): ``probe="loop"`` is the (Θ, Φ) per-key walk,
+  ``probe="gather"`` the whole-tile vectorized engine (one gather + one
+  fused compare / conflict-free segment-reduced scatter); ``"auto"``
+  resolves through ``core.tuning.tune_plan``. The HBM regime instead
+  exposes the DMA pipeline ``depth``;
+* ``bloom_add_partitioned`` offers the partitioned ownership path — our
+  beyond-paper TPU-native optimization. The partition step is
+  **device-resident by default** (``core.partition.partition_jit``):
+  jit/scan-compatible with no host sync, overflow-checked with automatic
+  capacity escalation (concrete callers) or a vectorized residual pass
+  (traced callers). The host numpy partition survives as the
+  ``partition="host"`` fallback;
+* the ``*_jit`` entry points are a **cached-jit dispatch layer**: one
+  compiled executable per static configuration (spec/layout/regime/tile/
+  probe/batch shape), with ``donate_argnums`` on the filter buffer so
+  streaming bulk adds update the filter in place — no O(m) copy and no
+  re-trace per call. Donation invalidates the caller's input array
+  (`x.is_deleted()`); pass ``donate=False`` to keep it;
 * ``counting_*`` dispatch the counting-filter kernels. Counting updates are
   NOT OR-idempotent, so their padding switches from repeat-last-key to
   **valid-masking** (``_pad_keys_valid``): padded slots carry valid=0 and
@@ -26,13 +41,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import hashing as H
 from repro.core import partition as P
+from repro.core import variants as V
 from repro.core.variants import FilterSpec
 from repro.kernels import cbf as cbf_k
 from repro.kernels import countingbf as cnt_k
 from repro.kernels import ring as ring_k
 from repro.kernels import sbf as sbf_k
-from repro.kernels.sbf import (DEFAULT_TILE, Layout, VMEM_FILTER_BYTES,
+from repro.kernels.sbf import (DEFAULT_DMA_DEPTH, DEFAULT_TILE, DMA_DEPTHS,
+                               Layout, PROBES, VMEM_FILTER_BYTES,
                                default_layout)
 
 
@@ -55,6 +73,25 @@ def _clamp_tile(n: int, tile: int) -> int:
     """Shrink the key tile for small batches: next pow2 >= n, floor 8 (the
     sublane width) — so a 10-key call doesn't pad to a 256-wide tile."""
     return min(tile, max(8, 1 << int(np.ceil(np.log2(n)))))
+
+
+def _resolve_probe(spec: FilterSpec, op: str, probe: str, regime: str,
+                   tile: int) -> str:
+    """``"auto"`` consults the structural tuner (lru + disk cached; all
+    arguments static, so this also runs at trace time under jit)."""
+    if probe != "auto":
+        assert probe in PROBES, probe
+        return probe
+    from repro.core import tuning
+    return tuning.tune_plan(spec, op, regime=regime, tile=tile).probe
+
+
+def _resolve_depth(spec: FilterSpec, op: str, depth: Optional[int],
+                   tile: int) -> int:
+    if depth is not None:
+        return depth
+    from repro.core import tuning
+    return tuning.tune_plan(spec, op, regime="hbm", tile=tile).depth
 
 
 def _pad_keys(keys: jnp.ndarray, tile: int) -> jnp.ndarray:
@@ -89,7 +126,8 @@ def _pad_keys_valid(keys: jnp.ndarray, tile: int,
 
 def bloom_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                    layout: Optional[Layout] = None, regime: str = "auto",
-                   tile: int = DEFAULT_TILE) -> jnp.ndarray:
+                   tile: int = DEFAULT_TILE, probe: str = "auto",
+                   depth: Optional[int] = None) -> jnp.ndarray:
     assert not spec.is_counting, "use counting_contains for countingbf"
     n = keys.shape[0]
     if n == 0:
@@ -100,17 +138,20 @@ def bloom_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     if spec.variant == "cbf":
         out = cbf_k.contains_vmem(spec, filt, padded, tile=tile, interpret=interp)
     elif _regime(spec, regime) == "vmem":
-        out = sbf_k.contains_vmem(spec, filt, padded,
-                                  layout or default_layout(spec, "contains"),
-                                  tile=tile, interpret=interp)
+        out = sbf_k.contains_vmem(
+            spec, filt, padded, layout or default_layout(spec, "contains"),
+            tile=tile, interpret=interp,
+            probe=_resolve_probe(spec, "contains", probe, "vmem", tile))
     else:
-        out = sbf_k.contains_hbm(spec, filt, padded, tile=tile, interpret=interp)
+        out = sbf_k.contains_hbm(
+            spec, filt, padded, tile=tile, interpret=interp,
+            depth=_resolve_depth(spec, "contains", depth, tile))
     return out[:n]
 
 
 def bloom_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
               layout: Optional[Layout] = None, regime: str = "auto",
-              tile: int = DEFAULT_TILE) -> jnp.ndarray:
+              tile: int = DEFAULT_TILE, probe: str = "auto") -> jnp.ndarray:
     assert not spec.is_counting, "use counting_add/counting_remove"
     n = keys.shape[0]
     if n == 0:
@@ -121,23 +162,189 @@ def bloom_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     if spec.variant == "cbf":
         return cbf_k.add_vmem(spec, filt, padded, tile=tile, interpret=interp)
     if _regime(spec, regime) == "vmem":
-        return sbf_k.add_vmem(spec, filt, padded,
-                              layout or default_layout(spec, "add"),
-                              tile=tile, interpret=interp)
+        return sbf_k.add_vmem(
+            spec, filt, padded, layout or default_layout(spec, "add"),
+            tile=tile, interpret=interp,
+            probe=_resolve_probe(spec, "add", probe, "vmem", tile))
     return sbf_k.add_hbm(spec, filt, padded, tile=tile, interpret=interp)
 
 
+# ---------------------------------------------------------------------------
+# Partitioned ownership path — device-resident by default
+# ---------------------------------------------------------------------------
+
+def _default_capacity(n: int, n_segments: int) -> int:
+    """mean * 4 headroom (~overflow-free for uniform hashes), 8-aligned."""
+    cap = max(4 * n // n_segments, 8)
+    return (cap + 7) & ~7
+
+
+def _is_traced(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def _partition_device(spec: FilterSpec, keys: jnp.ndarray, n_segments: int,
+                      capacity: Optional[int]) -> P.JitPartition:
+    """partition_jit with overflow handling.
+
+    Concrete keys: inspect the overflow count and escalate capacity
+    (doubling) until every key fits — bounded because capacity >= n can
+    never overflow. Traced keys (under jit/scan): capacity must stay
+    static, so return the partition as-is; the caller applies the
+    residual pass over the dropped keys.
+    """
+    n = keys.shape[0]
+    cap = capacity or _default_capacity(n, n_segments)
+    part = P.partition_jit(spec, keys, n_segments, cap)
+    if _is_traced(part.overflow) or capacity is not None:
+        return part
+    while int(part.overflow) > 0:
+        cap = min(2 * cap, (n + 7) & ~7)     # cap >= n cannot overflow
+        part = P.partition_jit(spec, keys, n_segments, cap)
+    return part
+
+
+def _residual_or(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                 keep: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized OR of the *dropped* keys' masks (kept keys contribute
+    all-zero rows — OR no-ops), so the partitioned result stays exact even
+    when a traced caller cannot escalate capacity. Device-resident."""
+    h1, h2 = H.hash_keys(keys)
+    blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
+    masks = V.block_patterns(spec, h1) * (~keep)[:, None].astype(jnp.uint32)
+    return V.or_rows(spec, filt, blk, masks)
+
+
 def bloom_add_partitioned(spec: FilterSpec, filt: jnp.ndarray, keys,
-                          n_segments: int = 8) -> jnp.ndarray:
+                          n_segments: int = 8, capacity: Optional[int] = None,
+                          partition: str = "jit") -> jnp.ndarray:
     """Beyond-paper path: radix-partition keys by filter segment, then run a
-    PARALLEL-grid kernel where each step owns its segment exclusively."""
+    PARALLEL-grid kernel where each step owns its segment exclusively.
+
+    ``partition="jit"`` (default) keeps the partition on device —
+    jit/scan-compatible, no host sync; overflow beyond the static capacity
+    escalates (concrete callers) or falls through to a vectorized residual
+    OR of the dropped keys (traced callers), so keys are NEVER silently
+    lost. ``partition="host"`` is the numpy fallback (exact capacity, host
+    round-trip).
+    """
     assert spec.variant != "cbf", "classical filter has no block locality"
     assert not spec.is_counting, "use counting_update_partitioned"
-    keys_np = np.asarray(keys, dtype=np.uint32)
-    by_seg, valid, _ = P.partition_host(spec, keys_np, n_segments)
-    return sbf_k.add_partitioned(spec, filt, jnp.asarray(by_seg),
-                                 jnp.asarray(valid), n_segments,
-                                 interpret=_interpret())
+    if partition == "host":
+        keys_np = np.asarray(keys, dtype=np.uint32)
+        by_seg, valid, _ = P.partition_host(spec, keys_np, n_segments)
+        return sbf_k.add_partitioned(spec, filt, jnp.asarray(by_seg),
+                                     jnp.asarray(valid), n_segments,
+                                     interpret=_interpret())
+    keys = jnp.asarray(keys)
+    part = _partition_device(spec, keys, n_segments, capacity)
+    out = sbf_k.add_partitioned(spec, filt, part.keys_by_seg, part.valid,
+                                n_segments, interpret=_interpret())
+    if not _is_traced(part.overflow):
+        # Concrete: the escalation loop guarantees overflow == 0 unless the
+        # caller pinned capacity — either way, don't trace the residual
+        # graph (lax.cond traces BOTH branches) for a branch that cannot
+        # fire on this call.
+        if int(part.overflow) == 0:
+            return out
+        return _residual_or(spec, out, keys, part.keep)
+    return jax.lax.cond(part.overflow > 0,
+                        lambda f: _residual_or(spec, f, keys, part.keep),
+                        lambda f: f, out)
+
+
+# ---------------------------------------------------------------------------
+# Cached-jit dispatch layer (donated filter buffer)
+# ---------------------------------------------------------------------------
+
+from collections import OrderedDict
+
+_JIT_CACHE: "OrderedDict" = OrderedDict()
+_JIT_CACHE_MAX = 256     # LRU bound: streaming callers with ragged batch
+                         # shapes must not grow executables without limit
+
+
+def jit_cache_info() -> Tuple[int, ...]:
+    """(#cached executables,) — exposed for tests/diagnostics."""
+    return (len(_JIT_CACHE),)
+
+
+def jit_cache_clear() -> None:
+    _JIT_CACHE.clear()
+
+
+def _cached_jit(key, make):
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = _JIT_CACHE[key] = make()
+        if len(_JIT_CACHE) > _JIT_CACHE_MAX:
+            _JIT_CACHE.popitem(last=False)
+    else:
+        _JIT_CACHE.move_to_end(key)
+    return fn
+
+
+def bloom_add_jit(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                  *, layout: Optional[Layout] = None, regime: str = "auto",
+                  tile: int = DEFAULT_TILE, probe: str = "auto",
+                  donate: bool = True) -> jnp.ndarray:
+    """Cached-jit bulk add with the filter buffer DONATED to the update:
+    repeated streaming adds reuse one compiled executable per static
+    configuration and alias the output onto the input filter — no O(m)
+    copy, no per-call retrace. The caller's ``filt`` array is consumed
+    (``filt.is_deleted()`` afterwards); pass ``donate=False`` to keep it.
+    """
+    keys = jnp.asarray(keys)
+    key = ("bloom_add", spec, layout, regime, tile, probe,
+           keys.shape, str(keys.dtype), bool(donate))
+
+    def make():
+        def run(f, k):
+            return bloom_add(spec, f, k, layout=layout, regime=regime,
+                             tile=tile, probe=probe)
+        return jax.jit(run, donate_argnums=(0,) if donate else ())
+
+    return _cached_jit(key, make)(filt, keys)
+
+
+def bloom_contains_jit(spec: FilterSpec, filt: jnp.ndarray,
+                       keys: jnp.ndarray, *, layout: Optional[Layout] = None,
+                       regime: str = "auto", tile: int = DEFAULT_TILE,
+                       probe: str = "auto", depth: Optional[int] = None
+                       ) -> jnp.ndarray:
+    """Cached-jit bulk membership (read-only — nothing to donate)."""
+    keys = jnp.asarray(keys)
+    key = ("bloom_contains", spec, layout, regime, tile, probe, depth,
+           keys.shape, str(keys.dtype))
+
+    def make():
+        def run(f, k):
+            return bloom_contains(spec, f, k, layout=layout, regime=regime,
+                                  tile=tile, probe=probe, depth=depth)
+        return jax.jit(run)
+
+    return _cached_jit(key, make)(filt, keys)
+
+
+def counting_update_jit(spec: FilterSpec, filt: jnp.ndarray,
+                        keys: jnp.ndarray, op: str = "add", *,
+                        layout: Optional[Layout] = None, regime: str = "auto",
+                        tile: int = DEFAULT_TILE, probe: str = "auto",
+                        donate: bool = True) -> jnp.ndarray:
+    """Cached-jit counting increment/decrement with a donated counter
+    buffer — the counting analogue of :func:`bloom_add_jit`."""
+    keys = jnp.asarray(keys)
+    key = ("counting_update", spec, op, layout, regime, tile, probe,
+           keys.shape, str(keys.dtype), bool(donate))
+
+    def make():
+        fn = counting_add if op == "add" else counting_remove
+        def run(f, k):
+            return fn(spec, f, k, layout=layout, regime=regime, tile=tile,
+                      probe=probe)
+        return jax.jit(run, donate_argnums=(0,) if donate else ())
+
+    return _cached_jit(key, make)(filt, keys)
 
 
 # ---------------------------------------------------------------------------
@@ -146,7 +353,8 @@ def bloom_add_partitioned(spec: FilterSpec, filt: jnp.ndarray, keys,
 
 def _counting_update(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                      op: str, layout: Optional[Layout], regime: str,
-                     tile: int, valid: Optional[jnp.ndarray]) -> jnp.ndarray:
+                     tile: int, valid: Optional[jnp.ndarray],
+                     probe: str = "auto") -> jnp.ndarray:
     assert spec.is_counting
     n = keys.shape[0]
     if n == 0:
@@ -155,8 +363,10 @@ def _counting_update(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     padded, pvalid = _pad_keys_valid(keys, tile, valid)
     interp = _interpret()
     if _regime(spec, regime) == "vmem":
-        return cnt_k.update_vmem(spec, filt, padded, pvalid, op,
-                                 layout=layout, tile=tile, interpret=interp)
+        return cnt_k.update_vmem(
+            spec, filt, padded, pvalid, op, layout=layout, tile=tile,
+            interpret=interp,
+            probe=_resolve_probe(spec, "add", probe, "vmem", tile))
     return cnt_k.update_hbm(spec, filt, padded, pvalid, op, tile=tile,
                             interpret=interp)
 
@@ -164,24 +374,27 @@ def _counting_update(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 def counting_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                  layout: Optional[Layout] = None, regime: str = "auto",
                  tile: int = DEFAULT_TILE,
-                 valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                 valid: Optional[jnp.ndarray] = None,
+                 probe: str = "auto") -> jnp.ndarray:
     """Bulk saturating increment of each key's k counters."""
     return _counting_update(spec, filt, keys, "add", layout, regime, tile,
-                            valid)
+                            valid, probe)
 
 
 def counting_remove(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                     layout: Optional[Layout] = None, regime: str = "auto",
                     tile: int = DEFAULT_TILE,
-                    valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                    valid: Optional[jnp.ndarray] = None,
+                    probe: str = "auto") -> jnp.ndarray:
     """Bulk guarded decrement (0 floors, saturated counters stick)."""
     return _counting_update(spec, filt, keys, "remove", layout, regime, tile,
-                            valid)
+                            valid, probe)
 
 
 def counting_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                       layout: Optional[Layout] = None, regime: str = "auto",
-                      tile: int = DEFAULT_TILE) -> jnp.ndarray:
+                      tile: int = DEFAULT_TILE, probe: str = "auto",
+                      depth: Optional[int] = None) -> jnp.ndarray:
     """Bulk membership against the counter occupancy (read-only, so
     repeat-key padding is safe here — results are sliced off)."""
     assert spec.is_counting
@@ -192,11 +405,13 @@ def counting_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     padded = _pad_keys(keys, tile)
     interp = _interpret()
     if _regime(spec, regime) == "vmem":
-        out = cnt_k.contains_vmem(spec, filt, padded, layout=layout,
-                                  tile=tile, interpret=interp)
+        out = cnt_k.contains_vmem(
+            spec, filt, padded, layout=layout, tile=tile, interpret=interp,
+            probe=_resolve_probe(spec, "contains", probe, "vmem", tile))
     else:
-        out = cnt_k.contains_hbm(spec, filt, padded, tile=tile,
-                                 interpret=interp)
+        out = cnt_k.contains_hbm(
+            spec, filt, padded, tile=tile, interpret=interp,
+            depth=_resolve_depth(spec, "contains", depth, tile))
     return out[:n]
 
 
@@ -206,18 +421,46 @@ def counting_decay(spec: FilterSpec, filt: jnp.ndarray) -> jnp.ndarray:
     return cnt_k.decay(spec, filt, interpret=_interpret())
 
 
+def _residual_counting(spec: FilterSpec, filt: jnp.ndarray,
+                       keys: jnp.ndarray, keep: jnp.ndarray,
+                       op: str) -> jnp.ndarray:
+    """Valid-masked vectorized update of the dropped keys (kept keys carry
+    valid=0 — counting updates are not idempotent, so the residual must
+    touch ONLY the overflow set)."""
+    dropped = (~keep).astype(jnp.uint8)
+    if op == "add":
+        return V.counting_add(spec, filt, keys, valid=dropped)
+    return V.counting_remove(spec, filt, keys, valid=dropped)
+
+
 def counting_update_partitioned(spec: FilterSpec, filt: jnp.ndarray, keys,
-                                op: str = "add", n_segments: int = 8
-                                ) -> jnp.ndarray:
+                                op: str = "add", n_segments: int = 8,
+                                capacity: Optional[int] = None,
+                                partition: str = "jit") -> jnp.ndarray:
     """Ownership path for counter updates: radix-partition keys by segment,
     then a PARALLEL grid where each step owns its counter segment — the
-    atomics-free route for increments AND decrements."""
+    atomics-free route for increments AND decrements. Device-resident
+    partition by default, same overflow contract as
+    :func:`bloom_add_partitioned`."""
     assert spec.is_counting
-    keys_np = np.asarray(keys, dtype=np.uint32)
-    by_seg, valid, _ = P.partition_host(spec, keys_np, n_segments)
-    return cnt_k.update_partitioned(spec, filt, jnp.asarray(by_seg),
-                                    jnp.asarray(valid), n_segments, op,
-                                    interpret=_interpret())
+    if partition == "host":
+        keys_np = np.asarray(keys, dtype=np.uint32)
+        by_seg, valid, _ = P.partition_host(spec, keys_np, n_segments)
+        return cnt_k.update_partitioned(spec, filt, jnp.asarray(by_seg),
+                                        jnp.asarray(valid), n_segments, op,
+                                        interpret=_interpret())
+    keys = jnp.asarray(keys)
+    part = _partition_device(spec, keys, n_segments, capacity)
+    out = cnt_k.update_partitioned(spec, filt, part.keys_by_seg, part.valid,
+                                   n_segments, op, interpret=_interpret())
+    if not _is_traced(part.overflow):
+        if int(part.overflow) == 0:
+            return out
+        return _residual_counting(spec, out, keys, part.keep, op)
+    return jax.lax.cond(
+        part.overflow > 0,
+        lambda f: _residual_counting(spec, f, keys, part.keep, op),
+        lambda f: f, out)
 
 
 # ---------------------------------------------------------------------------

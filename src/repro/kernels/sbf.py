@@ -123,6 +123,11 @@ def _mask_row(masks: jnp.ndarray, i, s: int) -> jnp.ndarray:
     return jax.lax.dynamic_slice(masks, (i, 0), (1, s))[0]
 
 
+PROBES = ("loop", "gather")
+DMA_DEPTHS = (1, 2, 4, 8)
+DEFAULT_DMA_DEPTH = 2
+
+
 # ---------------------------------------------------------------------------
 # VMEM-resident kernels (cache-resident regime analogue)
 # ---------------------------------------------------------------------------
@@ -191,15 +196,57 @@ def _add_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
     jax.lax.fori_loop(0, tile // theta, group_body, jnp.int32(0))
 
 
+# ---------------------------------------------------------------------------
+# Whole-tile gather-probe kernels (probe="gather")
+# ---------------------------------------------------------------------------
+# Phase 1 already hashes the whole tile in lockstep; these kernels keep
+# phase 2 on the vector unit too. contains: build the full (tile, s)
+# word-index matrix, ONE gather, ONE fused compare — no per-key loop at
+# all. add: sort the tile by block, segment-OR the masks of same-block
+# keys, then one row gather + one conflict-free row scatter (duplicate
+# indices carry identical rows). The (Θ, Φ) layout is irrelevant here —
+# the whole tile IS the vector.
+
+def _contains_vmem_gather_kernel(keys_ref, filt_ref, out_ref, *,
+                                 spec: FilterSpec, tile: int):
+    s = spec.s
+    starts, masks = _fingerprints(spec, keys_ref[...])
+    idx = starts[:, None] + jax.lax.broadcasted_iota(jnp.int32, (tile, s), 1)
+    words = jnp.take(filt_ref[...], idx, axis=0)         # (tile, s) gather
+    out_ref[...] = jnp.all((words & masks) == masks, axis=-1)
+
+
+def _add_vmem_gather_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
+                            tile: int):
+    s = spec.s
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    starts, masks = _fingerprints(spec, keys_ref[...])
+    blk = jax.lax.div(starts, jnp.int32(s))
+    out_ref[...] = V.or_rows(spec, out_ref[...], blk, masks)
+
+
 def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                   layout: Layout, tile: int = DEFAULT_TILE,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool = True, probe: str = "loop") -> jnp.ndarray:
     """Bulk membership test, whole filter pinned in VMEM via BlockSpec."""
     n = keys.shape[0]
     assert n % tile == 0
+    assert probe in PROBES, probe
     grid = (n // tile,)
-    kern = functools.partial(_contains_vmem_kernel, spec=spec,
-                             layout=layout.validate(spec, tile), tile=tile)
+    # An explicit layout is ALWAYS validated, even though the gather engine
+    # ignores it — probe is a schedule choice and must never change which
+    # (layout, tile) combinations are accepted.
+    layout = layout.validate(spec, tile)
+    if probe == "gather":
+        kern = functools.partial(_contains_vmem_gather_kernel, spec=spec,
+                                 tile=tile)
+    else:
+        kern = functools.partial(_contains_vmem_kernel, spec=spec,
+                                 layout=layout, tile=tile)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -215,13 +262,18 @@ def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 def add_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
              layout: Layout, tile: int = DEFAULT_TILE,
-             interpret: bool = True) -> jnp.ndarray:
+             interpret: bool = True, probe: str = "loop") -> jnp.ndarray:
     """Bulk insert, whole filter pinned in VMEM; sequential-grid RMW."""
     n = keys.shape[0]
     assert n % tile == 0
+    assert probe in PROBES, probe
     grid = (n // tile,)
-    kern = functools.partial(_add_vmem_kernel, spec=spec,
-                             layout=layout.validate(spec, tile), tile=tile)
+    layout = layout.validate(spec, tile)     # validated even on gather
+    if probe == "gather":
+        kern = functools.partial(_add_vmem_gather_kernel, spec=spec, tile=tile)
+    else:
+        kern = functools.partial(_add_vmem_kernel, spec=spec,
+                                 layout=layout, tile=tile)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -240,9 +292,11 @@ def add_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
-                         spec: FilterSpec, tile: int):
-    """Double-buffered block streaming: start DMA for key i+1 while testing
-    key i — the TPU-explicit version of the paper's load pipelining."""
+                         spec: FilterSpec, tile: int, depth: int):
+    """Depth-``depth`` block-streaming pipeline: keep up to ``depth - 1``
+    block DMAs in flight ahead of the one being tested — the TPU-explicit
+    version of the paper's load pipelining, with the pipeline depth a
+    tunable instead of hardcoded double-buffering (depth=2)."""
     s = spec.s
     starts, masks = _fingerprints(spec, keys_ref[...])
 
@@ -251,15 +305,17 @@ def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
         return pltpu.make_async_copy(
             filt_hbm.at[pl.ds(st, s)], scratch.at[slot], sem.at[slot])
 
-    dma(0, 0).start()
+    for d in range(depth - 1):             # static prologue: fill the pipe
+        dma(d, d).start()
 
     def body(i, acc):
-        slot = jax.lax.rem(i, 2)
-        nxt = jax.lax.rem(i + 1, 2)
+        slot = jax.lax.rem(i, depth)
 
-        @pl.when(i + 1 < tile)
+        # At depth=1 the offset is 0: the "prefetch" starts the current DMA
+        # (fully serial); at depth>=2 it keeps depth-1 copies in flight.
+        @pl.when(i + depth - 1 < tile)
         def _prefetch():
-            dma(i + 1, nxt).start()
+            dma(i + depth - 1, jax.lax.rem(i + depth - 1, depth)).start()
 
         dma(i, slot).wait()
         words = pl.load(scratch, (pl.ds(slot, 1), slice(None)))[0]   # (s,)
@@ -273,12 +329,15 @@ def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
 
 def _add_hbm_kernel(keys_ref, filt_hbm, out_hbm, scratch, sem_r, sem_w, *,
                     spec: FilterSpec, tile: int):
-    """HBM insert: DMA read block -> OR mask -> DMA write back.
+    """HBM insert: block-sorted coalesced DMA read-modify-write.
 
-    Serialized per key: a double-buffered write-back would race when two
-    consecutive keys hash to the same block (the GPU resolves this with
-    atomicOr; our ownership model forbids overlapping RMW windows). The
-    partitioned bulk path in ops.py removes this serialization entirely.
+    The tile is sorted by target block and same-block masks are OR-reduced
+    with one segmented scan (vector work, no filter traffic); the DMA loop
+    then touches each *unique* block exactly once — a single read + write
+    per block instead of one serialized RMW per key. RMW windows of
+    distinct blocks never overlap (blocks are disjoint word ranges), so the
+    ownership argument still holds with no atomics. The partitioned bulk
+    path in ops.py parallelizes this across grid steps as well.
     """
     s = spec.s
 
@@ -290,30 +349,40 @@ def _add_hbm_kernel(keys_ref, filt_hbm, out_hbm, scratch, sem_r, sem_w, *,
         cp.wait()
 
     starts, masks = _fingerprints(spec, keys_ref[...])
+    order = jnp.argsort(starts)
+    sst = starts[order]                                       # sorted starts
+    or_full = V.segment_totals(sst, masks[order], jnp.bitwise_or)
+    is_end = jnp.concatenate([sst[1:] != sst[:-1], jnp.ones((1,), bool)])
 
     def body(i, carry):
-        st = _take_scalar(starts, i)
-        rd = pltpu.make_async_copy(out_hbm.at[pl.ds(st, s)], scratch.at[0],
-                                   sem_r.at[0])
-        rd.start()
-        rd.wait()
-        m = _mask_row(masks, i, s)
-        new = pl.load(scratch, (pl.ds(0, 1), slice(None)))[0] | m
-        pl.store(scratch, (pl.ds(1, 1), slice(None)), new[None])
-        wr = pltpu.make_async_copy(scratch.at[1], out_hbm.at[pl.ds(st, s)],
-                                   sem_w.at[0])
-        wr.start()
-        wr.wait()
+        @pl.when(_take_scalar(is_end, i))
+        def _rmw():                        # one RMW per unique block
+            st = _take_scalar(sst, i)
+            rd = pltpu.make_async_copy(out_hbm.at[pl.ds(st, s)],
+                                       scratch.at[0], sem_r.at[0])
+            rd.start()
+            rd.wait()
+            row = pl.load(scratch, (pl.ds(0, 1), slice(None)))[0]
+            new = row | _mask_row(or_full, i, s)
+            pl.store(scratch, (pl.ds(1, 1), slice(None)), new[None])
+            wr = pltpu.make_async_copy(scratch.at[1],
+                                       out_hbm.at[pl.ds(st, s)], sem_w.at[0])
+            wr.start()
+            wr.wait()
         return carry
 
     jax.lax.fori_loop(0, tile, body, jnp.int32(0))
 
 
 def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
-                 tile: int = DEFAULT_TILE, interpret: bool = True) -> jnp.ndarray:
+                 tile: int = DEFAULT_TILE, interpret: bool = True,
+                 depth: int = DEFAULT_DMA_DEPTH) -> jnp.ndarray:
     n = keys.shape[0]
     assert n % tile == 0
-    kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile)
+    assert depth in DMA_DEPTHS, f"depth={depth} not in {DMA_DEPTHS}"
+    depth = min(depth, tile)
+    kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile,
+                             depth=depth)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -324,8 +393,8 @@ def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
         out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
         scratch_shapes=[
-            pltpu.VMEM((2, spec.s), jnp.uint32),                # double buffer
-            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((depth, spec.s), jnp.uint32),            # depth-slot ring
+            pltpu.SemaphoreType.DMA((depth,)),
         ],
         interpret=interpret,
     )(keys, filt)

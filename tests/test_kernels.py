@@ -123,7 +123,9 @@ def test_partition_host_covers_all_keys():
 def test_partition_jit_matches_host():
     spec = V.FilterSpec("sbf", M, 8, block_bits=256)
     keys = _keys(512, seed=17)
-    by_seg_j, valid_j = P.partition_jit(spec, keys, 8, capacity=256)
+    part = P.partition_jit(spec, keys, 8, capacity=256)
+    by_seg_j, valid_j = part.keys_by_seg, part.valid
+    assert int(part.overflow) == 0 and bool(np.asarray(part.keep).all())
     by_seg_h, valid_h, _ = P.partition_host(spec, np.asarray(keys), 8)
     # same multiset of keys per segment (order may differ)
     for sidx in range(8):
