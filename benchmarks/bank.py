@@ -1,0 +1,111 @@
+"""FilterBank throughput: banked (one fused launch) vs per-tenant loop.
+
+The multi-tenant serving regime the bank axis exists for: B VMEM-small
+filters serving per-sequence / per-tenant traffic. Three comparisons:
+
+* ``bank/banked_*``  — one B-member bank, per-member batches, ONE device op;
+* ``bank/looped_*``  — the pre-bank architecture: B scalar filters driven
+  by a host Python loop (B separate dispatches per step);
+* ``bank/routed_*``  — flat ``(keys, tenant_ids)`` traffic through the
+  member-offset routed path (the serving shape: one mixed stream).
+
+Plus the two motivating consumers end-to-end: an ``NGramGuard``
+observe+penalize decode step (bank-native) and a ``TenantDedupFilter``
+batch. Off-TPU the absolute numbers are interpret/jnp schedule costs; the
+banked-vs-looped *ratio* is the architectural point.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, time_fn
+from repro import api
+from repro.core import hashing as H
+
+
+def run(csv: Csv, bank: int = 8, m_bits: int = 1 << 14, n_keys: int = 1 << 8,
+        smoke: bool = False):
+    B = bank
+    keys = jnp.asarray(np.stack([H.random_u64x2(n_keys, seed=b)
+                                 for b in range(B)]))        # (B, n, 2)
+    flat = keys.reshape(-1, 2)
+    tenants = jnp.asarray(np.repeat(np.arange(B), n_keys), jnp.int32)
+    n_total = B * n_keys
+
+    # -- banked: one fused op over the whole bank ---------------------------
+    fb = api.make_filter_bank(B, "sbf", m_bits=m_bits, k=8)
+    t_add = time_fn(lambda f, k: f.add(k).words, fb, keys)
+    filled = fb.add(keys)
+    t_q = time_fn(lambda f, k: f.contains(k), filled, keys)
+    csv.add(f"bank/banked_add_B{B}", t_add * 1e6,
+            f"Mkeys/s={n_total/t_add/1e6:.2f}", n_ops=n_total)
+    csv.add(f"bank/banked_contains_B{B}", t_q * 1e6,
+            f"Mkeys/s={n_total/t_q/1e6:.2f}", n_ops=n_total)
+
+    # -- looped: B scalar filters, host Python loop (the old architecture) --
+    scalars = [api.make_filter("sbf", m_bits=m_bits, k=8) for _ in range(B)]
+
+    def loop_add(fs, k):
+        return [f.add(k[b]).words for b, f in enumerate(fs)]
+
+    def loop_q(fs, k):
+        return [f.contains(k[b]) for b, f in enumerate(fs)]
+
+    t_ladd = time_fn(loop_add, scalars, keys)
+    filled_s = [f.add(keys[b]) for b, f in enumerate(scalars)]
+    t_lq = time_fn(loop_q, filled_s, keys)
+    csv.add(f"bank/looped_add_B{B}", t_ladd * 1e6,
+            f"Mkeys/s={n_total/t_ladd/1e6:.2f} vs_banked={t_ladd/t_add:.1f}x",
+            n_ops=n_total)
+    csv.add(f"bank/looped_contains_B{B}", t_lq * 1e6,
+            f"Mkeys/s={n_total/t_lq/1e6:.2f} vs_banked={t_lq/t_q:.1f}x",
+            n_ops=n_total)
+
+    # -- routed: one mixed tenant stream ------------------------------------
+    t_radd = time_fn(lambda f, k, t: f.add(k, tenants=t).words,
+                     fb, flat, tenants)
+    t_rq = time_fn(lambda f, k, t: f.contains(k, tenants=t),
+                   filled, flat, tenants)
+    csv.add(f"bank/routed_add_B{B}", t_radd * 1e6,
+            f"Mkeys/s={n_total/t_radd/1e6:.2f}", n_ops=n_total)
+    csv.add(f"bank/routed_contains_B{B}", t_rq * 1e6,
+            f"Mkeys/s={n_total/t_rq/1e6:.2f}", n_ops=n_total)
+
+    # -- consumers end-to-end ------------------------------------------------
+    from repro.serving.ngram_guard import NGramGuard
+    vocab = 256
+    guard = NGramGuard(batch=B, n=3, m_bits=B << 12, top_k=16)
+    rng = np.random.RandomState(0)
+    logits = jnp.asarray(rng.randn(B, vocab).astype(np.float32))
+    toks = rng.randint(0, vocab, B)
+
+    def guard_step():
+        out = guard.penalize(logits)
+        guard.observe(toks)
+        return out
+
+    t_g = time_fn(lambda: guard_step())
+    csv.add(f"bank/guard_step_B{B}", t_g * 1e6,
+            f"lookups/step={B * guard.top_k}", n_ops=B * guard.top_k)
+
+    from repro.data.dedup import TenantDedupFilter
+    n_docs = 64 if smoke else 256
+    docs = [rng.randint(0, 1000, 24) for _ in range(n_docs)]
+    doc_tenants = rng.randint(0, B, n_docs)
+    td = TenantDedupFilter(n_tenants=B, expected_docs_per_tenant=1 << 12,
+                           batch_docs=n_docs)
+
+    def dedup_batch():
+        return td.dedupe_batch(docs, doc_tenants)
+
+    t_d = time_fn(lambda: dedup_batch())
+    csv.add(f"bank/tenant_dedup_B{B}", t_d * 1e6,
+            f"docs/s={n_docs/t_d:.0f}", n_ops=n_docs)
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

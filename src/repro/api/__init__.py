@@ -22,6 +22,7 @@ from __future__ import annotations
 from typing import Optional
 
 import numpy as np
+import jax.numpy as jnp
 
 from repro.core import variants as _V
 from repro.core.variants import FilterSpec
@@ -67,15 +68,75 @@ def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
                              capacity=capacity, generations=generations)
     eng = registry.select(spec, backend, options.ctx())
     return Filter(spec=spec, words=eng.init(spec, options), backend=eng.name,
-                  options=options)
+                  options=options, state=eng.init_state(spec, options))
+
+
+def make_filter_bank(bank, variant: str = "sbf", m_bits: int = 1 << 14,
+                     k: int = 8, block_bits: int = 256, z: int = 1,
+                     backend: str = "auto", layout=None,
+                     tile: Optional[int] = None, probe: str = "auto",
+                     depth: Optional[int] = None, mesh=None,
+                     axis: str = "data", capacity: Optional[int] = None,
+                     generations: Optional[int] = None) -> Filter:
+    """Build an empty :class:`Filter` **bank**: ``bank`` independent
+    same-spec member filters behind one value, with the bank dims leading
+    the words leaf.
+
+    ``bank`` is an int (1-D bank) or a shape tuple. ``m_bits`` is the size
+    of EACH member — the multi-tenant sweet spot is many VMEM-small
+    members, which is exactly the regime where the native bank engines
+    fuse B members into one device launch. Per-filter batches address
+    members positionally (``keys: bank_shape + (n, 2)``); routed ops take
+    flat ``(keys, tenants)`` with ``tenants`` indexing the bank axis.
+    The remaining knobs match :func:`make_filter` (mesh/axis/capacity
+    select the bank-axis-sharded distributed engine, generations the
+    windowed one)."""
+    bank_shape = (int(bank),) if isinstance(bank, (int, np.integer)) \
+        else tuple(int(d) for d in bank)
+    if not bank_shape or any(d <= 0 for d in bank_shape):
+        raise ValueError(f"bank shape must be non-empty and positive; "
+                         f"got {bank_shape}")
+    spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
+                      block_bits=block_bits, z=z)
+    options = BackendOptions(layout=layout, tile=tile, probe=probe,
+                             depth=depth, mesh=mesh, axis=axis,
+                             capacity=capacity, generations=generations)
+    total = 1
+    for d in bank_shape:
+        total *= d
+    eng = registry.select(spec, backend, options.ctx(bank=total))
+    words = eng.init_bank(spec, bank_shape, options)
+    state = eng.init_state(spec, options)
+    if state is not None:
+        state = jnp.zeros(bank_shape + state.shape, state.dtype)
+    return Filter(spec=spec, words=words, backend=eng.name, options=options,
+                  state=state)
+
+
+def route(keys, tenants, n_tenants: int, capacity: Optional[int] = None):
+    """Scatter flat routed keys into fixed-shape per-tenant batches.
+
+    Returns ``(keys_by_tenant (T, cap, 2), valid (T, cap))`` — the
+    explicit form of the scatter path the generic bank fallback uses for
+    ``(keys, tenants)`` ops on engines without a native routed kernel.
+    ``capacity`` defaults to ``len(keys)`` (nothing can overflow); a
+    smaller static capacity bounds memory and drops the overflow (use the
+    native routed ops when exactness matters)."""
+    from repro.core.partition import route_by_id
+    keys = as_keys(keys)
+    part = route_by_id(keys, jnp.asarray(tenants, jnp.int32), int(n_tenants),
+                       int(capacity or max(keys.shape[0], 1)))
+    return part.keys_by_seg, part.valid
 
 
 def filter_for_n_items(n: int, bits_per_key: float = 16.0,
                        variant: str = "sbf", block_bits: int = 256,
-                       k: Optional[int] = None, **kw) -> Filter:
+                       k: Optional[int] = None,
+                       bank=None, **kw) -> Filter:
     """Size a filter for ~n items at c = bits_per_key (m rounded to pow2),
     choosing k near the space-optimal k* = c ln 2 (Eq. 2), snapped to the
-    variant's structural constraints (k ≡ 0 mod s for SBF, mod z for CSBF)."""
+    variant's structural constraints (k ≡ 0 mod s for SBF, mod z for CSBF).
+    ``bank=B`` sizes each of B members for ~n items and returns the bank."""
     m = 1 << max(int(np.ceil(np.log2(max(n, 1) * bits_per_key))), 10)
     if k is None:
         k = max(int(round(_V.optimal_k(m / max(n, 1)))), 1)
@@ -86,6 +147,9 @@ def filter_for_n_items(n: int, bits_per_key: float = 16.0,
             s = block_bits // _V.WORD_BITS
             k = max(s, (k // s) * s) if k >= s else k
         k = min(k, 32)
+    if bank is not None:
+        return make_filter_bank(bank, variant=variant, m_bits=m, k=k,
+                                block_bits=block_bits, **kw)
     return make_filter(variant=variant, m_bits=m, k=k, block_bits=block_bits,
                        **kw)
 
@@ -115,5 +179,5 @@ def get_backend(name: str) -> registry.Backend:
 
 
 __all__ = ["Filter", "FilterSpec", "BackendOptions", "as_keys", "registry",
-           "make_filter", "filter_for_n_items", "union", "backends",
-           "describe_backends", "get_backend"]
+           "make_filter", "make_filter_bank", "route", "filter_for_n_items",
+           "union", "backends", "describe_backends", "get_backend"]

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 
 from repro.core import variants as V
 from repro.core.variants import FilterSpec
-from repro.api.registry import Backend, SelectionContext, register
+from repro.api.registry import (Backend, SelectionContext, flat_members
+                                as _flat_members, register)
 
 # Interpret-mode Pallas (any non-TPU platform) is for validation, not speed.
 _INTERPRET_PENALTY = 50.0
@@ -39,9 +40,12 @@ def _plain_bits(spec: FilterSpec, ctx: SelectionContext) -> bool:
 class JnpBackend(Backend):
     """Vectorized pure-jnp reference: one row gather per lookup
     (``contains_rows``) and the sorted segmented-OR bulk insert
-    (``add_rows``). Fast path off-TPU; the semantic oracle everywhere."""
+    (``add_rows``). Fast path off-TPU; the semantic oracle everywhere.
+    Banks run natively as one super-filter op (``V.bank_*``): member-offset
+    block ids turn B filters into B*n_blocks blocks, one gather/scatter."""
 
     name = "jnp"
+    supports_bank = True
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         return _single_host(ctx) and _plain_bits(spec, ctx)
@@ -57,6 +61,37 @@ class JnpBackend(Backend):
 
     def contains(self, spec, words, keys, options):
         return V.contains_rows(spec, words, keys)
+
+    # -- native bank path (blocked variants; cbf falls back to vmap) ---------
+    def add_bank(self, spec, words, keys, options, valid=None, state=None):
+        if spec.variant == "cbf":
+            return super().add_bank(spec, words, keys, options, valid=valid,
+                                    state=state)
+        flat, member = _flat_members(keys)
+        vf = None if valid is None else valid.reshape(-1)
+        return V.bank_add_rows(spec, words, flat, member, valid=vf)
+
+    def contains_bank(self, spec, words, keys, options, state=None):
+        if spec.variant == "cbf":
+            return super().contains_bank(spec, words, keys, options,
+                                         state=state)
+        flat, member = _flat_members(keys)
+        return V.bank_contains_rows(spec, words, flat, member
+                                    ).reshape(keys.shape[:2])
+
+    def add_bank_routed(self, spec, words, keys, member, options, valid=None,
+                        state=None):
+        if spec.variant == "cbf":
+            return super().add_bank_routed(spec, words, keys, member, options,
+                                           valid=valid, state=state)
+        return V.bank_add_rows(spec, words, keys, member, valid=valid)
+
+    def contains_bank_routed(self, spec, words, keys, member, options,
+                             state=None):
+        if spec.variant == "cbf":
+            return super().contains_bank_routed(spec, words, keys, member,
+                                                options, state=state)
+        return V.bank_contains_rows(spec, words, keys, member)
 
 
 class _PallasBackend(Backend):
@@ -91,18 +126,58 @@ class _PallasBackend(Backend):
 
 class PallasVmemBackend(_PallasBackend):
     """Pallas TPU kernels with the filter pinned in VMEM — the paper's
-    cache-resident regime ((Θ, Φ) layout selectable via options.layout)."""
+    cache-resident regime ((Θ, Φ) layout selectable via options.layout).
+    Banks run natively: the whole (B, n_words) bank is pinned in VMEM and
+    B members execute as ONE launch (member-offset block starts)."""
 
     name = "pallas-vmem"
     regime = "vmem"
+    supports_bank = True
+
+    def _bank_kw(self, options):
+        kw = {"probe": options.probe}
+        if options.layout is not None:
+            kw["layout"] = options.layout
+        if options.tile is not None:
+            kw["tile"] = options.tile
+        return kw
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         from repro.kernels import ops
-        return (_single_host(ctx) and _plain_bits(spec, ctx)
-                and ops.kernel_supported(spec) and self._fits_vmem(spec))
+        if not (_single_host(ctx) and _plain_bits(spec, ctx)
+                and ops.kernel_supported(spec)):
+            return False
+        if ctx.bank is not None:
+            # the bank kernels need block locality and a whole-bank VMEM fit
+            return (spec.variant != "cbf"
+                    and ops.bank_vmem_resident(spec, ctx.bank))
+        return self._fits_vmem(spec)
 
     def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
         return 0.4 if ctx.platform == "tpu" else _INTERPRET_PENALTY
+
+    def add_bank(self, spec, words, keys, options, valid=None, state=None):
+        flat, member = _flat_members(keys)
+        vf = None if valid is None else valid.reshape(-1)
+        return self.add_bank_routed(spec, words, flat, member, options,
+                                    valid=vf)
+
+    def contains_bank(self, spec, words, keys, options, state=None):
+        flat, member = _flat_members(keys)
+        return self.contains_bank_routed(spec, words, flat, member, options
+                                         ).reshape(keys.shape[:2])
+
+    def add_bank_routed(self, spec, words, keys, member, options, valid=None,
+                        state=None):
+        from repro.kernels import ops
+        return ops.bloom_bank_add(spec, words, keys, member, valid=valid,
+                                  **self._bank_kw(options))
+
+    def contains_bank_routed(self, spec, words, keys, member, options,
+                             state=None):
+        from repro.kernels import ops
+        return ops.bloom_bank_contains(spec, words, keys, member,
+                                       **self._bank_kw(options))
 
 
 class PallasHbmBackend(_PallasBackend):
@@ -128,11 +203,15 @@ class CountingBackend(Backend):
     """Counting Bloom filter (variant='countingbf'): packed 4-bit saturating
     counters enabling ``remove`` and ``decay``. Pallas kernels on TPU
     (ownership-partitioned RMW instead of atomicAdd), jnp bit-plane
-    reference elsewhere. 4x the memory of the equivalent bit filter."""
+    reference elsewhere. 4x the memory of the equivalent bit filter.
+    Banks run natively (counter super-filter; one launch in VMEM) — the
+    generic fill-trick fallback is FORBIDDEN here because counting updates
+    are not idempotent."""
 
     name = "counting"
     supports_remove = True
     supports_decay = True
+    supports_bank = True
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         return (_single_host(ctx) and spec.is_counting
@@ -181,11 +260,9 @@ class CountingBackend(Backend):
 
     def merge(self, spec, a, b, options):
         """Counter-true union: nibble-wise saturating add (NOT bitwise OR —
-        merged counts must support the merged removes)."""
-        nib_a = V._unpack_nibbles(spec, a)
-        nib_b = V._unpack_nibbles(spec, b)
-        return V._pack_nibbles(
-            spec, jnp.minimum(nib_a + nib_b, jnp.uint32(V.COUNTER_MAX)))
+        merged counts must support the merged removes). Elementwise SWAR,
+        so whole banks merge member-wise with the same call."""
+        return V.nib_sat_add_words(a, b)
 
     def to_dense(self, spec, words, options):
         """Canonical view is the occupancy bit filter (counts are an engine
@@ -196,15 +273,74 @@ class CountingBackend(Backend):
         """Occupancy -> counters at 1. Membership-preserving, count-lossy."""
         return V.counting_from_bloom(spec, dense)
 
+    # -- native bank path ----------------------------------------------------
+    def _bank_update(self, spec, words, keys, member, valid, op, options):
+        if self._tpu():
+            from repro.kernels import ops
+            kw = {"probe": options.probe, "layout": options.layout}
+            if options.tile is not None:
+                kw["tile"] = options.tile
+            return ops.counting_bank_update(spec, words, keys, member, op,
+                                            valid=valid, **kw)
+        return V.bank_counting_update(spec, words, keys,
+                                      jnp.asarray(member, jnp.int32),
+                                      valid, op)
+
+    def add_bank(self, spec, words, keys, options, valid=None, state=None):
+        flat, member = _flat_members(keys)
+        vf = None if valid is None else valid.reshape(-1)
+        return self._bank_update(spec, words, flat, member, vf, "add",
+                                 options)
+
+    def remove_bank(self, spec, words, keys, options, valid=None, state=None):
+        flat, member = _flat_members(keys)
+        vf = None if valid is None else valid.reshape(-1)
+        return self._bank_update(spec, words, flat, member, vf, "remove",
+                                 options)
+
+    def contains_bank(self, spec, words, keys, options, state=None):
+        flat, member = _flat_members(keys)
+        return self.contains_bank_routed(spec, words, flat, member, options
+                                         ).reshape(keys.shape[:2])
+
+    def add_bank_routed(self, spec, words, keys, member, options, valid=None,
+                        state=None):
+        return self._bank_update(spec, words, keys, member, valid, "add",
+                                 options)
+
+    def remove_bank_routed(self, spec, words, keys, member, options,
+                           valid=None, state=None):
+        return self._bank_update(spec, words, keys, member, valid, "remove",
+                                 options)
+
+    def contains_bank_routed(self, spec, words, keys, member, options,
+                             state=None):
+        if self._tpu():
+            from repro.kernels import ops
+            kw = {}
+            if options.tile is not None:
+                kw["tile"] = options.tile
+            return ops.counting_bank_contains(spec, words, keys, member, **kw)
+        return V.bank_counting_contains(spec, words, keys,
+                                        jnp.asarray(member, jnp.int32))
+
+    def decay_bank(self, spec, words, options):
+        """Aging is elementwise on packed counters — the bank decays whole."""
+        return V.decay_word(words)
+
 
 class WindowedBackend(Backend):
     """Generation-ring sliding window (``options.generations`` = G):
     inserts land in the head generation, queries OR the ring in one fused
     pass, ``advance()`` retires the oldest generation in O(1). Forgets by
-    *age class*, not per key — 1x memory per generation."""
+    *age class*, not per key — 1x memory per generation. The head index is
+    TRACED per-filter state (``Filter.state``), so advancing is a pure
+    device rotation: no pytree-structure change, no retrace under
+    jit/scan, and banks carry one head per member."""
 
     name = "windowed"
     supports_advance = True
+    words_ndim = 2                     # (G, n_words) per member
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         return (_single_host(ctx) and ctx.generations is not None
@@ -217,29 +353,32 @@ class WindowedBackend(Backend):
         from repro.window.ring import ring_init
         return ring_init(spec, options.generations)
 
-    def add(self, spec, words, keys, options):
-        from repro.window.ring import ring_add
-        return ring_add(spec, words, keys, options.head)
+    def init_state(self, spec: FilterSpec, options):
+        return jnp.zeros((), jnp.int32)          # insert head (traced)
 
-    def contains(self, spec, words, keys, options):
+    def add(self, spec, words, keys, options, state=None):
+        from repro.window.ring import ring_add
+        head = jnp.zeros((), jnp.int32) if state is None else state
+        return ring_add(spec, words, keys, head)
+
+    def contains(self, spec, words, keys, options, state=None):
         from repro.window.ring import ring_contains_dispatch
         return ring_contains_dispatch(spec, words, keys)
 
-    def advance(self, spec, words, options):
-        import dataclasses
+    def advance(self, spec, words, options, state=None):
         from repro.window.ring import ring_advance
-        words, head = ring_advance(words, options.head)
-        return words, dataclasses.replace(options, head=head)
+        head = jnp.zeros((), jnp.int32) if state is None else state
+        return ring_advance(words, head)
 
     def to_dense(self, spec, words, options):
         from repro.window.ring import ring_dense
         return ring_dense(words)
 
     def from_dense(self, spec, dense, options):
-        """Restore the whole window into the head generation (age classes
-        are not recoverable from the canonical form)."""
+        """Restore the whole window into generation 0 and reset the head
+        (age classes are not recoverable from the canonical form)."""
         words = jnp.zeros((options.generations, dense.shape[0]), jnp.uint32)
-        return words.at[options.head].set(dense)
+        return words.at[0].set(dense)
 
 
 def tuned_options(spec: FilterSpec, op: str = "contains",

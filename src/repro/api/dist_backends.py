@@ -27,7 +27,8 @@ import jax.numpy as jnp
 
 from repro.core import distributed as D
 from repro.core.variants import FilterSpec
-from repro.api.registry import Backend, SelectionContext, register
+from repro.api.registry import (Backend, SelectionContext, flat_members,
+                                register)
 
 
 def _n_dev(options) -> int:
@@ -47,9 +48,10 @@ def _pad_split(keys: jnp.ndarray, n_dev: int):
 class _DistBackend(Backend):
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         # counting specs and windowed (generations) contexts belong to the
-        # single-host forgetting engines for now
+        # single-host forgetting engines for now; banks are opt-in per
+        # engine (sharded shards the bank axis, replicated declines)
         return (ctx.mesh is not None and not spec.is_counting
-                and ctx.generations is None)
+                and ctx.generations is None and ctx.bank is None)
 
     def init(self, spec: FilterSpec, options) -> jnp.ndarray:
         raise NotImplementedError
@@ -60,6 +62,7 @@ class ReplicatedBackend(_DistBackend):
     Best when the filter fits per-device memory and add volume dominates."""
 
     name = "replicated"
+    words_ndim = 2                      # (n_dev, n_words) per filter
 
     def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
         # adds are collective-free; lookups pay one butterfly. Prefer over
@@ -93,15 +96,28 @@ class ReplicatedBackend(_DistBackend):
 
 class ShardedBackend(_DistBackend):
     """Block-range segment per device; all_to_all ownership routing keeps
-    every filter byte resident on exactly one device (m/n_dev memory)."""
+    every filter byte resident on exactly one device (m/n_dev memory).
+
+    **Banks** shard the *bank axis* instead of the block axis: device d
+    owns B/n_dev whole member filters, routed ops compose tenant routing
+    (member -> owner device, all_to_all) with the same fixed-capacity
+    machinery the scalar key routing uses, and the owner runs the fused
+    local bank op (``V.bank_*``) on its resident members."""
 
     name = "sharded"
+    supports_bank = True
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
-        if not _DistBackend.supports(self, spec, ctx) or spec.variant == "cbf":
+        if ctx.mesh is None or spec.is_counting or ctx.generations is not None:
+            return False
+        if spec.variant == "cbf":
             return False   # classical filter has no block locality to shard
         n_dev = ctx.mesh.shape[ctx.axis]
-        return (n_dev & (n_dev - 1)) == 0 and spec.n_blocks % n_dev == 0
+        if (n_dev & (n_dev - 1)) != 0:
+            return False
+        if ctx.bank is not None:
+            return ctx.bank % n_dev == 0      # bank axis sharded across mesh
+        return spec.n_blocks % n_dev == 0
 
     def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
         return 1.2   # preferred over replicated when geometry allows
@@ -130,6 +146,64 @@ class ShardedBackend(_DistBackend):
     # words are already the dense (n_words,) array (device-sharded)
     def from_dense(self, spec, dense, options):
         return dense
+
+    # -- bank-axis sharding ---------------------------------------------------
+    def init_bank(self, spec, bank_shape, options):
+        if len(bank_shape) != 1:
+            raise ValueError("sharded banks are 1-D (the bank axis maps onto "
+                             f"the mesh axis); got bank_shape={bank_shape}")
+        return D.bankshard_init(spec, options.mesh, options.axis,
+                                bank_shape[0])
+
+    def _pad_split_routed(self, keys, member, valid, n_dev):
+        """Flat routed triples -> per-device (n_dev, n_local, ...) shards.
+        Padding repeats the last key/member with valid=0 (dropped by the
+        add path, sliced off by the contains path)."""
+        n = keys.shape[0]
+        n_local = -(-n // n_dev)
+        pad = n_dev * n_local - n
+        if valid is None:
+            valid = jnp.ones((n,), jnp.uint8)
+        valid = valid.astype(jnp.uint8)
+        member = jnp.asarray(member, jnp.int32)
+        if pad:
+            keys = jnp.concatenate(
+                [keys, jnp.broadcast_to(keys[-1:], (pad, 2))])
+            member = jnp.concatenate(
+                [member, jnp.broadcast_to(member[-1:], (pad,))])
+            valid = jnp.concatenate([valid, jnp.zeros((pad,), jnp.uint8)])
+        return (keys.reshape(n_dev, n_local, 2),
+                member.reshape(n_dev, n_local),
+                valid.reshape(n_dev, n_local), n)
+
+    def add_bank(self, spec, words, keys, options, valid=None, state=None):
+        flat, member = flat_members(keys)
+        vf = None if valid is None else valid.reshape(-1)
+        return self.add_bank_routed(spec, words, flat, member, options,
+                                    valid=vf)
+
+    def contains_bank(self, spec, words, keys, options, state=None):
+        flat, member = flat_members(keys)
+        return self.contains_bank_routed(spec, words, flat, member, options
+                                         ).reshape(keys.shape[:2])
+
+    def add_bank_routed(self, spec, words, keys, member, options, valid=None,
+                        state=None):
+        n_dev = _n_dev(options)
+        k_sh, m_sh, v_sh, _ = self._pad_split_routed(keys, member, valid,
+                                                     n_dev)
+        cap = self._capacity(options, k_sh.shape[1])
+        return D.bankshard_add(spec, options.mesh, options.axis, cap,
+                               words, k_sh, m_sh, v_sh)
+
+    def contains_bank_routed(self, spec, words, keys, member, options,
+                             state=None):
+        n_dev = _n_dev(options)
+        k_sh, m_sh, _, n = self._pad_split_routed(keys, member, None, n_dev)
+        cap = self._capacity(options, k_sh.shape[1])
+        hits = D.bankshard_contains(spec, options.mesh, options.axis, cap,
+                                    words, k_sh, m_sh)
+        return hits.reshape(-1)[:n]
 
 
 def register_all():

@@ -1,8 +1,9 @@
 """The pytree-native ``Filter``: one immutable interface over every engine.
 
-A ``Filter`` is a registered JAX pytree: the word array is its only leaf;
-the spec, engine name and engine options are static aux data. That means a
-filter value can
+A ``Filter`` is a registered JAX pytree: the word array is its first leaf,
+an optional traced ``state`` scalar (the windowed engine's ring head) is
+the second; the spec, engine name and engine options are static aux data.
+That means a filter value can
 
 * cross ``jax.jit`` / ``jax.lax.scan`` / ``shard_map`` boundaries like any
   array (no host round-trips — XLA retraces per (spec, backend, options)
@@ -11,6 +12,16 @@ filter value can
 * be checkpointed by ``repro.checkpoint`` like any other model state;
 * be OR-merged (``merge`` / ``repro.api.union``) with another filter of the
   same spec, even one built by a *different* engine.
+
+**Banks.** A filter may carry a leading **bank axis**: ``bank_shape`` is
+derived from the words leaf (``words.shape[:-engine.words_ndim]``), so a
+``(B, n_words)`` words array IS a bank of B independent same-spec filters
+— and ``jax.vmap``/``scan``/``shard_map`` over the leading axis see valid
+scalar filters with no extra protocol. Bank ops accept **per-filter key
+batches** (``bank_shape + (n, 2)``) or **routed flat keys**
+(``keys (n, 2)`` plus ``tenants (n,)`` member ids); on engines with native
+bank support a whole B-member bank executes as ONE fused device op (one
+Pallas launch in the VMEM regime). See DESIGN.md §12.
 
 All mutating-looking operations return a new ``Filter``; the word arrays
 are shared/functional underneath (JAX arrays), so this costs nothing.
@@ -42,6 +53,10 @@ class BackendOptions:
     ``core.tuning.tune_plan`` at trace time — the tuned plan (probe
     strategy, DMA pipeline depth, layout) flows from the disk-persisted
     tuning cache into every kernel launched through the API.
+
+    Note the windowed ring *head* is NOT here: it is traced per-filter
+    state (``Filter.state``), so ``advance()`` never changes the pytree
+    structure (no retrace under jit/scan).
     """
 
     layout: Optional[object] = None    # kernels.sbf.Layout
@@ -52,16 +67,17 @@ class BackendOptions:
     axis: str = "data"
     capacity: Optional[int] = None     # sharded routing capacity per (src,dst)
     generations: Optional[int] = None  # windowed engine: ring size G
-    head: int = 0                      # windowed engine: insert generation
 
-    def ctx(self, n_keys_hint: Optional[int] = None) -> registry.SelectionContext:
+    def ctx(self, n_keys_hint: Optional[int] = None,
+            bank: Optional[int] = None) -> registry.SelectionContext:
         return registry.SelectionContext.current(
             mesh=self.mesh, axis=self.axis, n_keys_hint=n_keys_hint,
-            generations=self.generations)
+            generations=self.generations, bank=bank)
 
 
 def as_keys(keys) -> jnp.ndarray:
-    """Accept u64x2 uint32 (n, 2), np.uint64 (n,), or uint32 (n,) keys."""
+    """Accept u64x2 uint32 (..., 2), np.uint64 (...,), or uint32 keys.
+    Leading dims are preserved, so per-member bank batches pass through."""
     if isinstance(keys, np.ndarray) and keys.dtype == np.uint64:
         from repro.core.hashing import u64x2_from_u64
         keys = u64x2_from_u64(keys)
@@ -71,12 +87,20 @@ def as_keys(keys) -> jnp.ndarray:
     return keys
 
 
+def _prod(shape: Tuple[int, ...]) -> int:
+    out = 1
+    for d in shape:
+        out *= int(d)
+    return out
+
+
 @jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass(frozen=True, eq=False)
 class Filter:
-    """Immutable Bloom filter bound to a registry engine.
+    """Immutable Bloom filter (or filter bank) bound to a registry engine.
 
     Construct via :func:`repro.api.make_filter` /
+    :func:`repro.api.make_filter_bank` /
     :func:`repro.api.filter_for_n_items`, or :meth:`from_state`.
 
     ``eq=False``: identity semantics. A dataclass-generated ``__eq__``
@@ -88,17 +112,19 @@ class Filter:
     words: jnp.ndarray
     backend: str = "jnp"
     options: BackendOptions = BackendOptions()
+    state: Optional[jnp.ndarray] = None   # traced engine state (ring head)
 
     # -- pytree protocol -----------------------------------------------------
     def tree_flatten_with_keys(self):
-        return (((jax.tree_util.GetAttrKey("words"), self.words),),
+        return (((jax.tree_util.GetAttrKey("words"), self.words),
+                 (jax.tree_util.GetAttrKey("state"), self.state)),
                 (self.spec, self.backend, self.options))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         spec, backend, options = aux
         return cls(spec=spec, words=leaves[0], backend=backend,
-                   options=options)
+                   options=options, state=leaves[1])
 
     # -- engine plumbing -----------------------------------------------------
     @property
@@ -108,38 +134,145 @@ class Filter:
     def replace(self, **kw) -> "Filter":
         return dataclasses.replace(self, **kw)
 
+    # -- bank geometry -------------------------------------------------------
+    @property
+    def bank_shape(self) -> Tuple[int, ...]:
+        """Leading bank dims of the words leaf; ``()`` for a scalar filter.
+        Derived from the array shape, so a vmapped-over member (words minus
+        its leading dim) is automatically a scalar filter again."""
+        nd = self.words.ndim - self.engine.words_ndim
+        return tuple(int(d) for d in self.words.shape[:max(nd, 0)])
+
+    @property
+    def bank_size(self) -> int:
+        """Total member count (1 for a scalar filter)."""
+        return _prod(self.bank_shape)
+
+    @property
+    def head(self):
+        """Windowed engines: the traced ring head (bank-shaped for banks)."""
+        return self.state
+
+    def _base_shape(self) -> Tuple[int, ...]:
+        return tuple(self.words.shape[len(self.bank_shape):])
+
+    def _flat(self):
+        """(words (B, *base), state (B,) or None) for bank dispatch.
+        Per-member state is a scalar (the ring head), so it flattens to
+        one entry per member."""
+        B = self.bank_size
+        wf = self.words.reshape((B,) + self._base_shape())
+        st = None if self.state is None else self.state.reshape((B,))
+        return wf, st
+
+    def select(self, idx) -> "Filter":
+        """Index the bank axis: ``select(3)`` returns member 3 as a scalar
+        filter; an array index returns a sub-bank. Zero-copy (a view)."""
+        if not self.bank_shape:
+            raise ValueError("select() needs a bank; this is a scalar filter")
+        state = None if self.state is None else self.state[idx]
+        return self.replace(words=self.words[idx], state=state)
+
+    def scatter_update(self, idx, sub: "Filter") -> "Filter":
+        """Functionally replace member(s) ``idx`` with ``sub``'s words —
+        the write half of ``select``; spec/backend must match."""
+        if not self.bank_shape:
+            raise ValueError("scatter_update() needs a bank")
+        if sub.spec != self.spec or sub.backend != self.backend:
+            raise ValueError("scatter_update: spec/backend mismatch")
+        words = self.words.at[idx].set(sub.words)
+        state = self.state
+        if state is not None:
+            state = state.at[idx].set(sub.state)
+        return self.replace(words=words, state=state)
+
     # -- bulk ops ------------------------------------------------------------
-    def add(self, keys) -> "Filter":
-        """OR a batch of keys in; returns the updated filter (self unchanged)."""
+    def _check_routed(self, tenants):
+        if not self.bank_shape:
+            raise ValueError(
+                "routed (keys, tenants) ops need a bank; build one with "
+                "repro.api.make_filter_bank(...)")
+        if len(self.bank_shape) != 1:
+            raise ValueError("routed ops address a 1-D bank axis; "
+                             f"bank_shape={self.bank_shape}")
+
+    def add(self, keys, tenants=None, valid=None) -> "Filter":
+        """OR keys in; returns the updated filter (self unchanged).
+
+        Scalar filter: ``keys (n, 2)``. Bank: either per-member batches
+        ``bank_shape + (n, 2)`` (optionally valid-masked with
+        ``valid bank_shape + (n,)``), or routed flat keys ``(n, 2)`` with
+        ``tenants (n,)`` member ids (optionally ``valid (n,)``)."""
         keys = as_keys(keys)
+        if tenants is not None:
+            self._check_routed(tenants)
+            if keys.shape[0] == 0:
+                return self
+            return _jit_add_routed(self, keys,
+                                   jnp.asarray(tenants, jnp.int32), valid)
+        if self.bank_shape:
+            if keys.shape[-2] == 0:
+                return self
+            return _jit_add_bank(self, keys, valid)
+        if valid is not None:
+            raise ValueError("valid= masks apply to bank ops only; filter "
+                             "the keys instead for a scalar add")
         if keys.shape[0] == 0:
             return self
         return _jit_add(self, keys)
 
-    def contains(self, keys) -> jnp.ndarray:
-        """(n,) bool membership; no false negatives, FPR-bounded positives."""
+    def contains(self, keys, tenants=None) -> jnp.ndarray:
+        """Membership: no false negatives, FPR-bounded positives.
+
+        Scalar: (n,) bool. Bank batches: ``bank_shape + (n,)`` bool.
+        Routed: flat (n,) bool, each key tested against its tenant's
+        member filter only."""
         keys = as_keys(keys)
+        if tenants is not None:
+            self._check_routed(tenants)
+            if keys.shape[0] == 0:
+                return jnp.zeros((0,), jnp.bool_)
+            return _jit_contains_routed(self, keys,
+                                        jnp.asarray(tenants, jnp.int32))
+        if self.bank_shape:
+            if keys.shape[-2] == 0:
+                return jnp.zeros(self.bank_shape + (0,), jnp.bool_)
+            return _jit_contains_bank(self, keys)
         if keys.shape[0] == 0:
             return jnp.zeros((0,), jnp.bool_)
         return _jit_contains(self, keys)
 
-    def remove(self, keys) -> "Filter":
-        """Delete a batch of keys (counting engine only). Safe under the
-        counting contract: no false negatives for keys still present."""
+    def remove(self, keys, tenants=None, valid=None) -> "Filter":
+        """Delete keys (counting engine only; same shapes as :meth:`add`).
+        Safe under the counting contract: no false negatives for keys
+        still present."""
         if not self.engine.supports_remove:
             raise NotImplementedError(
                 f"backend {self.backend!r} cannot remove keys; build the "
                 f"filter with variant='countingbf' (engine 'counting')")
         keys = as_keys(keys)
+        if tenants is not None:
+            self._check_routed(tenants)
+            if keys.shape[0] == 0:
+                return self
+            return _jit_remove_routed(self, keys,
+                                      jnp.asarray(tenants, jnp.int32), valid)
+        if self.bank_shape:
+            if keys.shape[-2] == 0:
+                return self
+            return _jit_remove_bank(self, keys, valid)
+        if valid is not None:
+            raise ValueError("valid= masks apply to bank ops only; filter "
+                             "the keys instead for a scalar remove")
         if keys.shape[0] == 0:
             return self
         return _jit_remove(self, keys)
 
     def decay(self, steps: int = 1) -> "Filter":
-        """Age the filter: ``steps`` uniform decrements of every counter
-        (counting engine only). Keys inserted once disappear after one
-        step; keys re-inserted every step persist — time-decayed
-        membership."""
+        """Age the filter (or every bank member): ``steps`` uniform
+        decrements of every counter (counting engine only). Keys inserted
+        once disappear after one step; keys re-inserted every step persist
+        — time-decayed membership."""
         if not self.engine.supports_decay:
             raise NotImplementedError(
                 f"backend {self.backend!r} cannot decay; build the filter "
@@ -152,24 +285,54 @@ class Filter:
     def advance(self) -> "Filter":
         """Slide the window one generation (windowed engine only): the
         oldest generation is retired in O(1) and becomes the new insert
-        target. Happens at the host level — the head index is static aux
-        data, like rotating to a fresh filter."""
+        target. The head index is traced state, so this is a pure device
+        rotation — jit/scan-safe, no retrace, banks advance in one op."""
         if not self.engine.supports_advance:
             raise NotImplementedError(
                 f"backend {self.backend!r} cannot advance; build the filter "
                 f"with generations=G (engine 'windowed')")
-        words, options = self.engine.advance(self.spec, self.words,
-                                             self.options)
-        return self.replace(words=words, options=options)
+        return _jit_advance(self)
+
+    def _merge_windowed(self, other: "Filter") -> jnp.ndarray:
+        """Windowed merge: OR the other window's dense union into MY head
+        generation. Rings can NOT be merged slot-by-slot — the heads
+        generally differ, so slot g is a different age class in each ring
+        and a naive OR would retire the other filter's keys early (a
+        false negative inside the window). Landing the union in the head
+        is conservative: merged keys join the newest age class."""
+        from repro.window.ring import ring_merge_dense
+        dense = other.dense_words()
+        if not self.bank_shape:
+            return ring_merge_dense(self.words, self.state, dense)
+        wf, st = self._flat()
+        df = dense.reshape((wf.shape[0],) + dense.shape[len(self.bank_shape):])
+        new = jax.vmap(ring_merge_dense)(wf, st, df)
+        return new.reshape(self.words.shape)
 
     def merge(self, other: "Filter") -> "Filter":
         """OR-union. Same spec required; engines may differ (the other
-        filter's state is densified and re-homed into self's engine)."""
+        filter's state is densified and re-homed into self's engine).
+        Banks merge member-wise when backend and bank shape match
+        (see :meth:`bank_merge`)."""
         if other.spec != self.spec:
             raise ValueError(f"cannot merge {other.spec} into {self.spec}")
-        if other.backend == self.backend and other.words.shape == self.words.shape:
+        if self.state is not None:
+            # windowed self: regardless of the other engine, its dense
+            # union lands in MY head generation — generation 0 (or any
+            # slot-wise OR) would misalign age classes against my traced
+            # head and let the next advance() retire the merged keys
+            if other.bank_shape != self.bank_shape:
+                raise ValueError(
+                    "windowed merge needs matching bank shapes; got "
+                    f"{other.bank_shape} vs {self.bank_shape}")
+            new = self._merge_windowed(other)
+        elif other.backend == self.backend and other.words.shape == self.words.shape:
             new = self.engine.merge(self.spec, self.words, other.words,
                                     self.options)
+        elif self.bank_shape or other.bank_shape:
+            raise ValueError(
+                "cross-engine/shape merge is not defined for banks; use "
+                "bank_merge on same-backend banks, or select() members")
         else:
             dense = other.engine.to_dense(other.spec, other.words,
                                           other.options)
@@ -179,37 +342,71 @@ class Filter:
 
     __or__ = merge
 
+    def bank_merge(self, other: "Filter") -> "Filter":
+        """Member-wise union of two same-shape banks (member i ∪ member i).
+        Bit banks OR; counting banks saturating-add their counters;
+        windowed banks land the other window's union in each member's
+        head generation (age classes cannot be slot-merged)."""
+        if not self.bank_shape:
+            raise ValueError("bank_merge() needs banks; use merge()")
+        if (other.spec != self.spec or other.backend != self.backend
+                or other.bank_shape != self.bank_shape):
+            raise ValueError(
+                f"bank_merge needs matching (spec, backend, bank_shape); "
+                f"got {other.spec}/{other.backend}/{other.bank_shape} vs "
+                f"{self.spec}/{self.backend}/{self.bank_shape}")
+        if self.state is not None:
+            new = self._merge_windowed(other)
+        else:
+            new = self.engine.merge(self.spec, self.words, other.words,
+                                    self.options)
+        return self.replace(words=new)
+
     # -- introspection -------------------------------------------------------
     def dense_words(self) -> jnp.ndarray:
-        """Canonical (n_words,) uint32 view (global OR of device state)."""
-        return self.engine.to_dense(self.spec, self.words, self.options)
+        """Canonical uint32 view: (n_words,) for a scalar filter,
+        ``bank_shape + (n_words,)`` for a bank (global OR of device state,
+        occupancy bits for counting engines)."""
+        if not self.bank_shape:
+            return self.engine.to_dense(self.spec, self.words, self.options)
+        wf, _ = self._flat()
+        dense = jax.vmap(
+            lambda w: self.engine.to_dense(self.spec, w, self.options))(wf)
+        return dense.reshape(self.bank_shape + dense.shape[1:])
 
     def fill_fraction(self) -> float:
+        """Aggregate fill of the (bank's) canonical bit view."""
         return float(V.fill_fraction(self.dense_words()))
 
     def approx_count(self) -> float:
         """Estimated number of distinct keys inserted (Swamidass–Baldi):
-        n̂ = -(m/k) · ln(1 − fill). Exact in expectation for the classical
-        filter; a close upper-structure estimate for blocked variants."""
+        n̂ = -(M/k) · ln(1 − fill) with M the *total* bits across the bank.
+        Exact in expectation for the classical filter; a close
+        upper-structure estimate for blocked variants."""
         fill = min(self.fill_fraction(), 1.0 - 1e-12)
-        return max(0.0,
-                   -(self.spec.m_bits / self.spec.k) * math.log(1.0 - fill))
+        m_total = self.spec.m_bits * max(self.bank_size, 1)
+        return max(0.0, -(m_total / self.spec.k) * math.log(1.0 - fill))
 
     def fpr_theory(self, n: int) -> float:
+        """Analytic FPR at load n (per member, for banks)."""
         return V.fpr_theory(self.spec, n)
 
     def measure_fpr(self, n_probe: int = 1 << 16, seed: int = 1234) -> float:
         """Empirical FPR against probes from the *reserved* keyspace
         (``hashing.probe_u64x2``) — structurally disjoint from every
-        ``random_u64x2``-style insert set, so each hit really is false."""
+        ``random_u64x2``-style insert set, so each hit really is false.
+        Banks probe every member and report the mean."""
         from repro.core.hashing import probe_u64x2
-        probes = probe_u64x2(n_probe, seed=seed)
+        probes = as_keys(probe_u64x2(n_probe, seed=seed))
+        if self.bank_shape:
+            probes = jnp.broadcast_to(probes, self.bank_shape + probes.shape)
         return float(np.asarray(self.contains(probes)).mean())
 
     @property
     def nbytes(self) -> int:
         """Actual backing storage (counting: 4x the bit filter; windowed:
-        G generations; replicated: one replica per device)."""
+        G generations; replicated: one replica per device; banks: the sum
+        over members)."""
         return int(self.words.size) * self.words.dtype.itemsize
 
     # -- checkpointing -------------------------------------------------------
@@ -218,16 +415,21 @@ class Filter:
 
         ``checkpoint.save`` accepts either a ``Filter`` directly (it is a
         pytree) or this canonical form; the latter restores into *any*
-        engine via :meth:`from_state`. Windowed filters additionally
-        record their ring geometry so the default round-trip re-selects
-        the windowed engine (age classes themselves are not part of the
-        canonical form — see DESIGN.md §10)."""
+        engine via :meth:`from_state`. Banks record ``bank_shape`` (the
+        dense words already carry the bank dims); windowed filters record
+        their ring geometry so the default round-trip re-selects the
+        windowed engine (age classes are not part of the canonical form —
+        see DESIGN.md §10)."""
         state = {"words": self.dense_words(),
                  "spec": dataclasses.asdict(self.spec),
                  "backend": self.backend}
+        if self.bank_shape:
+            state["bank_shape"] = list(self.bank_shape)
         if self.options.generations is not None:
-            state["options"] = {"generations": self.options.generations,
-                                "head": self.options.head}
+            # the head is NOT recorded: the canonical form collapses age
+            # classes, so from_state always restores the union into
+            # generation 0 with a fresh head (rotation-invariant)
+            state["options"] = {"generations": self.options.generations}
         return state
 
     @classmethod
@@ -237,35 +439,58 @@ class Filter:
                              for k, v in state["spec"].items()})
         name = backend or state.get("backend", "jnp")
         st_opts = state.get("options") or {}
+        bank_shape = tuple(int(d) for d in state.get("bank_shape", ()))
         if name == "windowed" and options.generations is None \
                 and "generations" in st_opts:
             # restore the ring geometry saved by to_state(); an explicit
             # non-windowed ``backend=`` re-homes the dense union instead
             options = dataclasses.replace(
-                options, generations=int(st_opts["generations"]),
-                head=int(st_opts.get("head", 0)))
-        eng = registry.select(spec, name, options.ctx())
+                options, generations=int(st_opts["generations"]))
+        eng = registry.select(spec, name,
+                              options.ctx(bank=_prod(bank_shape) or None
+                                          if bank_shape else None))
         dense = jnp.asarray(state["words"], jnp.uint32)
-        return cls(spec=spec, words=eng.from_dense(spec, dense, options),
-                   backend=eng.name, options=options)
+        if bank_shape:
+            B = _prod(bank_shape)
+            df = dense.reshape((B, -1))
+            words = jax.vmap(
+                lambda d: eng.from_dense(spec, d, options))(df)
+            words = words.reshape(bank_shape + words.shape[1:])
+            st = eng.init_state(spec, options)
+            if st is not None:
+                st = jnp.broadcast_to(st, bank_shape + st.shape)
+        else:
+            words = eng.from_dense(spec, dense, options)
+            st = eng.init_state(spec, options)
+        return cls(spec=spec, words=words, backend=eng.name, options=options,
+                   state=st)
 
     def __repr__(self):
+        bank = f", bank={self.bank_shape}" if self.bank_shape else ""
         return (f"Filter({self.spec}, backend={self.backend!r}, "
-                f"words={tuple(self.words.shape)})")
+                f"words={tuple(self.words.shape)}{bank})")
 
 
-# One jitted entry point per op; jax's cache keys on the pytree structure
-# (spec/backend/options are aux data), replacing the old per-spec
-# functools.lru_cache of jitted lambdas.
+# One jitted entry point per op form; jax's cache keys on the pytree
+# structure (spec/backend/options are aux data), replacing the old per-spec
+# functools.lru_cache of jitted lambdas. Bank/routed forms are separate
+# entry points so each compiles to its own stable executable.
 @jax.jit
 def _jit_add(filt: Filter, keys: jnp.ndarray) -> Filter:
-    new = filt.engine.add(filt.spec, filt.words, keys, filt.options)
+    if filt.state is None:
+        new = filt.engine.add(filt.spec, filt.words, keys, filt.options)
+    else:
+        new = filt.engine.add(filt.spec, filt.words, keys, filt.options,
+                              state=filt.state)
     return filt.replace(words=new)
 
 
 @jax.jit
 def _jit_contains(filt: Filter, keys: jnp.ndarray) -> jnp.ndarray:
-    return filt.engine.contains(filt.spec, filt.words, keys, filt.options)
+    if filt.state is None:
+        return filt.engine.contains(filt.spec, filt.words, keys, filt.options)
+    return filt.engine.contains(filt.spec, filt.words, keys, filt.options,
+                                state=filt.state)
 
 
 @jax.jit
@@ -276,5 +501,79 @@ def _jit_remove(filt: Filter, keys: jnp.ndarray) -> Filter:
 
 @jax.jit
 def _jit_decay(filt: Filter) -> Filter:
+    if filt.bank_shape:
+        wf, _ = filt._flat()
+        new = filt.engine.decay_bank(filt.spec, wf, filt.options)
+        return filt.replace(words=new.reshape(filt.words.shape))
     new = filt.engine.decay(filt.spec, filt.words, filt.options)
     return filt.replace(words=new)
+
+
+@jax.jit
+def _jit_advance(filt: Filter) -> Filter:
+    if filt.bank_shape:
+        wf, st = filt._flat()
+        words, state = filt.engine.advance_bank(filt.spec, wf, filt.options,
+                                                st)
+        return filt.replace(words=words.reshape(filt.words.shape),
+                            state=state.reshape(filt.bank_shape))
+    words, state = filt.engine.advance(filt.spec, filt.words, filt.options,
+                                       state=filt.state)
+    return filt.replace(words=words, state=state)
+
+
+@jax.jit
+def _jit_add_bank(filt: Filter, keys: jnp.ndarray, valid) -> Filter:
+    wf, st = filt._flat()
+    B = wf.shape[0]
+    kf = keys.reshape((B,) + keys.shape[len(filt.bank_shape):])
+    vf = None if valid is None else valid.reshape((B, kf.shape[1]))
+    new = filt.engine.add_bank(filt.spec, wf, kf, filt.options, valid=vf,
+                               state=st)
+    return filt.replace(words=new.reshape(filt.words.shape))
+
+
+@jax.jit
+def _jit_contains_bank(filt: Filter, keys: jnp.ndarray) -> jnp.ndarray:
+    wf, st = filt._flat()
+    B = wf.shape[0]
+    kf = keys.reshape((B,) + keys.shape[len(filt.bank_shape):])
+    out = filt.engine.contains_bank(filt.spec, wf, kf, filt.options, state=st)
+    return out.reshape(filt.bank_shape + (kf.shape[1],))
+
+
+@jax.jit
+def _jit_remove_bank(filt: Filter, keys: jnp.ndarray, valid) -> Filter:
+    wf, st = filt._flat()
+    B = wf.shape[0]
+    kf = keys.reshape((B,) + keys.shape[len(filt.bank_shape):])
+    vf = None if valid is None else valid.reshape((B, kf.shape[1]))
+    new = filt.engine.remove_bank(filt.spec, wf, kf, filt.options, valid=vf,
+                                  state=st)
+    return filt.replace(words=new.reshape(filt.words.shape))
+
+
+@jax.jit
+def _jit_add_routed(filt: Filter, keys: jnp.ndarray, tenants: jnp.ndarray,
+                    valid) -> Filter:
+    wf, st = filt._flat()
+    new = filt.engine.add_bank_routed(filt.spec, wf, keys, tenants,
+                                      filt.options, valid=valid, state=st)
+    return filt.replace(words=new.reshape(filt.words.shape))
+
+
+@jax.jit
+def _jit_contains_routed(filt: Filter, keys: jnp.ndarray,
+                         tenants: jnp.ndarray) -> jnp.ndarray:
+    wf, st = filt._flat()
+    return filt.engine.contains_bank_routed(filt.spec, wf, keys, tenants,
+                                            filt.options, state=st)
+
+
+@jax.jit
+def _jit_remove_routed(filt: Filter, keys: jnp.ndarray, tenants: jnp.ndarray,
+                       valid) -> Filter:
+    wf, st = filt._flat()
+    new = filt.engine.remove_bank_routed(filt.spec, wf, keys, tenants,
+                                         filt.options, valid=valid, state=st)
+    return filt.replace(words=new.reshape(filt.words.shape))

@@ -35,6 +35,16 @@ import jax.numpy as jnp
 from repro.core.variants import FilterSpec
 
 
+def flat_members(keys: jnp.ndarray):
+    """(B, n, 2) per-member batches -> flat (keys (B*n, 2), member (B*n,)).
+
+    The one batch-to-routed flattening convention, shared by every engine
+    with a native routed path (single-host and sharded alike)."""
+    B, n = keys.shape[0], keys.shape[1]
+    member = jnp.repeat(jnp.arange(B, dtype=jnp.int32), n)
+    return keys.reshape(-1, 2), member
+
+
 @dataclasses.dataclass(frozen=True)
 class SelectionContext:
     """Everything ``supports``/``cost`` may rank on, besides the spec."""
@@ -44,13 +54,16 @@ class SelectionContext:
     axis: str = "data"
     n_keys_hint: Optional[int] = None  # expected bulk-op batch size
     generations: Optional[int] = None  # ring size -> selects the windowed engine
+    bank: Optional[int] = None         # FilterBank member count (None = scalar)
 
     @classmethod
     def current(cls, mesh=None, axis: str = "data",
                 n_keys_hint: Optional[int] = None,
-                generations: Optional[int] = None) -> "SelectionContext":
+                generations: Optional[int] = None,
+                bank: Optional[int] = None) -> "SelectionContext":
         return cls(platform=jax.default_backend(), mesh=mesh, axis=axis,
-                   n_keys_hint=n_keys_hint, generations=generations)
+                   n_keys_hint=n_keys_hint, generations=generations,
+                   bank=bank)
 
 
 class Backend:
@@ -68,10 +81,19 @@ class Backend:
     # Capability flags: which beyond-insert ops this engine implements.
     # ``Filter.remove``/``decay``/``advance`` check these before dispatch so
     # unsupported engines fail with a clear error instead of an attribute
-    # surprise deep in jit.
+    # surprise deep in jit. ``supports_bank`` marks a NATIVE banked path
+    # (one fused device op over the whole bank); engines without it still
+    # serve banks through the generic vmap fallback below unless their
+    # ``supports()`` declines a ``ctx.bank`` outright.
     supports_remove: bool = False      # per-key deletion (counting)
     supports_decay: bool = False       # uniform aging step (counting)
     supports_advance: bool = False     # window slide (generation ring)
+    supports_bank: bool = False        # native single-launch bank ops
+
+    # Leading array dims of ONE filter's words: a bank prepends its shape
+    # in front of these, which is how ``Filter.bank_shape`` is derived
+    # (and why ``jax.vmap`` over the bank axis sees valid scalar filters).
+    words_ndim: int = 1
 
     # -- capability / ranking ------------------------------------------------
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
@@ -86,11 +108,24 @@ class Backend:
         return {"name": self.name, "doc": (self.__doc__ or "").strip(),
                 "supports_remove": self.supports_remove,
                 "supports_decay": self.supports_decay,
-                "supports_advance": self.supports_advance}
+                "supports_advance": self.supports_advance,
+                "supports_bank": self.supports_bank}
 
     # -- storage -------------------------------------------------------------
     def init(self, spec: FilterSpec, options) -> jnp.ndarray:
         raise NotImplementedError
+
+    def init_state(self, spec: FilterSpec, options):
+        """Optional traced per-filter state (second ``Filter`` pytree leaf).
+        Only the windowed engine uses it (the ring head); ``None`` for
+        everyone else keeps the pytree structure of PR-1 filters."""
+        return None
+
+    def init_bank(self, spec: FilterSpec, bank_shape: Tuple[int, ...],
+                  options) -> jnp.ndarray:
+        """Zeroed words for a whole bank: bank dims lead the words leaf."""
+        base = self.init(spec, options)
+        return jnp.zeros(tuple(bank_shape) + base.shape, base.dtype)
 
     def to_dense(self, spec: FilterSpec, words: jnp.ndarray, options
                  ) -> jnp.ndarray:
@@ -135,11 +170,121 @@ class Backend:
             f"engine {self.name!r} does not support decay(); use the "
             f"'counting' engine (variant='countingbf')")
 
-    def advance(self, spec: FilterSpec, words: jnp.ndarray, options):
-        """Slide the window (windowed engine): returns (words, options)."""
+    def advance(self, spec: FilterSpec, words: jnp.ndarray, options,
+                state=None):
+        """Slide the window (windowed engine): returns (words, state)."""
         raise NotImplementedError(
             f"engine {self.name!r} does not support advance(); use the "
             f"'windowed' engine (generations=...)")
+
+    # -- bank ops (FilterBank axis) ------------------------------------------
+    # Batched form: ``words`` (B, *base), per-member key batches (B, n, 2),
+    # optional validity (B, n). Routed form: flat keys (N, 2) + member ids
+    # (N,). The defaults below are the GENERIC VMAP FALLBACK — correct for
+    # every engine whose scalar ops are jax-transformable (vmap of a Pallas
+    # kernel batches into one launch with an extra grid dim); engines with
+    # a native member-offset path override them and set ``supports_bank``.
+
+    def add_bank(self, spec: FilterSpec, words: jnp.ndarray,
+                 keys: jnp.ndarray, options, valid=None, state=None
+                 ) -> jnp.ndarray:
+        if state is None:
+            run = jax.vmap(lambda w, k: self.add(spec, w, k, options))
+        else:
+            run = jax.vmap(
+                lambda w, k, st: self.add(spec, w, k, options, state=st))
+        if valid is None:
+            return run(words, keys) if state is None \
+                else run(words, keys, state)
+        # OR-idempotent fill: each member's invalid slots repeat one of its
+        # valid keys (re-adding a key is a no-op for bit filters); a member
+        # with NO valid keys keeps its words verbatim. Engines with
+        # non-idempotent adds (counting) must override, not inherit.
+        v = valid.astype(bool)
+        any_v = v.any(axis=1)                                   # (B,)
+        fill = jnp.take_along_axis(
+            keys, jnp.argmax(v, axis=1)[:, None, None], axis=1)  # (B, 1, 2)
+        k2 = jnp.where(v[..., None], keys, fill)
+        new = run(words, k2) if state is None else run(words, k2, state)
+        sel = any_v.reshape((-1,) + (1,) * (words.ndim - 1))
+        return jnp.where(sel, new, words)
+
+    def contains_bank(self, spec: FilterSpec, words: jnp.ndarray,
+                      keys: jnp.ndarray, options, state=None) -> jnp.ndarray:
+        return jax.vmap(
+            lambda w, k: self.contains(spec, w, k, options))(words, keys)
+
+    def remove_bank(self, spec: FilterSpec, words: jnp.ndarray,
+                    keys: jnp.ndarray, options, valid=None, state=None
+                    ) -> jnp.ndarray:
+        raise NotImplementedError(
+            f"engine {self.name!r} does not support remove(); use the "
+            f"'counting' engine (variant='countingbf')")
+
+    def decay_bank(self, spec: FilterSpec, words: jnp.ndarray, options
+                   ) -> jnp.ndarray:
+        return jax.vmap(lambda w: self.decay(spec, w, options))(words)
+
+    def advance_bank(self, spec: FilterSpec, words: jnp.ndarray, options,
+                     state):
+        return jax.vmap(
+            lambda w, st: self.advance(spec, w, options, state=st)
+        )(words, state)
+
+    # Fallback routed ops materialize a (B, N) scatter (capacity = N so no
+    # key can overflow — exactness over memory). Beyond this many slots the
+    # cost is certainly a mistake: fail loudly and point at the native
+    # alternatives instead of silently allocating gigabytes.
+    _ROUTE_FALLBACK_MAX_SLOTS = 1 << 22
+
+    def _route(self, words: jnp.ndarray, keys: jnp.ndarray,
+               member: jnp.ndarray, valid=None):
+        """Fallback scatter of flat routed keys into per-member batches
+        (capacity = N, so nothing can overflow). Returns
+        (keys (B, N, 2), valid (B, N), rank (N,)).
+
+        O(B·N) memory and member-batch work — acceptable for the engines
+        that land here (windowed/HBM banks at serving batch sizes), not
+        for bulk routed traffic: use an engine with native routed support
+        (jnp, pallas-vmem, counting, sharded) or ``api.route()`` with an
+        explicit capacity for that."""
+        from repro.core.partition import route_by_id
+        B, n = words.shape[0], keys.shape[0]
+        if B * n > self._ROUTE_FALLBACK_MAX_SLOTS:
+            raise ValueError(
+                f"routed fallback on engine {self.name!r} would scatter "
+                f"{B} members x {n} keys = {B * n} slots; route this "
+                f"traffic through an engine with native bank support or "
+                f"pre-scatter with repro.api.route(..., capacity=...)")
+        part = route_by_id(keys, member, B, capacity=max(n, 1))
+        v = part.valid
+        if valid is not None:
+            # caller validity rides along: scatter it to the same slots
+            flat_v = jnp.zeros(v.shape, jnp.uint8).reshape(-1)
+            slot = member.astype(jnp.int32) * v.shape[1] + part.rank
+            flat_v = flat_v.at[slot].set(valid.astype(jnp.uint8))
+            v = v * flat_v.reshape(v.shape)
+        return part.keys_by_seg, v, part.rank
+
+    def add_bank_routed(self, spec: FilterSpec, words: jnp.ndarray,
+                        keys: jnp.ndarray, member: jnp.ndarray, options,
+                        valid=None, state=None) -> jnp.ndarray:
+        kb, vb, _ = self._route(words, keys, member, valid)
+        return self.add_bank(spec, words, kb, options, valid=vb, state=state)
+
+    def contains_bank_routed(self, spec: FilterSpec, words: jnp.ndarray,
+                             keys: jnp.ndarray, member: jnp.ndarray, options,
+                             state=None) -> jnp.ndarray:
+        kb, _, rank = self._route(words, keys, member)
+        res = self.contains_bank(spec, words, kb, options, state=state)
+        return res[member.astype(jnp.int32), rank]
+
+    def remove_bank_routed(self, spec: FilterSpec, words: jnp.ndarray,
+                           keys: jnp.ndarray, member: jnp.ndarray, options,
+                           valid=None, state=None) -> jnp.ndarray:
+        kb, vb, _ = self._route(words, keys, member, valid)
+        return self.remove_bank(spec, words, kb, options, valid=vb,
+                                state=state)
 
 
 _REGISTRY: Dict[str, Backend] = {}

@@ -115,13 +115,19 @@ def save_filter(ckpt_dir: str, step: int, filt, *, sync: bool = True,
                 keep: int = 3):
     """Checkpoint a ``repro.api.Filter`` in engine-independent form.
 
-    The dense word array is the only array leaf; spec + engine name travel
-    in the manifest's ``extra`` metadata, so ``restore_filter`` can rebuild
-    on any engine (filter migration across deployment shapes)."""
+    The dense word array is the only array leaf (banks keep their leading
+    bank dims on it); spec + engine name + bank shape + ring geometry
+    travel in the manifest's ``extra`` metadata, so ``restore_filter`` can
+    rebuild on any engine (filter migration across deployment shapes)."""
     state = filt.to_state()
+    extra = {"filter_spec": state["spec"],
+             "filter_backend": state["backend"]}
+    if "bank_shape" in state:
+        extra["filter_bank_shape"] = state["bank_shape"]
+    if "options" in state:
+        extra["filter_options"] = state["options"]
     return save(ckpt_dir, step, {"filter_words": state["words"]}, sync=sync,
-                keep=keep, extra={"filter_spec": state["spec"],
-                                  "filter_backend": state["backend"]})
+                keep=keep, extra=extra)
 
 
 def restore_filter(ckpt_dir: str, *, step: Optional[int] = None,
@@ -140,13 +146,18 @@ def restore_filter(ckpt_dir: str, *, step: Optional[int] = None,
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    spec_d = manifest["extra"]["filter_spec"]
+    extra = manifest["extra"]
+    spec_d = extra["filter_spec"]
     spec = FilterSpec(**spec_d)
     words = np.load(os.path.join(d, manifest["leaves"]["filter_words"]["file"]))
-    filt = Filter.from_state(
-        {"words": words, "spec": spec_d,
-         "backend": manifest["extra"]["filter_backend"]},
-        backend=backend, options=options or BackendOptions())
+    state = {"words": words, "spec": spec_d,
+             "backend": extra["filter_backend"]}
+    if "filter_bank_shape" in extra:
+        state["bank_shape"] = extra["filter_bank_shape"]
+    if "filter_options" in extra:
+        state["options"] = extra["filter_options"]
+    filt = Filter.from_state(state, backend=backend,
+                             options=options or BackendOptions())
     assert filt.spec == spec
     return step, filt
 

@@ -237,6 +237,105 @@ def sharded_add(spec: FilterSpec, mesh: Mesh, axis: str, capacity: int,
     return fn(words, keys_sharded)
 
 
+# ---------------------------------------------------------------------------
+# Bank-sharded deployment — the bank axis across the mesh (FilterBank)
+# ---------------------------------------------------------------------------
+# Device d owns B/n_dev whole member filters (each VMEM-small — exactly the
+# multi-tenant regime the paper's cache-resident fast path wants). Routed
+# ops compose TENANT routing with the existing key-routing machinery: keys
+# ride a fixed-capacity all_to_all to their member's owner device, the
+# owner runs the fused local bank op (core.variants.bank_*), and lookup
+# results ride the inverse all_to_all home. Same conservative overflow
+# contract as the block-sharded filter: overflowed adds drop (missed
+# dedup), overflowed lookups report "present" (an allowed FP, never an FN).
+
+
+def bankshard_init(spec: FilterSpec, mesh: Mesh, axis: str, bank: int
+                   ) -> jnp.ndarray:
+    """(bank, n_words) zeroed members, bank axis sharded along ``axis``."""
+    n_dev = mesh.shape[axis]
+    assert bank % n_dev == 0, (bank, n_dev)
+    sharding = NamedSharding(mesh, P(axis))
+    return jax.device_put(jnp.zeros((bank, spec.n_words), jnp.uint32),
+                          sharding)
+
+
+def _route_members(keys: jnp.ndarray, member: jnp.ndarray,
+                   valid, n_dev: int, b_local: int, capacity: int):
+    """Per-device: bucket local (key, member) pairs by owner device
+    (member // b_local), fixed capacity. Members are rebased to the
+    owner's local index before the send.
+
+    The bucket-rank/scatter machinery is ``core.partition.route_by_id``
+    (one implementation of the idiom); this adds only the member-rebase
+    scatter and the caller-validity mask. Returns (send_k [n_dev, cap, 2],
+    send_m [n_dev, cap], send_v [n_dev, cap], dest, rank, keep)."""
+    from repro.core.partition import route_by_id
+    member = jnp.asarray(member, jnp.int32)
+    dest = member // jnp.int32(b_local)
+    part = route_by_id(keys, dest, n_dev, capacity)
+    # caller-invalid keys still travel in send_k (shape is fixed) but with
+    # send_v = 0 they are masked no-ops at the owner
+    ok = part.keep if valid is None else (part.keep & (valid > 0))
+    slot = jnp.where(ok, dest * capacity + part.rank, n_dev * capacity)
+    send_m = jnp.zeros((n_dev * capacity + 1,), jnp.int32).at[slot].set(
+        member % jnp.int32(b_local), mode="drop")[:-1].reshape(n_dev, capacity)
+    send_v = jnp.zeros((n_dev * capacity + 1,), jnp.uint8).at[slot].set(
+        1, mode="drop")[:-1].reshape(n_dev, capacity)
+    return part.keys_by_seg, send_m, send_v, dest, part.rank, part.keep
+
+
+def bankshard_add(spec: FilterSpec, mesh: Mesh, axis: str, capacity: int,
+                  words: jnp.ndarray, keys_sharded: jnp.ndarray,
+                  member_sharded: jnp.ndarray, valid_sharded: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Route each device's flat (keys, member, valid) shard to the member's
+    owner, then one fused bank add into the owner's resident members."""
+    n_dev = mesh.shape[axis]
+    b_local = words.shape[0] // n_dev
+
+    def body(w, keys, member, valid):
+        send_k, send_m, send_v, *_ = _route_members(
+            keys[0], member[0], valid[0], n_dev, b_local, capacity)
+        rk = jax.lax.all_to_all(send_k, axis, 0, 0, tiled=False)
+        rm = jax.lax.all_to_all(send_m, axis, 0, 0, tiled=False)
+        rv = jax.lax.all_to_all(send_v, axis, 0, 0, tiled=False)
+        return V.bank_add_rows(spec, w, rk.reshape(-1, 2), rm.reshape(-1),
+                               valid=rv.reshape(-1))
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis), P(axis), P(axis), P(axis)),
+                   out_specs=P(axis))
+    return fn(words, keys_sharded, member_sharded, valid_sharded)
+
+
+def bankshard_contains(spec: FilterSpec, mesh: Mesh, axis: str,
+                       capacity: int, words: jnp.ndarray,
+                       keys_sharded: jnp.ndarray,
+                       member_sharded: jnp.ndarray) -> jnp.ndarray:
+    """(n_dev, n_local) bool, sharded like the keys; each key tested only
+    against its member's filter. Overflowed keys report "present"."""
+    n_dev = mesh.shape[axis]
+    b_local = words.shape[0] // n_dev
+
+    def body(w, keys, member):
+        k, m = keys[0], member[0]
+        send_k, send_m, _, dest, rank, keep = _route_members(
+            k, m, None, n_dev, b_local, capacity)
+        rk = jax.lax.all_to_all(send_k, axis, 0, 0, tiled=False)
+        rm = jax.lax.all_to_all(send_m, axis, 0, 0, tiled=False)
+        res = V.bank_contains_rows(spec, w, rk.reshape(-1, 2),
+                                   rm.reshape(-1))
+        back = jax.lax.all_to_all(res.reshape(n_dev, capacity), axis, 0, 0,
+                                  tiled=False)
+        mine = back.reshape(-1)[dest * capacity + rank]
+        return jnp.where(keep, mine, True)[None]
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis), P(axis)),
+                   out_specs=P(axis))
+    return fn(words, keys_sharded, member_sharded)
+
+
 def sharded_contains(spec: FilterSpec, mesh: Mesh, axis: str, capacity: int,
                      words: jnp.ndarray, keys_sharded: jnp.ndarray
                      ) -> jnp.ndarray:

@@ -135,6 +135,26 @@ def hash_keys(keys: jnp.ndarray):
     return (xxh32_u32(keys, SEED_PATTERN), xxh32_u32(keys, SEED_BLOCK))
 
 
+def mix_rows(mat: jnp.ndarray) -> jnp.ndarray:
+    """Hash rows of uint32 tokens to u64x2 keys, fully on device.
+
+    ``mat``: (..., w) uint32. Returns (..., 2) uint32. The column loop is
+    a *trace-time* Python loop over the (small, static) row width — FNV/
+    Fibonacci-style mixing fuses into a handful of whole-batch vector ops,
+    so callers like the n-gram guard hash an entire decode batch per step
+    with zero host-side per-row work."""
+    mat = jnp.asarray(mat, jnp.uint32)
+    h1 = jnp.full(mat.shape[:-1], 0x811C9DC5, jnp.uint32)
+    h2 = jnp.full(mat.shape[:-1], 0x9E3779B9, jnp.uint32)
+    for j in range(mat.shape[-1]):        # static unroll over columns
+        c = mat[..., j]
+        h1 = (h1 ^ c) * jnp.uint32(16777619)
+        h2 = (h2 + c) * jnp.uint32(2246822519)
+        h2 = h2 ^ (h2 >> jnp.uint32(13))
+    h1 = h1 ^ (h1 >> jnp.uint32(16))
+    return jnp.stack([h1, h2], axis=-1)
+
+
 # ---------------------------------------------------------------------------
 # Host-side reference (numpy, used by tests to cross-check the jnp path)
 # ---------------------------------------------------------------------------

@@ -40,6 +40,7 @@ class JitPartition(NamedTuple):
     valid: jnp.ndarray         # (n_segments, capacity) uint8
     keep: jnp.ndarray          # (n,) bool — key survived into its segment
     overflow: jnp.ndarray      # () int32 — number of dropped keys
+    rank: jnp.ndarray          # (n,) int32 — key's slot within its bucket
 
 
 def segment_ids(spec: FilterSpec, keys: jnp.ndarray, n_segments: int) -> jnp.ndarray:
@@ -87,21 +88,37 @@ def partition_jit(spec: FilterSpec, keys: jnp.ndarray, n_segments: int,
     keys (traced callers). Capacity of mean * 4 is ~overflow-free for
     uniform hashes. Returns a :class:`JitPartition`.
     """
-    n = keys.shape[0]
     seg = segment_ids(spec, keys, n_segments)                    # (n,)
-    # rank of each key within its segment (stable): count predecessors
-    order = jnp.argsort(seg, stable=True)
-    sorted_seg = seg[order]
-    idx_in_run = jnp.arange(n) - jnp.searchsorted(sorted_seg, sorted_seg, side="left")
+    return route_by_id(keys, seg, n_segments, capacity)
+
+
+def route_by_id(keys: jnp.ndarray, ids: jnp.ndarray, n_buckets: int,
+                capacity: int) -> JitPartition:
+    """jit-compatible scatter of flat keys into per-bucket batches.
+
+    The generic form of :func:`partition_jit` with *caller-supplied* bucket
+    ids — used by tenant routing (``repro.api.route``: ids are bank member
+    indices) and by the hash-segment partition above (ids are segment
+    owners). Fixed-shape output: (n_buckets, capacity, 2) keys plus a
+    validity mask; same keep/overflow contract as :class:`JitPartition`
+    (no silent key loss).
+    """
+    n = keys.shape[0]
+    ids = jnp.asarray(ids, jnp.int32)
+    # rank of each key within its bucket (stable): count predecessors
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    idx_in_run = jnp.arange(n) - jnp.searchsorted(sorted_ids, sorted_ids, side="left")
     rank = jnp.zeros((n,), jnp.int32).at[order].set(idx_in_run.astype(jnp.int32))
     keep = rank < capacity
-    slot = jnp.where(keep, seg * capacity + rank, n_segments * capacity)  # overflow bin
-    flat_keys = jnp.zeros((n_segments * capacity + 1, 2), jnp.uint32
+    slot = jnp.where(keep, ids * capacity + rank, n_buckets * capacity)  # overflow bin
+    flat_keys = jnp.zeros((n_buckets * capacity + 1, 2), jnp.uint32
                           ).at[slot].set(keys, mode="drop")
-    flat_valid = jnp.zeros((n_segments * capacity + 1,), jnp.uint8
+    flat_valid = jnp.zeros((n_buckets * capacity + 1,), jnp.uint8
                            ).at[slot].set(1, mode="drop")
     return JitPartition(
-        flat_keys[:-1].reshape(n_segments, capacity, 2),
-        flat_valid[:-1].reshape(n_segments, capacity),
+        flat_keys[:-1].reshape(n_buckets, capacity, 2),
+        flat_valid[:-1].reshape(n_buckets, capacity),
         keep,
-        jnp.int32(n) - jnp.sum(keep).astype(jnp.int32))
+        jnp.int32(n) - jnp.sum(keep).astype(jnp.int32),
+        rank)

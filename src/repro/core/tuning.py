@@ -103,11 +103,16 @@ def _store_disk(key: str, value: dict) -> None:
 
 
 def _plan_key(spec: FilterSpec, op: str, regime: str, mode: str,
-              tile: int) -> str:
+              tile: int, bank: int = 1) -> str:
     # The backend is part of the key: measure-mode timings taken in CPU
     # interpret mode must never pin a plan for a real TPU run (the same
-    # stale-key class of bug as omitting tile).
-    return f"plan|{jax.default_backend()}|{spec}|{op}|{regime}|{mode}|tile{tile}"
+    # stale-key class of bug as omitting tile). ``bank`` joins the key for
+    # the same reason — a B-member bank shifts the loop/gather crossover
+    # (B× the gather index space, B× the RMW working set) and must never
+    # silently reuse a plan tuned for the scalar filter. bank=1 keeps the
+    # pre-bank key spelling so existing disk caches stay warm.
+    base = f"plan|{jax.default_backend()}|{spec}|{op}|{regime}|{mode}|tile{tile}"
+    return base if bank == 1 else f"{base}|bank{bank}"
 
 
 # ---------------------------------------------------------------------------
@@ -144,7 +149,7 @@ def structural_score(spec: FilterSpec, lay: Layout, op: str) -> float:
 
 
 def probe_schedule_steps(spec: FilterSpec, lay: Layout, op: str, tile: int,
-                         probe: str) -> float:
+                         probe: str, bank: int = 1) -> float:
     """Interpret-mode schedule-step count of one key tile's phase 2.
 
     loop:   (tile/Θ) trips, each issuing s/Φ loads + 1 fused compare (or
@@ -152,16 +157,25 @@ def probe_schedule_steps(spec: FilterSpec, lay: Layout, op: str, tile: int,
     gather: a constant number of whole-tile vector ops — index build,
             ONE gather, ONE fused compare for contains; sort (log²-depth
             bitonic analogue), segmented scan, gather, scatter for add.
+
+    ``bank``: a B-member bank widens the resident word array B×. The loop
+    probe's dynamic-slice loads then stride across the whole bank (one
+    address stream per key, locality decaying with bank depth); the gather
+    probe only grows its index space (one extra vector op worth per
+    doubling). Both are soft log2 terms — the fixed per-trip structure is
+    unchanged.
     """
+    import math
+    lg_b = math.log2(max(bank, 1))
     if probe == "loop":
         per_trip = spec.s // lay.phi + (1 if op == "contains" else
                                         spec.s // lay.phi)
-        return (tile // lay.theta) * per_trip
-    import math
+        return (tile // lay.theta) * per_trip * (1.0 + 0.05 * lg_b)
     if op == "contains":
-        return 3.0
+        return 3.0 + 0.25 * lg_b
     lg = max(math.log2(max(tile, 2)), 1.0)
-    return 2.0 * lg + 4.0          # sort + segmented scan + gather + scatter
+    # sort + segmented scan + gather + scatter (+ bank index widening)
+    return 2.0 * lg + 4.0 + 0.25 * lg_b
 
 
 def depth_structural_score(spec: FilterSpec, depth: int) -> float:
@@ -250,15 +264,21 @@ def tune_layout(spec: FilterSpec, op: str = "contains",
 @functools.lru_cache(maxsize=256)
 def tune_plan(spec: FilterSpec, op: str = "contains", regime: str = "vmem",
               mode: str = "structural", n_keys: int = 1024, repeats: int = 3,
-              tile: int = DEFAULT_TILE) -> Plan:
+              tile: int = DEFAULT_TILE, bank: int = 1) -> Plan:
     """Pick (layout, probe, depth, n_segments) for a (spec, op, regime).
 
     Checks the disk cache first; a miss runs the sweep (structural scores
     or best-of-k measurements) and persists the winner, so every process
     on a host converges to one tuned plan per configuration.
+
+    ``bank`` keys the plan to a B-member :class:`FilterBank` workload: the
+    structural probe choice scales the loop probe's per-trip cost by the
+    bank's deeper working set while the gather probe stays whole-tile
+    constant, and measure-mode timings are taken on the scalar kernels
+    only (bank kernels share their schedule, offset arithmetic aside).
     """
-    assert op in ("contains", "add")
-    key = _plan_key(spec, op, regime, mode, tile)
+    assert op in ("contains", "add") and bank >= 1
+    key = _plan_key(spec, op, regime, mode, tile, bank)
     cached = _load_disk().get(key)
     if cached is not None:
         try:
@@ -284,7 +304,7 @@ def tune_plan(spec: FilterSpec, op: str = "contains", regime: str = "vmem",
                             probe="gather", regime="vmem")
         probe = "gather" if t_gather <= t_loop else "loop"
     else:
-        steps = {p: probe_schedule_steps(spec, layout, op, tile, p)
+        steps = {p: probe_schedule_steps(spec, layout, op, tile, p, bank=bank)
                  for p in ("loop", "gather")}
         probe = min(steps, key=steps.get)
     if mode == "measure" and regime == "hbm" and op == "contains":

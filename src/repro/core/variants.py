@@ -374,7 +374,7 @@ def add_rows(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray
 
 
 def or_rows(spec: FilterSpec, filt: jnp.ndarray, blk: jnp.ndarray,
-            masks: jnp.ndarray) -> jnp.ndarray:
+            masks: jnp.ndarray, n_rows: Optional[int] = None) -> jnp.ndarray:
     """Conflict-free whole-batch OR of per-key ``masks`` into their blocks.
 
     Sort by block, segment-OR the masks of same-block keys, then ONE row
@@ -382,11 +382,15 @@ def or_rows(spec: FilterSpec, filt: jnp.ndarray, blk: jnp.ndarray,
     values, so ``set`` is deterministic. Rows with all-zero masks are OR
     no-ops, which is what makes this the overflow-residual backstop of the
     jit partition path (`kernels.ops`) as well as the `add_rows` engine.
+
+    ``n_rows`` overrides the row count (default ``spec.n_blocks``) so a
+    *bank* of B filters can be treated as one super-filter of B*n_blocks
+    rows — ``blk`` then carries member-offset block ids (see ``bank_*``).
     """
     order = jnp.argsort(blk)
     sb = blk[order]
     or_full = segment_totals(sb, masks[order], jnp.bitwise_or)    # (n, s)
-    filt2d = filt.reshape(spec.n_blocks, spec.s)
+    filt2d = filt.reshape(n_rows or spec.n_blocks, spec.s)
     rows = filt2d[sb]
     new = filt2d.at[sb].set(rows | or_full)                   # identical dups
     return new.reshape(-1)
@@ -406,9 +410,10 @@ def add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 
 def fill_fraction(filt: jnp.ndarray) -> jnp.ndarray:
-    """Fraction of set bits (useful health metric for dedup filters)."""
+    """Fraction of set bits (useful health metric for dedup filters).
+    Shape-agnostic: a ``(B, n_words)`` bank reports its aggregate fill."""
     pop = jax.lax.population_count(filt.view(jnp.int32) if filt.dtype != jnp.uint32 else filt)
-    return jnp.sum(pop.astype(jnp.float32)) / (filt.shape[0] * WORD_BITS)
+    return jnp.sum(pop.astype(jnp.float32)) / (filt.size * WORD_BITS)
 
 
 # ---------------------------------------------------------------------------
@@ -562,18 +567,25 @@ def _counting_layout(spec: FilterSpec, keys: jnp.ndarray):
 
 
 def _bit_counts(spec: FilterSpec, blk: jnp.ndarray, masks: jnp.ndarray,
-                valid: Optional[jnp.ndarray]) -> jnp.ndarray:
-    """(n_words, 32) uint32: number of (valid) keys targeting each logical
-    bit. Column order == flat nibble order, so it aligns with
-    :func:`_unpack_nibbles` without any permutation."""
+                valid: Optional[jnp.ndarray],
+                word_offset: Optional[jnp.ndarray] = None,
+                total_words: Optional[int] = None) -> jnp.ndarray:
+    """(total_words, 32) uint32: number of (valid) keys targeting each
+    logical bit. Column order == flat nibble order, so it aligns with
+    :func:`_unpack_nibbles` without any permutation.
+
+    ``word_offset``/``total_words`` extend the index space to a *bank* of
+    filters viewed as one flat word array (offset = member * n_words)."""
     word_idx = (blk[:, None] * jnp.uint32(spec.s)
-                + jnp.arange(spec.s, dtype=jnp.uint32)[None, :]
-                ).astype(jnp.int32).reshape(-1)
+                + jnp.arange(spec.s, dtype=jnp.uint32)[None, :])
+    if word_offset is not None:
+        word_idx = word_idx + word_offset.astype(jnp.uint32)[:, None]
+    word_idx = word_idx.astype(jnp.int32).reshape(-1)
     vals = masks
     if valid is not None:
         vals = vals * valid.astype(jnp.uint32)[:, None]
     vals = vals.reshape(-1)
-    counts = jnp.zeros((spec.n_words, WORD_BITS), jnp.uint32)
+    counts = jnp.zeros((total_words or spec.n_words, WORD_BITS), jnp.uint32)
     for b in range(WORD_BITS):
         plane = (vals >> jnp.uint32(b)) & jnp.uint32(1)
         counts = counts.at[word_idx, b].add(plane)
@@ -581,11 +593,13 @@ def _bit_counts(spec: FilterSpec, blk: jnp.ndarray, masks: jnp.ndarray,
 
 
 def _unpack_nibbles(spec: FilterSpec, counters: jnp.ndarray) -> jnp.ndarray:
-    """(4*n_words,) packed -> (n_words, 32) one uint32 per logical bit."""
+    """(4*T,) packed -> (T, 32) one uint32 per logical bit (T = any number
+    of logical words — ``spec.n_words`` for one filter, ``B * n_words`` for
+    a flattened bank)."""
     nib = jnp.stack([(counters >> jnp.uint32(COUNTER_BITS * b))
                      & jnp.uint32(COUNTER_MAX)
                      for b in range(NIBBLES_PER_WORD)], axis=-1)
-    return nib.reshape(spec.n_words, WORD_BITS)
+    return nib.reshape(-1, WORD_BITS)
 
 
 def _pack_nibbles(spec: FilterSpec, nib: jnp.ndarray) -> jnp.ndarray:
@@ -682,6 +696,90 @@ def counting_update_loop(spec: FilterSpec, counters: jnp.ndarray,
                                             (start,))
 
     return jax.lax.fori_loop(0, keys.shape[0], body, counters)
+
+
+# ---------------------------------------------------------------------------
+# Bank references: B same-spec filters as ONE super-filter
+# ---------------------------------------------------------------------------
+# The bank trick: a (B, n_words) stack of blocked filters is bit-identical
+# to a single filter of B * n_blocks blocks in which key i's block id is
+# offset by member[i] * n_blocks. Every single-filter bulk op therefore
+# lifts to the whole bank as ONE fused op over flat routed keys
+# ``(keys (N, 2), member (N,))`` — no per-member loop, no scatter into
+# per-member batches. These are the jnp reference semantics the Pallas
+# bank kernels (kernels/sbf.py, kernels/countingbf.py) validate against.
+
+
+def bank_block_ids(spec: FilterSpec, keys: jnp.ndarray, member: jnp.ndarray):
+    """(member-offset block ids (N,) int32, logical masks (N, s)) for flat
+    routed keys. ``member`` indexes the bank's leading axis."""
+    h1, h2 = _hashes(keys)
+    blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
+    masks = block_patterns(spec, h1)
+    return member.astype(jnp.int32) * jnp.int32(spec.n_blocks) + blk, masks
+
+
+def bank_contains_rows(spec: FilterSpec, words: jnp.ndarray,
+                       keys: jnp.ndarray, member: jnp.ndarray) -> jnp.ndarray:
+    """(N,) bool membership of flat routed keys against a (B, n_words)
+    bank — one row gather over the B*n_blocks super-filter."""
+    assert spec.variant != "cbf" and not spec.is_counting
+    B = words.shape[0]
+    blk, masks = bank_block_ids(spec, keys, member)
+    rows = words.reshape(B * spec.n_blocks, spec.s)[blk]
+    return jnp.all((rows & masks) == masks, axis=-1)
+
+
+def bank_add_rows(spec: FilterSpec, words: jnp.ndarray, keys: jnp.ndarray,
+                  member: jnp.ndarray,
+                  valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Bulk OR of flat routed keys into a (B, n_words) bank: one sorted
+    segmented-OR + one row scatter over the super-filter. ``valid`` zeroes
+    the masks of padding slots (an OR no-op), so routed batches pad safely."""
+    assert spec.variant != "cbf" and not spec.is_counting
+    B = words.shape[0]
+    blk, masks = bank_block_ids(spec, keys, member)
+    if valid is not None:
+        masks = masks * valid.astype(jnp.uint32)[:, None]
+    flat = or_rows(spec, words.reshape(-1), blk, masks,
+                   n_rows=B * spec.n_blocks)
+    return flat.reshape(B, spec.n_words)
+
+
+def bank_counting_update(spec: FilterSpec, counters: jnp.ndarray,
+                         keys: jnp.ndarray, member: jnp.ndarray,
+                         valid: Optional[jnp.ndarray], op: str) -> jnp.ndarray:
+    """Bulk saturating increment / guarded decrement of flat routed keys
+    into a (B, 4*n_words) counter bank (counting super-filter)."""
+    assert spec.is_counting and op in ("add", "remove")
+    B = counters.shape[0]
+    blk, masks = _counting_layout(spec, keys)
+    counts = _bit_counts(spec, blk, masks, valid,
+                         word_offset=member * jnp.int32(spec.n_words),
+                         total_words=B * spec.n_words)
+    nib = _unpack_nibbles(spec, counters.reshape(-1))   # (B*n_words, 32)
+    if op == "add":
+        new = jnp.minimum(nib + counts, jnp.uint32(COUNTER_MAX))
+    else:
+        nibi = nib.astype(jnp.int32)
+        dec = jnp.maximum(nibi - counts.astype(jnp.int32), 0).astype(jnp.uint32)
+        new = jnp.where(nib == COUNTER_MAX, jnp.uint32(COUNTER_MAX), dec)
+    return _pack_nibbles(spec, new).reshape(B, -1)
+
+
+def bank_counting_contains(spec: FilterSpec, counters: jnp.ndarray,
+                           keys: jnp.ndarray, member: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """(N,) bool occupancy membership against a (B, 4*n_words) counter bank."""
+    assert spec.is_counting
+    B = counters.shape[0]
+    h1, h2 = _hashes(keys)
+    blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
+    masks = block_patterns(spec, h1)
+    row_idx = member.astype(jnp.int32) * jnp.int32(spec.n_blocks) + blk
+    rows = counters.reshape(B * spec.n_blocks, spec.counter_row_words)[row_idx]
+    logical = collapse_counter_words(rows)                        # (N, s)
+    return jnp.all((logical & masks) == masks, axis=-1)
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,11 @@ Two deployment shapes:
   ``window_docs`` documents; older signatures are retired in O(1) by
   ring advances, so memory and FPR stay bounded on an *unbounded* stream
   (the insert-only filter would saturate and drop everything).
+* :class:`TenantDedupFilter` — **per-tenant dedup over a FilterBank**:
+  tenant t's documents dedup only against tenant t's history. One bank of
+  T VMEM-small member filters, and each batch is ONE routed
+  ``contains(keys, tenants)`` + ONE valid-masked routed ``add`` — no
+  per-tenant Python loop, no cross-tenant signature collisions.
 """
 from __future__ import annotations
 
@@ -228,3 +233,75 @@ class StreamingDedupFilter:
             self._since_advance -= self.advance_every
         for i in sorted(kept):
             yield docs[i]
+
+
+class TenantDedupFilter:
+    """Per-tenant bulk dedup over one :func:`repro.api.make_filter_bank`.
+
+    Every document carries a tenant id in ``[0, n_tenants)``; a duplicate
+    is dropped only if the *same tenant* saw the signature before. The
+    whole batch runs as one routed bank lookup plus one valid-masked
+    routed bank add (tenant routing composed into the kernel's member
+    offset on native engines — no scatter, no host loop). Pass
+    ``backend="sharded", mesh=...`` to shard the *bank axis* across a
+    mesh: each device owns ``n_tenants / n_dev`` whole member filters and
+    tenant routing rides the same all_to_all as the key routing.
+    """
+
+    def __init__(self, n_tenants: int, expected_docs_per_tenant: int = 1 << 14,
+                 bits_per_key: float = 16.0, variant: str = "sbf",
+                 block_bits: int = 256, backend: str = "auto",
+                 batch_docs: int = 256, **backend_kw):
+        self.filt = api.filter_for_n_items(
+            expected_docs_per_tenant, bits_per_key, variant=variant,
+            block_bits=block_bits, backend=backend, bank=n_tenants,
+            **backend_kw)
+        self.n_tenants = n_tenants
+        self.batch_docs = batch_docs
+        self.stats = DedupStats()
+
+    def dedupe_batch(self, docs: List[np.ndarray], tenants) -> List[int]:
+        """Returns the indices of ``docs`` to keep (first tenant-local
+        occurrence of each signature), updating the bank."""
+        n = len(docs)
+        sigs = doc_signatures_batch(docs)                        # (n, 2)
+        t = np.asarray(tenants, np.int64).reshape(n)
+        # pad to the batch capacity -> stable shapes, no per-flush retrace
+        # (valid-masked adds make zero-padding exact; padded lookups are
+        # sliced off by the routed contains itself)
+        pad = self.batch_docs - n
+        if pad > 0:
+            sigs_p = np.concatenate([sigs, np.zeros((pad, 2), np.uint32)])
+            t_p = np.concatenate([t, np.zeros(pad, np.int64)])
+        else:
+            sigs_p, t_p = sigs, t
+        present = np.asarray(self.filt.contains(sigs_p, tenants=t_p))[:n]
+        # in-batch dedup per (tenant, signature): first occurrence wins
+        rows = np.concatenate([t[:, None].astype(np.uint32), sigs], axis=1)
+        _, first_idx = np.unique(rows, axis=0, return_index=True)
+        first = np.zeros(n, bool)
+        first[first_idx] = True
+        keep = (~present) & first
+        valid = np.zeros(self.batch_docs if pad > 0 else n, np.uint8)
+        valid[:n] = keep
+        self.filt = self.filt.add(sigs_p, tenants=t_p, valid=valid)
+        self.stats.seen += n
+        self.stats.dropped += int(n - keep.sum())
+        return [i for i in range(n) if keep[i]]
+
+    def filter_stream(self, docs_with_tenants: Iterator) -> Iterator:
+        """Stream of ``(doc, tenant_id)`` pairs -> kept pairs, batched."""
+        buf: List = []
+        for pair in docs_with_tenants:
+            buf.append(pair)
+            if len(buf) >= self.batch_docs:
+                yield from self._flush(buf)
+                buf = []
+        if buf:
+            yield from self._flush(buf)
+
+    def _flush(self, pairs: List):
+        docs = [d for d, _ in pairs]
+        tenants = [t for _, t in pairs]
+        for i in self.dedupe_batch(docs, tenants):
+            yield pairs[i]

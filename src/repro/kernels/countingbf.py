@@ -251,6 +251,145 @@ def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Bank kernels — B VMEM-resident counter filters, ONE launch
+# ---------------------------------------------------------------------------
+# Counting analogue of sbf's bank kernels: the (B, 4*n_words) counter bank
+# is flattened and every counter-row start is offset by
+# member * storage_words, so a whole multi-tenant bank updates/queries in a
+# single pallas_call. Updates are valid-masked as always (counting is not
+# idempotent) and same-row increments collapse through the segmented
+# saturating nibble add before the one row scatter (gather probe).
+
+def _bank_cstarts(spec: FilterSpec, keys, member, valid=None):
+    cstarts, cmasks = _cfingerprints(spec, keys, valid)
+    return cstarts + member * jnp.int32(spec.storage_words), cmasks
+
+
+def _bank_update_vmem_gather_kernel(keys_ref, member_ref, valid_ref, filt_ref,
+                                    out_ref, *, spec: FilterSpec, tile: int,
+                                    bank: int, op: str):
+    cs = spec.counter_row_words
+    apply = _accumulate(op)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    cstarts, cmasks = _bank_cstarts(spec, keys_ref[...], member_ref[...],
+                                    valid_ref[...])
+    blk = jax.lax.div(cstarts, jnp.int32(cs))       # member-offset row ids
+    order = jnp.argsort(blk)
+    sb = blk[order]
+    totals = V.segment_totals(sb, cmasks[order], V.nib_sat_add_words)
+    f2d = out_ref[...].reshape(bank * spec.n_blocks, cs)
+    rows = jnp.take(f2d, sb, axis=0)
+    out_ref[...] = f2d.at[sb].set(apply(rows, totals)).reshape(-1)
+
+
+def _bank_update_vmem_kernel(keys_ref, member_ref, valid_ref, filt_ref,
+                             out_ref, *, spec: FilterSpec, layout: Layout,
+                             tile: int, op: str):
+    cs, theta, phi = spec.counter_row_words, layout.theta, layout.phi
+    n_chunks = cs // phi
+    update = _update(op)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    cstarts, cmasks = _bank_cstarts(spec, keys_ref[...], member_ref[...],
+                                    valid_ref[...])
+
+    def group_body(g, carry):
+        base = g * theta
+        for t in range(theta):                      # static unroll over Θ
+            i = base + t
+            st = _take_scalar(cstarts, i)
+            mrow = _mask_row(cmasks, i, cs)
+            for c in range(n_chunks):               # static unroll over Φ
+                idx = (pl.ds(st + c * phi, phi),)
+                w = pl.load(out_ref, idx)
+                inc = jax.lax.dynamic_slice(mrow, (c * phi,), (phi,))
+                pl.store(out_ref, idx, update(w, inc))
+        return carry
+
+    jax.lax.fori_loop(0, tile // theta, group_body, jnp.int32(0))
+
+
+def _bank_contains_vmem_gather_kernel(keys_ref, member_ref, filt_ref, out_ref,
+                                      *, spec: FilterSpec, tile: int,
+                                      bank: int):
+    cs = spec.counter_row_words
+    h1 = H.xxh32_u64x2(keys_ref[...], H.SEED_PATTERN)
+    h2 = H.xxh32_u64x2(keys_ref[...], H.SEED_BLOCK)
+    blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
+    blk = member_ref[...] * jnp.int32(spec.n_blocks) + blk
+    masks = V.block_patterns(spec, h1, batched=False)          # logical (n, s)
+    rows = jnp.take(filt_ref[...].reshape(bank * spec.n_blocks, cs), blk,
+                    axis=0)                                    # (tile, 4s)
+    occ = V.collapse_counter_words(rows)                       # (tile, s)
+    out_ref[...] = jnp.all((occ & masks) == masks, axis=-1)
+
+
+def bank_update_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
+                     member: jnp.ndarray, valid: jnp.ndarray, op: str,
+                     layout: Layout = None, tile: int = DEFAULT_TILE,
+                     interpret: bool = True, probe: str = "gather"
+                     ) -> jnp.ndarray:
+    """Flat routed counter update of a (B, storage_words) bank — one launch."""
+    n = keys.shape[0]
+    assert n % tile == 0 and member.shape == (n,) and valid.shape == (n,)
+    assert probe in PROBES, probe
+    B, flat = bank.shape[0], bank.reshape(-1)
+    layout = counting_layout(
+        spec, layout or default_counting_layout(spec, op), tile)
+    if probe == "gather":
+        kern = functools.partial(_bank_update_vmem_gather_kernel, spec=spec,
+                                 tile=tile, bank=B, op=op)
+    else:
+        kern = functools.partial(_bank_update_vmem_kernel, spec=spec,
+                                 layout=layout, tile=tile, op=op)
+    out = pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),               # member ids
+            pl.BlockSpec((tile,), lambda i: (i,)),               # valid mask
+            pl.BlockSpec((B * spec.storage_words,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((B * spec.storage_words,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((B * spec.storage_words,), jnp.uint32),
+        interpret=interpret,
+    )(keys, member.astype(jnp.int32), valid, flat)
+    return out.reshape(B, spec.storage_words)
+
+
+def bank_contains_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
+                       member: jnp.ndarray, tile: int = DEFAULT_TILE,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Flat routed occupancy membership against a counter bank — one launch
+    (whole-tile gather probe; the loop probe adds nothing for banks)."""
+    n = keys.shape[0]
+    assert n % tile == 0 and member.shape == (n,)
+    B, flat = bank.shape[0], bank.reshape(-1)
+    kern = functools.partial(_bank_contains_vmem_gather_kernel, spec=spec,
+                             tile=tile, bank=B)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((B * spec.storage_words,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(keys, member.astype(jnp.int32), flat)
+
+
+# ---------------------------------------------------------------------------
 # HBM-resident kernels — DMA-streamed counter rows
 # ---------------------------------------------------------------------------
 

@@ -76,14 +76,15 @@ def _clamp_tile(n: int, tile: int) -> int:
 
 
 def _resolve_probe(spec: FilterSpec, op: str, probe: str, regime: str,
-                   tile: int) -> str:
+                   tile: int, bank: int = 1) -> str:
     """``"auto"`` consults the structural tuner (lru + disk cached; all
     arguments static, so this also runs at trace time under jit)."""
     if probe != "auto":
         assert probe in PROBES, probe
         return probe
     from repro.core import tuning
-    return tuning.tune_plan(spec, op, regime=regime, tile=tile).probe
+    return tuning.tune_plan(spec, op, regime=regime, tile=tile,
+                            bank=bank).probe
 
 
 def _resolve_depth(spec: FilterSpec, op: str, depth: Optional[int],
@@ -167,6 +168,133 @@ def bloom_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
             tile=tile, interpret=interp,
             probe=_resolve_probe(spec, "add", probe, "vmem", tile))
     return sbf_k.add_hbm(spec, filt, padded, tile=tile, interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# Bank dispatch — B small filters, one fused device op (FilterBank)
+# ---------------------------------------------------------------------------
+# Native form: flat routed keys (keys (N, 2), member (N,)). A VMEM-resident
+# bank goes through the single-launch bank kernels; a bank too large for
+# VMEM falls back to the jnp super-filter reference (still ONE fused XLA
+# op, no per-member loop). Padding follows the usual contract: repeat-last
+# for reads, valid-masking for writes (mandatory for counting, and used for
+# bit adds too since routed batches already carry a mask).
+
+def bank_vmem_resident(spec: FilterSpec, bank: int) -> bool:
+    """Does a B-member bank fit the VMEM filter budget whole?"""
+    return bank * spec.storage_words * 4 <= VMEM_FILTER_BYTES
+
+
+def _pad_flat(keys: jnp.ndarray, member: jnp.ndarray, tile: int):
+    """Repeat-last padding of (keys, member) — reads only."""
+    n = keys.shape[0]
+    pad = (-n) % tile
+    if pad == 0:
+        return keys, member
+    return (jnp.concatenate([keys, jnp.broadcast_to(keys[-1:], (pad, 2))]),
+            jnp.concatenate([member, jnp.broadcast_to(member[-1:], (pad,))]))
+
+
+def _pad_flat_valid(keys: jnp.ndarray, member: jnp.ndarray,
+                    valid: Optional[jnp.ndarray], tile: int):
+    """Zero-pad (keys, member) with an explicit validity mask — writes."""
+    n = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), jnp.uint8)
+    valid = valid.astype(jnp.uint8)
+    pad = (-n) % tile
+    if pad == 0:
+        return keys, member, valid
+    return (jnp.concatenate([keys, jnp.zeros((pad, 2), keys.dtype)]),
+            jnp.concatenate([member, jnp.zeros((pad,), member.dtype)]),
+            jnp.concatenate([valid, jnp.zeros((pad,), jnp.uint8)]))
+
+
+def bloom_bank_contains(spec: FilterSpec, bank: jnp.ndarray,
+                        keys: jnp.ndarray, member: jnp.ndarray,
+                        layout: Optional[Layout] = None,
+                        tile: int = DEFAULT_TILE, probe: str = "auto"
+                        ) -> jnp.ndarray:
+    """(N,) bool membership of flat routed keys against a (B, n_words) bank."""
+    assert not spec.is_counting
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    B = bank.shape[0]
+    if spec.variant == "cbf" or not bank_vmem_resident(spec, B):
+        return V.bank_contains_rows(spec, bank, keys,
+                                    jnp.asarray(member, jnp.int32))
+    tile = _clamp_tile(n, tile)
+    pk, pm = _pad_flat(keys, jnp.asarray(member, jnp.int32), tile)
+    out = sbf_k.bank_contains_vmem(
+        spec, bank, pk, pm, layout or default_layout(spec, "contains"),
+        tile=tile, interpret=_interpret(),
+        probe=_resolve_probe(spec, "contains", probe, "vmem", tile, bank=B))
+    return out[:n]
+
+
+def bloom_bank_add(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
+                   member: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
+                   layout: Optional[Layout] = None, tile: int = DEFAULT_TILE,
+                   probe: str = "auto") -> jnp.ndarray:
+    """Valid-masked bulk OR of flat routed keys into a (B, n_words) bank."""
+    assert not spec.is_counting
+    n = keys.shape[0]
+    if n == 0:
+        return bank
+    B = bank.shape[0]
+    member = jnp.asarray(member, jnp.int32)
+    if spec.variant == "cbf" or not bank_vmem_resident(spec, B):
+        return V.bank_add_rows(spec, bank, keys, member, valid=valid)
+    tile = _clamp_tile(n, tile)
+    pk, pm, pv = _pad_flat_valid(keys, member, valid, tile)
+    return sbf_k.bank_add_vmem(
+        spec, bank, pk, pm, pv, layout or default_layout(spec, "add"),
+        tile=tile, interpret=_interpret(),
+        probe=_resolve_probe(spec, "add", probe, "vmem", tile, bank=B))
+
+
+def counting_bank_update(spec: FilterSpec, bank: jnp.ndarray,
+                         keys: jnp.ndarray, member: jnp.ndarray,
+                         op: str = "add",
+                         valid: Optional[jnp.ndarray] = None,
+                         layout: Optional[Layout] = None,
+                         tile: int = DEFAULT_TILE, probe: str = "auto"
+                         ) -> jnp.ndarray:
+    """Flat routed counter increment/decrement of a (B, 4*n_words) bank."""
+    assert spec.is_counting
+    n = keys.shape[0]
+    if n == 0:
+        return bank
+    B = bank.shape[0]
+    member = jnp.asarray(member, jnp.int32)
+    if not bank_vmem_resident(spec, B):
+        return V.bank_counting_update(spec, bank, keys, member, valid, op)
+    tile = _clamp_tile(n, tile)
+    pk, pm, pv = _pad_flat_valid(keys, member, valid, tile)
+    return cnt_k.bank_update_vmem(
+        spec, bank, pk, pm, pv, op, layout=layout, tile=tile,
+        interpret=_interpret(),
+        probe=_resolve_probe(spec, "add", probe, "vmem", tile, bank=B))
+
+
+def counting_bank_contains(spec: FilterSpec, bank: jnp.ndarray,
+                           keys: jnp.ndarray, member: jnp.ndarray,
+                           tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """(N,) bool occupancy membership against a counter bank."""
+    assert spec.is_counting
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    B = bank.shape[0]
+    member = jnp.asarray(member, jnp.int32)
+    if not bank_vmem_resident(spec, B):
+        return V.bank_counting_contains(spec, bank, keys, member)
+    tile = _clamp_tile(n, tile)
+    pk, pm = _pad_flat(keys, member, tile)
+    out = cnt_k.bank_contains_vmem(spec, bank, pk, pm, tile=tile,
+                                   interpret=_interpret())
+    return out[:n]
 
 
 # ---------------------------------------------------------------------------

@@ -424,6 +424,161 @@ def add_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Bank kernels — B VMEM-resident filters, ONE launch (FilterBank backend)
+# ---------------------------------------------------------------------------
+# A (B, n_words) bank is pinned in VMEM *whole* (flattened to B*n_words
+# words) and keys arrive flat with a per-key member index: the kernels are
+# the single-filter kernels with every block start offset by
+# member * n_words. B small filters therefore cost one pallas_call instead
+# of B — the launch-amortization win WarpSpeed-style batched GPU filters
+# get from fusing many small structures into one kernel. Adds are
+# valid-masked (zero mask = OR no-op) so routed/padded batches stay exact.
+
+def _bank_starts(spec: FilterSpec, keys, member):
+    starts, masks = _fingerprints(spec, keys)
+    return starts + member * jnp.int32(spec.n_words), masks
+
+
+def _bank_contains_vmem_kernel(keys_ref, member_ref, filt_ref, out_ref, *,
+                               spec: FilterSpec, layout: Layout, tile: int):
+    s, theta, phi = spec.s, layout.theta, layout.phi
+    n_chunks = s // phi
+    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...])
+
+    def group_body(g, acc):
+        base = g * theta
+        lanes = []
+        for t in range(theta):                      # static unroll over Θ
+            i = base + t
+            st = _take_scalar(starts, i)
+            mrow = _mask_row(masks, i, s)
+            words_t = [pl.load(filt_ref, (pl.ds(st + c * phi, phi),))
+                       for c in range(n_chunks)]    # static unroll over Φ
+            lanes.append((jnp.concatenate(words_t), mrow))
+        Wm = jnp.stack([w for w, _ in lanes])
+        Mm = jnp.stack([m for _, m in lanes])
+        ok = jnp.all((Wm & Mm) == Mm, axis=-1)
+        return jax.lax.dynamic_update_slice(acc, ok, (base,))
+
+    out_ref[...] = jax.lax.fori_loop(0, tile // theta, group_body,
+                                     jnp.zeros((tile,), jnp.bool_))
+
+
+def _bank_contains_vmem_gather_kernel(keys_ref, member_ref, filt_ref, out_ref,
+                                      *, spec: FilterSpec, tile: int):
+    s = spec.s
+    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...])
+    idx = starts[:, None] + jax.lax.broadcasted_iota(jnp.int32, (tile, s), 1)
+    words = jnp.take(filt_ref[...], idx, axis=0)         # (tile, s) gather
+    out_ref[...] = jnp.all((words & masks) == masks, axis=-1)
+
+
+def _bank_add_vmem_kernel(keys_ref, member_ref, valid_ref, filt_ref, out_ref,
+                          *, spec: FilterSpec, layout: Layout, tile: int):
+    s, theta, phi = spec.s, layout.theta, layout.phi
+    n_chunks = s // phi
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...])
+    masks = masks * valid_ref[...][:, None].astype(jnp.uint32)
+
+    def group_body(g, carry):
+        base = g * theta
+        for t in range(theta):                      # static unroll over Θ
+            i = base + t
+            st = _take_scalar(starts, i)
+            mrow = _mask_row(masks, i, s)
+            for c in range(n_chunks):               # static unroll over Φ
+                idx = (pl.ds(st + c * phi, phi),)
+                w = pl.load(out_ref, idx)
+                m = jax.lax.dynamic_slice(mrow, (c * phi,), (phi,))
+                pl.store(out_ref, idx, w | m)
+        return carry
+
+    jax.lax.fori_loop(0, tile // theta, group_body, jnp.int32(0))
+
+
+def _bank_add_vmem_gather_kernel(keys_ref, member_ref, valid_ref, filt_ref,
+                                 out_ref, *, spec: FilterSpec, tile: int,
+                                 bank: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...])
+    masks = masks * valid_ref[...][:, None].astype(jnp.uint32)
+    blk = jax.lax.div(starts, jnp.int32(spec.s))    # member-offset block ids
+    out_ref[...] = V.or_rows(spec, out_ref[...], blk, masks,
+                             n_rows=bank * spec.n_blocks)
+
+
+def bank_contains_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
+                       member: jnp.ndarray, layout: Layout,
+                       tile: int = DEFAULT_TILE, interpret: bool = True,
+                       probe: str = "gather") -> jnp.ndarray:
+    """Flat routed membership against a (B, n_words) bank — one launch."""
+    n = keys.shape[0]
+    assert n % tile == 0 and member.shape == (n,)
+    assert probe in PROBES, probe
+    B, flat = bank.shape[0], bank.reshape(-1)
+    layout = layout.validate(spec, tile)
+    if probe == "gather":
+        kern = functools.partial(_bank_contains_vmem_gather_kernel, spec=spec,
+                                 tile=tile)
+    else:
+        kern = functools.partial(_bank_contains_vmem_kernel, spec=spec,
+                                 layout=layout, tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),               # member ids
+            pl.BlockSpec((B * spec.n_words,), lambda i: (0,)),   # whole bank
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(keys, member.astype(jnp.int32), flat)
+
+
+def bank_add_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
+                  member: jnp.ndarray, valid: jnp.ndarray, layout: Layout,
+                  tile: int = DEFAULT_TILE, interpret: bool = True,
+                  probe: str = "gather") -> jnp.ndarray:
+    """Flat routed valid-masked insert into a (B, n_words) bank — one
+    launch, sequential-grid RMW over the whole VMEM-resident bank."""
+    n = keys.shape[0]
+    assert n % tile == 0 and member.shape == (n,) and valid.shape == (n,)
+    assert probe in PROBES, probe
+    B, flat = bank.shape[0], bank.reshape(-1)
+    layout = layout.validate(spec, tile)
+    if probe == "gather":
+        kern = functools.partial(_bank_add_vmem_gather_kernel, spec=spec,
+                                 tile=tile, bank=B)
+    else:
+        kern = functools.partial(_bank_add_vmem_kernel, spec=spec,
+                                 layout=layout, tile=tile)
+    out = pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),               # valid mask
+            pl.BlockSpec((B * spec.n_words,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((B * spec.n_words,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((B * spec.n_words,), jnp.uint32),
+        interpret=interpret,
+    )(keys, member.astype(jnp.int32), valid, flat)
+    return out.reshape(B, spec.n_words)
+
+
+# ---------------------------------------------------------------------------
 # Partitioned bulk add — the beyond-paper TPU-native path
 # ---------------------------------------------------------------------------
 

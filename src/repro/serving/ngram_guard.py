@@ -1,31 +1,35 @@
 """Decode-time n-gram repetition guard — the paper's filter in the serve loop.
 
 Per decode step, the guard (1) records the n-gram ending at the newly emitted
-token into a Bloom filter keyed by (sequence id, n-gram hash), and (2) before
-the next sampling step, bulk-tests the top-K candidate continuations: any
-candidate that would complete an already-seen n-gram gets a logit penalty.
+token into a Bloom filter, and (2) before the next sampling step, bulk-tests
+the top-K candidate continuations: any candidate that would complete an
+already-seen n-gram gets a logit penalty.
 
-This is a bulk ``contains`` of B*K keys per step — the exact workload shape
-(bulk lookups against a small cache-resident filter) where the paper's
-optimized SBF shines. The guard holds a :class:`repro.api.Filter`, so the
-engine is a registry choice (``"auto"`` picks the Pallas VMEM kernels on
-TPU) and the guard state is an ordinary pytree leaf for checkpointing.
+**Bank layout.** The guard holds a per-sequence
+:func:`repro.api.make_filter_bank`: sequence b owns member b of a B-member
+bank (no more (seq_id, ngram) key mixing — the bank axis IS the sequence
+id, so sequences can never alias each other's n-grams even through hash
+collisions). ``observe`` is ONE jitted bank add of (B, 1) valid-masked
+keys; ``penalize`` is ONE jitted bank contains of (B, K) candidate keys —
+B·K lookups against B VMEM-small filters fused into a single device launch
+on the native bank engines, with zero host-side per-row Python loops (the
+old host ``_mix_rows`` numpy path is gone; hashing is
+``core.hashing.mix_rows`` on device).
 
 False positives penalize a novel n-gram (harmless, sampling just shifts);
 false negatives never happen, so true loops are always caught.
 
 **Time-decayed mode** (``decay_every=D``): the guard switches to the
-counting engine (variant='countingbf') and applies one uniform
-``decay()`` every D observed decode steps. N-grams seen once fade after
-~D steps; only n-grams the model keeps re-emitting stay penalized — so a
-long-running serve loop never saturates the filter, and a phrase that was
-legitimate 10k tokens ago is not penalized forever. The insert-only mode
-caps every long session at "grow until saturated"; decay makes guard
-state sustainable under production traffic.
+counting engine (variant='countingbf') and applies one uniform ``decay()``
+to the whole bank every D observed decode steps. N-grams seen once fade
+after ~D steps; only n-grams the model keeps re-emitting stay penalized —
+so a long-running serve loop never saturates the filter, and a phrase that
+was legitimate 10k tokens ago is not penalized forever.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import numpy as np
@@ -36,20 +40,6 @@ from repro import api
 from repro.core import hashing as H
 
 
-def _mix_rows(mat: np.ndarray) -> np.ndarray:
-    """Hash each row of uint32s to a u64x2 key (vectorized)."""
-    h1 = np.full(mat.shape[0], 0x811C9DC5, np.uint32)
-    h2 = np.full(mat.shape[0], 0x9E3779B9, np.uint32)
-    with np.errstate(over="ignore"):
-        for j in range(mat.shape[1]):
-            c = mat[:, j].astype(np.uint32)
-            h1 = (h1 ^ c) * np.uint32(16777619)
-            h2 = (h2 + c) * np.uint32(2246822519)
-            h2 ^= h2 >> np.uint32(13)
-        h1 ^= h1 >> np.uint32(16)
-    return np.stack([h1, h2], axis=-1)
-
-
 @dataclasses.dataclass
 class GuardStats:
     observed: int = 0
@@ -57,10 +47,49 @@ class GuardStats:
     decays: int = 0
 
 
-class NGramGuard:
-    """One guard serves a whole decode batch (keys are (seq_id, ngram)).
+@jax.jit
+def _observe_step(filt, hist, tokens, observed):
+    """One decode step: hash each sequence's completed n-gram, bank-add it
+    into that sequence's member (valid-masked while history warms up), and
+    roll the history. Single fused device op; the observed counter stays a
+    device scalar so the serve loop never blocks on this step."""
+    full = jnp.concatenate([hist, tokens[:, None]], axis=1).astype(jnp.uint32)
+    keys = H.mix_rows(full)                          # (B, 2)
+    ready = (hist >= 0).all(axis=1)                  # (B,)
+    filt = filt.add(keys[:, None, :], valid=ready[:, None])
+    hist = jnp.concatenate([hist[:, 1:], tokens[:, None]], axis=1)
+    return filt, hist, observed + ready.sum(dtype=jnp.int32)
 
-    ``decay_every=D`` enables the time-decayed mode: a counting filter plus
+
+@partial(jax.jit, static_argnums=(4,))
+def _penalize_step(filt, hist, logits, penalized, top_k, penalty):
+    """Top-K candidates per sequence -> (B, K) bank contains -> penalty
+    scatter. One fused lookup launch for the whole batch."""
+    B = logits.shape[0]
+    _, top_idx = jax.lax.top_k(logits, top_k)                    # (B, K)
+    histb = jnp.broadcast_to(hist[:, None, :], (B, top_k, hist.shape[1]))
+    rows = jnp.concatenate(
+        [histb, top_idx[:, :, None].astype(jnp.int32)], axis=-1)
+    keys = H.mix_rows(rows.astype(jnp.uint32))                   # (B, K, 2)
+    hits = filt.contains(keys)                                   # (B, K)
+    ready = (hist >= 0).all(axis=1)
+    hits = hits & ready[:, None]
+    pen = jnp.where(hits, penalty, 0.0).astype(logits.dtype)
+    flat = jnp.zeros_like(logits).at[
+        jnp.arange(B)[:, None], top_idx].add(pen)
+    return logits + flat, penalized + hits.sum(dtype=jnp.int32)
+
+
+class NGramGuard:
+    """One guard serves a whole decode batch: a B-member filter bank, one
+    member per sequence.
+
+    ``m_bits`` is the TOTAL guard budget; each member gets the largest
+    power-of-two slice of it (floor 2^10). Same memory as the old shared
+    filter, better isolation: a loop in sequence 3 never shifts sampling
+    in sequence 7.
+
+    ``decay_every=D`` enables the time-decayed mode: a counting bank plus
     one uniform decay per D observed steps (see module docstring).
     """
 
@@ -72,51 +101,50 @@ class NGramGuard:
         self.top_k = top_k
         self.penalty = penalty
         self.decay_every = decay_every
+        m_member = 1 << max(10, int(np.log2(max(m_bits // batch, 1))))
         variant = "countingbf" if decay_every else "sbf"
-        self.filt = api.make_filter(variant, m_bits=m_bits, k=8,
-                                    block_bits=256, backend=backend)
-        # rolling buffer of the last n-1 tokens per sequence
-        self.hist = np.zeros((batch, n - 1), np.int64) - 1
-        self.stats = GuardStats()
+        self.filt = api.make_filter_bank(batch, variant, m_bits=m_member,
+                                         k=8, block_bits=256, backend=backend)
+        # rolling buffer of the last n-1 tokens per sequence (device array)
+        self.hist = jnp.full((batch, n - 1), -1, jnp.int32)
+        # stats accumulate as DEVICE scalars inside the jitted steps — the
+        # decode loop never blocks on them; reading .stats syncs lazily
+        self._observed = jnp.zeros((), jnp.int32)
+        self._penalized = jnp.zeros((), jnp.int32)
+        self._decays = 0
+        self._obs_steps = 0
         self._steps_since_decay = 0
 
-    def observe(self, tokens: np.ndarray):
-        """Record the n-gram completed by `tokens` (B,) and roll history."""
-        tokens = np.asarray(tokens).reshape(self.batch)
-        full = np.concatenate(
-            [np.arange(self.batch)[:, None], self.hist, tokens[:, None]],
-            axis=1)  # (B, 1 + n) : seq_id + n-gram
-        ready = (self.hist >= 0).all(axis=1)
-        if ready.any():
-            keys = _mix_rows(full[ready].astype(np.uint32))
-            self.filt = self.filt.add(keys)
-            self.stats.observed += int(ready.sum())
-            if self.decay_every:
-                self._steps_since_decay += 1
-                if self._steps_since_decay >= self.decay_every:
-                    self.filt = self.filt.decay()
-                    self.stats.decays += 1
-                    self._steps_since_decay = 0
-        self.hist = np.concatenate([self.hist[:, 1:], tokens[:, None]], axis=1)
+    @property
+    def stats(self) -> GuardStats:
+        """Lazy host view of the device-side counters (this is the only
+        place the guard synchronizes with the device)."""
+        return GuardStats(observed=int(self._observed),
+                          penalized=int(self._penalized),
+                          decays=self._decays)
+
+    def observe(self, tokens):
+        """Record the n-gram completed by ``tokens`` (B,) and roll history."""
+        tokens = jnp.asarray(np.asarray(tokens).reshape(self.batch),
+                             jnp.int32)
+        # history is full (ready.any()) from observe number n-1 on — a
+        # host-derivable fact, so the decay cadence needs no device sync
+        ready_any = self._obs_steps >= self.n - 1
+        self._obs_steps += 1
+        self.filt, self.hist, self._observed = _observe_step(
+            self.filt, self.hist, tokens, self._observed)
+        if self.decay_every and ready_any:
+            self._steps_since_decay += 1
+            if self._steps_since_decay >= self.decay_every:
+                self.filt = self.filt.decay()
+                self._decays += 1
+                self._steps_since_decay = 0
 
     def penalize(self, logits) -> jnp.ndarray:
-        """logits (B, V): penalize top-K candidates completing a seen n-gram."""
+        """logits (B, V): penalize top-K candidates completing a seen
+        n-gram (each sequence consults only its own bank member)."""
         logits = jnp.asarray(logits)
-        ready = (self.hist >= 0).all(axis=1)
-        if not ready.any():
-            return logits
-        top_vals, top_idx = jax.lax.top_k(logits, self.top_k)     # (B, K)
-        cand = np.asarray(top_idx)
-        B, K = cand.shape
-        rows = np.concatenate(
-            [np.repeat(np.arange(B), K)[:, None],
-             np.repeat(self.hist, K, axis=0),
-             cand.reshape(-1, 1)], axis=1)                        # (B*K, 1+n)
-        keys = _mix_rows(rows.astype(np.uint32))
-        hits = np.asarray(self.filt.contains(keys)).reshape(B, K)
-        hits = hits & ready[:, None]
-        self.stats.penalized += int(hits.sum())
-        penalty = jnp.where(jnp.asarray(hits), self.penalty, 0.0)
-        flat = jnp.zeros_like(logits).at[
-            jnp.arange(B)[:, None], top_idx].add(penalty)
-        return logits + flat
+        out, self._penalized = _penalize_step(self.filt, self.hist, logits,
+                                              self._penalized, self.top_k,
+                                              self.penalty)
+        return out

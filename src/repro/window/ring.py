@@ -50,8 +50,12 @@ def ring_init(spec: FilterSpec, generations: int) -> jnp.ndarray:
 
 
 def ring_add(spec: FilterSpec, rings: jnp.ndarray, keys: jnp.ndarray,
-             head: int) -> jnp.ndarray:
-    """Insert into the head generation (single-filter bulk add)."""
+             head) -> jnp.ndarray:
+    """Insert into the head generation (single-filter bulk add).
+
+    ``head`` may be a Python int or a traced/device int32 scalar — the
+    dynamic index keeps add() retrace-free when the head is carried as
+    traced state (see :class:`WindowedFilter` / ``Filter.state``)."""
     if _on_tpu():
         from repro.kernels import ops
         gen = ops.bloom_add(spec, rings[head], keys)
@@ -70,13 +74,29 @@ def ring_contains_dispatch(spec: FilterSpec, rings: jnp.ndarray,
     return ring_contains_ref(spec, rings, keys)
 
 
-def ring_advance(rings: jnp.ndarray, head: int) -> tuple:
+def ring_advance(rings: jnp.ndarray, head) -> tuple:
     """Retire the oldest generation: it becomes the new (empty) head.
 
     O(1) in inserted keys — one sub-filter zeroing, no rehash, no copy of
-    the surviving generations."""
+    the surviving generations. ``head`` may be traced (device int32): the
+    rotation is a dynamic row update, so advancing never changes pytree
+    structure or forces a retrace under ``jit``/``scan``."""
     new_head = (head + 1) % rings.shape[0]
     return rings.at[new_head].set(jnp.uint32(0)), new_head
+
+
+def ring_merge_dense(rings: jnp.ndarray, head, dense: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """OR a dense key-set union into the HEAD generation.
+
+    The well-defined windowed merge: two rings' generation arrays cannot
+    be ORed slot-by-slot (their heads generally differ, so slot g holds a
+    *different age class* in each ring — a naive OR misaligns ages and
+    later advances retire keys early, a false negative inside the
+    window). Collapsing the other ring to its dense union and landing it
+    in the head instead is conservative: merged-in keys join the newest
+    age class and live at least G-1 more advances."""
+    return rings.at[head].set(rings[head] | dense)
 
 
 def ring_dense(rings: jnp.ndarray) -> jnp.ndarray:
@@ -96,24 +116,30 @@ def ring_dense(rings: jnp.ndarray) -> jnp.ndarray:
 class WindowedFilter:
     """Immutable sliding-window Bloom filter over a generation ring.
 
-    The ring array is the only pytree leaf; spec and head are static aux
-    data (``advance()`` therefore happens at the host level — it changes
-    the pytree structure key, exactly like rotating to a new filter).
+    The ring array AND the head index are pytree leaves — the head is a
+    traced device scalar, so ``advance()`` only rotates data: the pytree
+    *structure* is invariant and jitted/scanned code never retraces on a
+    window slide (it used to, when the head was static aux data).
     """
 
     spec: FilterSpec
     rings: jnp.ndarray              # (G, n_words) uint32
-    head: int = 0
+    head: jnp.ndarray = None        # () int32 — insert generation (traced)
+
+    def __post_init__(self):
+        if self.head is None:
+            object.__setattr__(self, "head", jnp.zeros((), jnp.int32))
 
     # -- pytree protocol -----------------------------------------------------
     def tree_flatten_with_keys(self):
-        return (((jax.tree_util.GetAttrKey("rings"), self.rings),),
-                (self.spec, self.head))
+        return (((jax.tree_util.GetAttrKey("rings"), self.rings),
+                 (jax.tree_util.GetAttrKey("head"), self.head)),
+                (self.spec,))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        spec, head = aux
-        return cls(spec=spec, rings=leaves[0], head=head)
+        (spec,) = aux
+        return cls(spec=spec, rings=leaves[0], head=leaves[1])
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -204,5 +230,9 @@ class WindowedFilter:
         return self.generations * self.spec.m_bits // 8
 
     def __repr__(self):
+        try:
+            head = int(self.head)
+        except Exception:               # traced head inside jit
+            head = "<traced>"
         return (f"WindowedFilter({self.spec}, G={self.generations}, "
-                f"head={self.head})")
+                f"head={head})")
