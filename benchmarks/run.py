@@ -14,10 +14,12 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
                      decay) — beyond-paper
     bank          -> FilterBank: banked vs looped multi-tenant throughput,
                      routed tenant streams, guard/dedup consumers
+    amq_compare   -> iso-error AMQ baseline: sbf vs counting vs cuckoo
+                     throughput + bits/key at matched measured FPR
 
-``--smoke`` runs a tiny-size subset (window + dedup + api_backends + bank)
-as a CI health check for the harness itself; the numbers are meaningless,
-the point is that every bench entry point still executes.
+``--smoke`` runs a tiny-size subset (window + dedup + api_backends + bank
++ amq_compare) as a CI health check for the harness itself; the numbers
+are meaningless, the point is that every bench entry point still executes.
 
 ``--compare BASELINE.json`` is the perf regression gate: every record whose
 name also appears in the baseline (and whose baseline time is above the
@@ -126,12 +128,15 @@ def main(argv=None) -> None:
     csv = Csv()
     csv.header()
 
-    from benchmarks import (api_backends, bank, dedup_pipeline, fig4_frontier,
-                            fig5_8_archs, fig9_breakdown, gups, layout_grid,
-                            table1_dram, table2_cache, window)
+    from benchmarks import (amq_compare, api_backends, bank, dedup_pipeline,
+                            fig4_frontier, fig5_8_archs, fig9_breakdown,
+                            gups, layout_grid, table1_dram, table2_cache,
+                            window)
 
     if args.smoke:
-        only = set((args.only or "window,dedup,api_backends,bank").split(","))
+        only = set((args.only
+                    or "window,dedup,api_backends,bank,amq_compare"
+                    ).split(","))
         if "window" in only:
             window.run(csv, smoke=True)
         if "dedup" in only:
@@ -140,6 +145,8 @@ def main(argv=None) -> None:
             api_backends.run(csv, m_bits=1 << 14, n_keys=1 << 8)
         if "bank" in only:
             bank.run(csv, bank=8, m_bits=1 << 13, n_keys=1 << 7, smoke=True)
+        if "amq_compare" in only:
+            amq_compare.run(csv, smoke=True)
         if args.json:
             csv.write_json(args.json)
         if args.compare:
@@ -158,6 +165,7 @@ def main(argv=None) -> None:
         "api_backends": lambda: api_backends.run(csv),
         "window": lambda: window.run(csv),
         "bank": lambda: bank.run(csv),
+        "amq_compare": lambda: amq_compare.run(csv),
     }
     only = set(args.only.split(",")) if args.only else None
 
@@ -169,7 +177,7 @@ def main(argv=None) -> None:
     if only is None or "table2_cache" in only:
         table2_cache.run(csv)
     for name in ("fig4_frontier", "fig5_8_archs", "fig9_breakdown", "dedup",
-                 "api_backends", "window", "bank"):
+                 "api_backends", "window", "bank", "amq_compare"):
         if only is None or name in only:
             benches[name]()
     if (only is None and not args.skip_layout) or (only and "layout_grid" in only):

@@ -52,6 +52,46 @@ def streaming_with_eviction():
           f"per-gen fill {np.round(sd.window.generation_fill(), 3)}")
 
 
+def streaming_with_fingerprint_eviction():
+    """Same sliding-window dedup, eviction engine swapped: a cuckoo
+    fingerprint filter deletes each retired signature individually
+    (Filter.remove) instead of rotating age-class generations — one table
+    at ~8.4 bits per live key instead of G ring generations, and the
+    insert-failure counter doubles as a capacity alarm."""
+    sd = D.StreamingDedupFilter(window_docs=2048, generations=4,
+                                batch_docs=128, engine="cuckoo",
+                                bits_per_key=8)
+    cfg = DP.CorpusConfig(n_docs=3000, dup_fraction=0.2, seed=2)
+    stream = itertools.chain(*(DP.synthetic_corpus(cfg) for _ in range(3)))
+    kept = sum(1 for _ in sd.filter_stream(stream))
+    print(f"[cuckoo-evict] {sd.stats.seen} docs -> kept {kept} "
+          f"(dropped {sd.stats.dropped}, {sd.stats.advances} evictions) "
+          f"load factor {sd.filt.load_factor():.3f} "
+          f"insert failures {int(sd.filt.insert_failures)}")
+
+
+def per_tenant_cuckoo_bank():
+    """Per-tenant dedup on a bank of fingerprint filters: tenant-routed
+    contains/add plus per-tenant deletion (GDPR-style forget) that the
+    bit-filter bank cannot do."""
+    td = D.TenantDedupFilter(n_tenants=8, expected_docs_per_tenant=1 << 10,
+                             batch_docs=64, engine="cuckoo")
+    cfg = DP.CorpusConfig(n_docs=1200, dup_fraction=0.3, seed=4)
+    pairs = [(doc, i % 8) for i, doc in enumerate(DP.synthetic_corpus(cfg))]
+    kept = sum(1 for _ in td.filter_stream(iter(pairs)))
+    # forget tenant 3 entirely: remove its history from the bank.
+    # Deduplicate first — only the first occurrence of each signature was
+    # inserted, and cuckoo removes must only target inserted keys
+    t3 = [D.doc_signature(d) for (d, t) in pairs if t == 3]
+    sigs3 = np.unique(np.stack(t3), axis=0)
+    who3 = np.full(len(sigs3), 3)
+    td.filt = td.filt.remove(sigs3, tenants=who3)
+    again = np.asarray(td.filt.contains(sigs3, tenants=who3))
+    print(f"[tenant-cuckoo] kept {kept}/{td.stats.seen} "
+          f"(drop_rate {td.stats.drop_rate:.1%}); after forgetting "
+          f"tenant 3: {again.mean():.1%} of its sigs still visible")
+
+
 def multi_host_replicated():
     n_dev = len(jax.devices())
     mesh = Mesh(np.array(jax.devices()).reshape(n_dev), ("data",))
@@ -79,4 +119,6 @@ def multi_host_replicated():
 if __name__ == "__main__":
     single_host()
     streaming_with_eviction()
+    streaming_with_fingerprint_eviction()
+    per_tenant_cuckoo_bank()
     multi_host_replicated()

@@ -51,21 +51,28 @@ def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
                 layout=None, tile: Optional[int] = None,
                 probe: str = "auto", depth: Optional[int] = None, mesh=None,
                 axis: str = "data", capacity: Optional[int] = None,
-                generations: Optional[int] = None) -> Filter:
+                generations: Optional[int] = None,
+                slot_bits: int = 8, slots_per_bucket: int = 4,
+                impl: Optional[str] = None) -> Filter:
     """Build an empty :class:`Filter` for an explicit geometry.
 
     ``backend="auto"`` runs the registry's ranked query (pass ``mesh=`` to
     bring the distributed engines into the candidate set). Forgetting
     filters: ``variant="countingbf"`` selects the counting engine
     (``remove``/``decay``); ``generations=G`` selects the windowed engine
-    (``advance``). Kernel knobs (``layout``, ``tile``, ``probe``,
-    ``depth``) default to the autotuner's plan (``core.tuning.tune_plan``);
-    pass explicit values to pin them."""
+    (``advance``); ``variant="cuckoo"`` selects the fingerprint engine
+    (``remove`` at ~1x storage, ``slot_bits``/``slots_per_bucket``
+    geometry, ``impl`` pins its jnp vs Pallas path). Kernel knobs
+    (``layout``, ``tile``, ``probe``, ``depth``) default to the
+    autotuner's plan (``core.tuning.tune_plan``); pass explicit values to
+    pin them."""
     spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
-                      block_bits=block_bits, z=z)
+                      block_bits=block_bits, z=z, slot_bits=slot_bits,
+                      slots_per_bucket=slots_per_bucket)
     options = BackendOptions(layout=layout, tile=tile, probe=probe,
                              depth=depth, mesh=mesh, axis=axis,
-                             capacity=capacity, generations=generations)
+                             capacity=capacity, generations=generations,
+                             impl=impl)
     eng = registry.select(spec, backend, options.ctx())
     return Filter(spec=spec, words=eng.init(spec, options), backend=eng.name,
                   options=options, state=eng.init_state(spec, options))
@@ -77,7 +84,9 @@ def make_filter_bank(bank, variant: str = "sbf", m_bits: int = 1 << 14,
                      tile: Optional[int] = None, probe: str = "auto",
                      depth: Optional[int] = None, mesh=None,
                      axis: str = "data", capacity: Optional[int] = None,
-                     generations: Optional[int] = None) -> Filter:
+                     generations: Optional[int] = None,
+                     slot_bits: int = 8, slots_per_bucket: int = 4,
+                     impl: Optional[str] = None) -> Filter:
     """Build an empty :class:`Filter` **bank**: ``bank`` independent
     same-spec member filters behind one value, with the bank dims leading
     the words leaf.
@@ -97,10 +106,12 @@ def make_filter_bank(bank, variant: str = "sbf", m_bits: int = 1 << 14,
         raise ValueError(f"bank shape must be non-empty and positive; "
                          f"got {bank_shape}")
     spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
-                      block_bits=block_bits, z=z)
+                      block_bits=block_bits, z=z, slot_bits=slot_bits,
+                      slots_per_bucket=slots_per_bucket)
     options = BackendOptions(layout=layout, tile=tile, probe=probe,
                              depth=depth, mesh=mesh, axis=axis,
-                             capacity=capacity, generations=generations)
+                             capacity=capacity, generations=generations,
+                             impl=impl)
     total = 1
     for d in bank_shape:
         total *= d
@@ -131,27 +142,69 @@ def route(keys, tenants, n_tenants: int, capacity: Optional[int] = None):
 
 def filter_for_n_items(n: int, bits_per_key: float = 16.0,
                        variant: str = "sbf", block_bits: int = 256,
-                       k: Optional[int] = None,
-                       bank=None, **kw) -> Filter:
+                       k: Optional[int] = None, bank=None,
+                       target_fpr: Optional[float] = None, **kw) -> Filter:
     """Size a filter for ~n items at c = bits_per_key (m rounded to pow2),
     choosing k near the space-optimal k* = c ln 2 (Eq. 2), snapped to the
     variant's structural constraints (k ≡ 0 mod s for SBF, mod z for CSBF).
-    ``bank=B`` sizes each of B members for ~n items and returns the bank."""
+    ``bank=B`` sizes each of B members for ~n items and returns the bank.
+
+    ``variant="cuckoo"`` sizes buckets for ~n keys at load factor <=
+    ``fingerprint.CUCKOO_MAX_LOAD`` (0.95) instead: the slot width comes
+    from ``target_fpr`` when given (smallest u8/u16 meeting it), else from
+    ``bits_per_key`` (u8 fits under ~12 bits/key, u16 above); pass
+    ``slot_bits=`` to pin it."""
+    if variant == "cuckoo":
+        from repro.core import fingerprint as F
+        sb = kw.pop("slot_bits", None)
+        spb = kw.pop("slots_per_bucket", 4)
+        if sb is None and target_fpr is None:
+            sb = 8 if bits_per_key <= 12.0 else 16
+        spec = F.spec_for_n(n, target_fpr=target_fpr, slot_bits=sb,
+                            slots_per_bucket=spb)
+        common = dict(m_bits=spec.m_bits, k=spec.k, slot_bits=spec.slot_bits,
+                      slots_per_bucket=spec.slots_per_bucket, **kw)
+        if bank is not None:
+            return make_filter_bank(bank, variant="cuckoo", **common)
+        return make_filter(variant="cuckoo", **common)
+    if target_fpr is not None:
+        # iso-error sizing for the Bloom families: the exact inverse the
+        # AMQ comparison harness needs — smallest pow2 m whose
+        # variant-aware analytic FPR meets the target at load n
+        bits_per_key = _V.space_optimal_c(
+            variant, block_bits, kw.get("z", 1), n, target_fpr)
     m = 1 << max(int(np.ceil(np.log2(max(n, 1) * bits_per_key))), 10)
     if k is None:
-        k = max(int(round(_V.optimal_k(m / max(n, 1)))), 1)
-        if variant == "csbf":
-            z = kw.get("z", 1)
-            k = max(z, (k // z) * z)
-        if variant in ("sbf", "countingbf"):
-            s = block_bits // _V.WORD_BITS
-            k = max(s, (k // s) * s) if k >= s else k
-        k = min(k, 32)
+        k = _V.snap_k(variant, m / max(n, 1), block_bits, kw.get("z", 1))
     if bank is not None:
         return make_filter_bank(bank, variant=variant, m_bits=m, k=k,
                                 block_bits=block_bits, **kw)
     return make_filter(variant=variant, m_bits=m, k=k, block_bits=block_bits,
                        **kw)
+
+
+def filter_for_workload(n: int, target_fpr: float = 1e-3,
+                        needs_remove: bool = False,
+                        needs_decay: bool = False,
+                        needs_count: bool = False,
+                        bank=None, **kw) -> Filter:
+    """Capability- and memory-aware ``"auto"``: pick the cheapest engine
+    (by ``bits_per_key`` at ``target_fpr``, see ``registry.describe()``)
+    whose flags cover the requested ops, then size it for ~n keys.
+
+    The interesting crossover this encodes: ``needs_remove=True`` alone
+    selects the cuckoo fingerprint engine (~f/0.95 bits/key) over the
+    counting engine (4x the bit filter); adding ``needs_decay`` or
+    ``needs_count`` — capabilities only counters provide — flips it back."""
+    engine = registry.cheapest_engine(needs_remove=needs_remove,
+                                      needs_decay=needs_decay,
+                                      needs_count=needs_count,
+                                      target_fpr=target_fpr)
+    variant = {"counting": "countingbf", "cuckoo": "cuckoo"}.get(engine,
+                                                                 "sbf")
+    kw.setdefault("backend", "auto")   # the variant pins the engine family
+    return filter_for_n_items(n, variant=variant, target_fpr=target_fpr,
+                              bank=bank, **kw)
 
 
 def union(*filters: Filter) -> Filter:
@@ -180,4 +233,5 @@ def get_backend(name: str) -> registry.Backend:
 
 __all__ = ["Filter", "FilterSpec", "BackendOptions", "as_keys", "registry",
            "make_filter", "make_filter_bank", "route", "filter_for_n_items",
-           "union", "backends", "describe_backends", "get_backend"]
+           "filter_for_workload", "union", "backends", "describe_backends",
+           "get_backend"]

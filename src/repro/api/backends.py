@@ -15,6 +15,8 @@ engine per forgetting strategy and it must be fast everywhere.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -32,9 +34,10 @@ def _single_host(ctx: SelectionContext) -> bool:
 
 
 def _plain_bits(spec: FilterSpec, ctx: SelectionContext) -> bool:
-    """Workloads the ordinary bit engines compete for: not a counting spec,
-    not a windowed (generations) context."""
-    return not spec.is_counting and ctx.generations is None
+    """Workloads the ordinary bit engines compete for: not a counting or
+    fingerprint spec, not a windowed (generations) context."""
+    return (not spec.is_counting and not spec.is_fingerprint
+            and ctx.generations is None)
 
 
 class JnpBackend(Backend):
@@ -212,10 +215,16 @@ class CountingBackend(Backend):
     supports_remove = True
     supports_decay = True
     supports_bank = True
+    supports_count = True              # counting_count multiplicity bound
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         return (_single_host(ctx) and spec.is_counting
                 and ctx.generations is None)
+
+    def bits_per_key(self, target_fpr: float = None) -> float:
+        """4-bit counters store 4x the equivalent bit filter."""
+        return 4.0 * super().bits_per_key(
+            target_fpr if target_fpr is not None else self.REF_FPR)
 
     def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
         return 1.0   # sole claimant of countingbf specs
@@ -344,10 +353,14 @@ class WindowedBackend(Backend):
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
         return (_single_host(ctx) and ctx.generations is not None
-                and not spec.is_counting and spec.variant != "cbf")
+                and not spec.is_counting and not spec.is_fingerprint
+                and spec.variant != "cbf")
 
     def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
         return 1.0   # sole claimant of generations contexts
+
+    def bits_per_key(self, target_fpr: float = None) -> Optional[float]:
+        return None      # G generations: cost depends on the ring length
 
     def init(self, spec: FilterSpec, options) -> jnp.ndarray:
         from repro.window.ring import ring_init
@@ -381,6 +394,125 @@ class WindowedBackend(Backend):
         return words.at[0].set(dense)
 
 
+class CuckooBackend(Backend):
+    """Bucketed cuckoo fingerprint filter (variant='cuckoo'): u8/u16
+    fingerprints in 4-slot buckets, partial-key hashing, bounded-kick
+    eviction. ``remove`` at ~1x storage — half to a quarter of the
+    counting filter's 4-bit counters — with an EXPLICIT insert-failure
+    signal accumulated in the traced ``Filter.state`` leaf
+    (``Filter.insert_failures``); no counters, no decay. Pallas VMEM
+    kernels on TPU (whole-tile gather contains, block-sorted sequential
+    inserts), jnp reference elsewhere — bit-identical by construction
+    (``options.impl`` pins one path explicitly). Banks run through the
+    generic vmap machinery with proper valid masks — the OR-idempotent
+    fill trick is FORBIDDEN (fingerprint inserts are not idempotent)."""
+
+    name = "cuckoo"
+    supports_remove = True
+    stateful_ops = True
+
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        return (_single_host(ctx) and spec.is_fingerprint
+                and ctx.generations is None)
+
+    def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
+        return 1.0   # sole claimant of fingerprint specs
+
+    def bits_per_key(self, target_fpr: float = None) -> Optional[float]:
+        """f/0.95: the slot width meeting the target, at the standard
+        0.95 achievable load of 4-slot buckets."""
+        from repro.core import fingerprint as F
+        f = F.slot_bits_for_fpr(
+            target_fpr if target_fpr is not None else self.REF_FPR)
+        return None if f is None else f / F.CUCKOO_MAX_LOAD
+
+    def init(self, spec: FilterSpec, options) -> jnp.ndarray:
+        return V.init(spec)
+
+    def init_state(self, spec: FilterSpec, options):
+        return jnp.zeros((), jnp.uint32)   # cumulative failed inserts
+
+    def _use_kernels(self, spec: FilterSpec, options) -> bool:
+        if options.impl == "pallas":
+            return True
+        if options.impl == "jnp":
+            return False
+        assert options.impl is None, options.impl
+        return jax.default_backend() == "tpu"
+
+    def _tile(self, options):
+        return options.tile        # None -> fingerprint.CUCKOO_ADD_TILE
+
+    def _update(self, spec, words, keys, options, state, valid, op):
+        from repro.core import fingerprint as F
+        if self._use_kernels(spec, options):
+            from repro.kernels import ops
+            fn = ops.cuckoo_add if op == "add" else ops.cuckoo_remove
+        else:
+            fn = F.cuckoo_add if op == "add" else F.cuckoo_remove
+        new, flags = fn(spec, words, keys, valid=valid,
+                        tile=self._tile(options))
+        st = jnp.zeros((), jnp.uint32) if state is None else state
+        if op == "add":
+            # the failure signal is never dropped: it accumulates into the
+            # traced state leaf, surviving jit/scan like any other carry
+            st = st + jnp.sum(~flags).astype(jnp.uint32)
+        return new, st
+
+    def add(self, spec, words, keys, options, state=None, valid=None):
+        return self._update(spec, words, keys, options, state, valid, "add")
+
+    def remove(self, spec, words, keys, options, state=None, valid=None):
+        return self._update(spec, words, keys, options, state, valid,
+                            "remove")
+
+    def contains(self, spec, words, keys, options, state=None):
+        if self._use_kernels(spec, options):
+            from repro.kernels import ops
+            return ops.cuckoo_contains(
+                spec, words, keys,
+                tile=options.tile if options.tile else None)
+        from repro.core import fingerprint as F
+        return F.cuckoo_contains(spec, words, keys)
+
+    def merge(self, spec, a, b, options):
+        raise NotImplementedError(
+            "cuckoo filters cannot be merged by elementwise union (slots "
+            "hold fingerprint values, not OR-able bits); re-insert the "
+            "other filter's keys, or use a Bloom/counting variant when "
+            "union is required")
+
+    # -- banks: vmapped scalar ops with REAL valid masks ---------------------
+    # The base-class fill trick re-adds a key per padding slot — fatal for
+    # non-idempotent fingerprint inserts — so both write ops override with
+    # an explicit mask; state (the failure counter) is per member.
+
+    def _bank_state(self, words, state):
+        return (jnp.zeros((words.shape[0],), jnp.uint32)
+                if state is None else state)
+
+    def _bank_update(self, spec, words, keys, options, valid, state, op):
+        B, n = words.shape[0], keys.shape[1]
+        v = (jnp.ones((B, n), jnp.bool_) if valid is None
+             else valid.astype(jnp.bool_))
+        run = jax.vmap(lambda w, k, vv, s: self._update(
+            spec, w, k, options, s, vv, op))
+        return run(words, keys, v, self._bank_state(words, state))
+
+    def add_bank(self, spec, words, keys, options, valid=None, state=None):
+        return self._bank_update(spec, words, keys, options, valid, state,
+                                 "add")
+
+    def remove_bank(self, spec, words, keys, options, valid=None,
+                    state=None):
+        return self._bank_update(spec, words, keys, options, valid, state,
+                                 "remove")
+
+    def contains_bank(self, spec, words, keys, options, state=None):
+        return jax.vmap(
+            lambda w, k: self.contains(spec, w, k, options))(words, keys)
+
+
 def tuned_options(spec: FilterSpec, op: str = "contains",
                   regime: str = "auto", tile: int = None):
     """Pin a ``BackendOptions`` to the autotuner's plan for (spec, op).
@@ -407,3 +539,4 @@ def register_all():
     register(PallasHbmBackend())
     register(CountingBackend())
     register(WindowedBackend())
+    register(CuckooBackend())

@@ -47,10 +47,12 @@ def _pad_split(keys: jnp.ndarray, n_dev: int):
 
 class _DistBackend(Backend):
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
-        # counting specs and windowed (generations) contexts belong to the
-        # single-host forgetting engines for now; banks are opt-in per
-        # engine (sharded shards the bank axis, replicated declines)
+        # counting/fingerprint specs and windowed (generations) contexts
+        # belong to the single-host forgetting engines for now; banks are
+        # opt-in per engine (sharded shards the bank axis, replicated
+        # declines)
         return (ctx.mesh is not None and not spec.is_counting
+                and not spec.is_fingerprint
                 and ctx.generations is None and ctx.bank is None)
 
     def init(self, spec: FilterSpec, options) -> jnp.ndarray:
@@ -108,7 +110,8 @@ class ShardedBackend(_DistBackend):
     supports_bank = True
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
-        if ctx.mesh is None or spec.is_counting or ctx.generations is not None:
+        if (ctx.mesh is None or spec.is_counting or spec.is_fingerprint
+                or ctx.generations is not None):
             return False
         if spec.variant == "cbf":
             return False   # classical filter has no block locality to shard

@@ -67,6 +67,8 @@ class BackendOptions:
     axis: str = "data"
     capacity: Optional[int] = None     # sharded routing capacity per (src,dst)
     generations: Optional[int] = None  # windowed engine: ring size G
+    impl: Optional[str] = None         # cuckoo engine: "jnp"|"pallas"|None
+                                       # (None = platform dispatch)
 
     def ctx(self, n_keys_hint: Optional[int] = None,
             bank: Optional[int] = None) -> registry.SelectionContext:
@@ -215,8 +217,14 @@ class Filter:
                 return self
             return _jit_add_bank(self, keys, valid)
         if valid is not None:
-            raise ValueError("valid= masks apply to bank ops only; filter "
-                             "the keys instead for a scalar add")
+            # non-idempotent engines (cuckoo) pad with valid masks even in
+            # scalar form — repeat-key padding would double-insert
+            if not self.engine.stateful_ops:
+                raise ValueError("valid= masks apply to bank ops only; "
+                                 "filter the keys instead for a scalar add")
+            if keys.shape[0] == 0:
+                return self
+            return _jit_add_valid(self, keys, jnp.asarray(valid))
         if keys.shape[0] == 0:
             return self
         return _jit_add(self, keys)
@@ -243,13 +251,18 @@ class Filter:
         return _jit_contains(self, keys)
 
     def remove(self, keys, tenants=None, valid=None) -> "Filter":
-        """Delete keys (counting engine only; same shapes as :meth:`add`).
-        Safe under the counting contract: no false negatives for keys
-        still present."""
+        """Delete keys (counting and cuckoo engines; same shapes as
+        :meth:`add`). Counting: guarded decrements — no false negatives
+        for keys still present, even if the removed key was never added.
+        Cuckoo: each key clears ONE slot holding its fingerprint — only
+        remove keys that were actually inserted, or a colliding key's
+        fingerprint may be cleared and gain a false negative
+        (DESIGN.md §13)."""
         if not self.engine.supports_remove:
             raise NotImplementedError(
                 f"backend {self.backend!r} cannot remove keys; build the "
-                f"filter with variant='countingbf' (engine 'counting')")
+                f"filter with variant='countingbf' (engine 'counting') or "
+                f"variant='cuckoo' (engine 'cuckoo', ~1x storage)")
         keys = as_keys(keys)
         if tenants is not None:
             self._check_routed(tenants)
@@ -262,8 +275,13 @@ class Filter:
                 return self
             return _jit_remove_bank(self, keys, valid)
         if valid is not None:
-            raise ValueError("valid= masks apply to bank ops only; filter "
-                             "the keys instead for a scalar remove")
+            if not self.engine.stateful_ops:
+                raise ValueError("valid= masks apply to bank ops only; "
+                                 "filter the keys instead for a scalar "
+                                 "remove")
+            if keys.shape[0] == 0:
+                return self
+            return _jit_remove_valid(self, keys, jnp.asarray(valid))
         if keys.shape[0] == 0:
             return self
         return _jit_remove(self, keys)
@@ -316,7 +334,7 @@ class Filter:
         (see :meth:`bank_merge`)."""
         if other.spec != self.spec:
             raise ValueError(f"cannot merge {other.spec} into {self.spec}")
-        if self.state is not None:
+        if self.engine.supports_advance:
             # windowed self: regardless of the other engine, its dense
             # union lands in MY head generation — generation 0 (or any
             # slot-wise OR) would misalign age classes against my traced
@@ -355,7 +373,7 @@ class Filter:
                 f"bank_merge needs matching (spec, backend, bank_shape); "
                 f"got {other.spec}/{other.backend}/{other.bank_shape} vs "
                 f"{self.spec}/{self.backend}/{self.bank_shape}")
-        if self.state is not None:
+        if self.engine.supports_advance:
             new = self._merge_windowed(other)
         else:
             new = self.engine.merge(self.spec, self.words, other.words,
@@ -378,11 +396,42 @@ class Filter:
         """Aggregate fill of the (bank's) canonical bit view."""
         return float(V.fill_fraction(self.dense_words()))
 
+    @property
+    def insert_failures(self) -> jnp.ndarray:
+        """Fingerprint engines: traced cumulative count of inserts whose
+        bounded kick chain overflowed (scalar uint32; bank-shaped for
+        banks). Nonzero means keys were NOT stored — resize the filter or
+        shed load. Never silently reset by ops; flows through jit/scan as
+        a pytree leaf."""
+        if not self.engine.stateful_ops:
+            raise NotImplementedError(
+                f"backend {self.backend!r} has no insert-failure state; "
+                f"only fingerprint engines (variant='cuckoo') can fail an "
+                f"insert")
+        return self.state
+
+    def load_factor(self):
+        """Fingerprint engines: occupied fraction of all slots (float;
+        bank-shaped array for banks). The fill metric for slot tables —
+        ``fill_fraction`` counts bits and is meaningless here."""
+        if not self.spec.is_fingerprint:
+            raise NotImplementedError(
+                f"load_factor() is a fingerprint-filter metric; "
+                f"{self.spec.variant!r} filters report fill_fraction()")
+        from repro.core import fingerprint as F
+        lf = F.cuckoo_load_factor(self.spec, self.words)
+        return float(lf) if not self.bank_shape else lf
+
     def approx_count(self) -> float:
-        """Estimated number of distinct keys inserted (Swamidass–Baldi):
-        n̂ = -(M/k) · ln(1 − fill) with M the *total* bits across the bank.
-        Exact in expectation for the classical filter; a close
-        upper-structure estimate for blocked variants."""
+        """Estimated number of distinct keys inserted. Fingerprint
+        filters count occupied slots exactly (minus failed inserts);
+        Bloom variants use the Swamidass–Baldi fill estimator
+        n̂ = -(M/k) · ln(1 − fill) with M the *total* bits across the
+        bank (exact in expectation for the classical filter; a close
+        upper-structure estimate for blocked variants)."""
+        if self.spec.is_fingerprint:
+            from repro.core import fingerprint as F
+            return float(jnp.sum(F.occupied_slots(self.spec, self.words)))
         fill = min(self.fill_fraction(), 1.0 - 1e-12)
         m_total = self.spec.m_bits * max(self.bank_size, 1)
         return max(0.0, -(m_total / self.spec.k) * math.log(1.0 - fill))
@@ -423,6 +472,10 @@ class Filter:
         state = {"words": self.dense_words(),
                  "spec": dataclasses.asdict(self.spec),
                  "backend": self.backend}
+        if self.engine.stateful_ops and self.state is not None:
+            # fingerprint engines: the table IS canonical and the failure
+            # counter is real operational state — both round-trip exactly
+            state["engine_state"] = self.state
         if self.bank_shape:
             state["bank_shape"] = list(self.bank_shape)
         if self.options.generations is not None:
@@ -462,6 +515,11 @@ class Filter:
         else:
             words = eng.from_dense(spec, dense, options)
             st = eng.init_state(spec, options)
+        if (eng.stateful_ops and "engine_state" in state
+                and eng.name == state.get("backend")):
+            st = jnp.asarray(state["engine_state"], jnp.uint32)
+            if bank_shape:
+                st = st.reshape(bank_shape)
         return cls(spec=spec, words=words, backend=eng.name, options=options,
                    state=st)
 
@@ -477,12 +535,32 @@ class Filter:
 # entry points so each compiles to its own stable executable.
 @jax.jit
 def _jit_add(filt: Filter, keys: jnp.ndarray) -> Filter:
+    if filt.engine.stateful_ops:
+        new, st = filt.engine.add(filt.spec, filt.words, keys, filt.options,
+                                  state=filt.state)
+        return filt.replace(words=new, state=st)
     if filt.state is None:
         new = filt.engine.add(filt.spec, filt.words, keys, filt.options)
     else:
         new = filt.engine.add(filt.spec, filt.words, keys, filt.options,
                               state=filt.state)
     return filt.replace(words=new)
+
+
+@jax.jit
+def _jit_add_valid(filt: Filter, keys: jnp.ndarray,
+                   valid: jnp.ndarray) -> Filter:
+    new, st = filt.engine.add(filt.spec, filt.words, keys, filt.options,
+                              state=filt.state, valid=valid)
+    return filt.replace(words=new, state=st)
+
+
+@jax.jit
+def _jit_remove_valid(filt: Filter, keys: jnp.ndarray,
+                      valid: jnp.ndarray) -> Filter:
+    new, st = filt.engine.remove(filt.spec, filt.words, keys, filt.options,
+                                 state=filt.state, valid=valid)
+    return filt.replace(words=new, state=st)
 
 
 @jax.jit
@@ -495,6 +573,10 @@ def _jit_contains(filt: Filter, keys: jnp.ndarray) -> jnp.ndarray:
 
 @jax.jit
 def _jit_remove(filt: Filter, keys: jnp.ndarray) -> Filter:
+    if filt.engine.stateful_ops:
+        new, st = filt.engine.remove(filt.spec, filt.words, keys,
+                                     filt.options, state=filt.state)
+        return filt.replace(words=new, state=st)
     new = filt.engine.remove(filt.spec, filt.words, keys, filt.options)
     return filt.replace(words=new)
 
@@ -522,6 +604,16 @@ def _jit_advance(filt: Filter) -> Filter:
     return filt.replace(words=words, state=state)
 
 
+def _repack_bank(filt: Filter, new) -> Filter:
+    """Reshape a bank op's result back to the filter's bank shape;
+    stateful engines return (words, state) and both leaves repack."""
+    if filt.engine.stateful_ops:
+        words, st = new
+        return filt.replace(words=words.reshape(filt.words.shape),
+                            state=st.reshape(filt.bank_shape or st.shape))
+    return filt.replace(words=new.reshape(filt.words.shape))
+
+
 @jax.jit
 def _jit_add_bank(filt: Filter, keys: jnp.ndarray, valid) -> Filter:
     wf, st = filt._flat()
@@ -530,7 +622,7 @@ def _jit_add_bank(filt: Filter, keys: jnp.ndarray, valid) -> Filter:
     vf = None if valid is None else valid.reshape((B, kf.shape[1]))
     new = filt.engine.add_bank(filt.spec, wf, kf, filt.options, valid=vf,
                                state=st)
-    return filt.replace(words=new.reshape(filt.words.shape))
+    return _repack_bank(filt, new)
 
 
 @jax.jit
@@ -550,7 +642,7 @@ def _jit_remove_bank(filt: Filter, keys: jnp.ndarray, valid) -> Filter:
     vf = None if valid is None else valid.reshape((B, kf.shape[1]))
     new = filt.engine.remove_bank(filt.spec, wf, kf, filt.options, valid=vf,
                                   state=st)
-    return filt.replace(words=new.reshape(filt.words.shape))
+    return _repack_bank(filt, new)
 
 
 @jax.jit
@@ -559,7 +651,7 @@ def _jit_add_routed(filt: Filter, keys: jnp.ndarray, tenants: jnp.ndarray,
     wf, st = filt._flat()
     new = filt.engine.add_bank_routed(filt.spec, wf, keys, tenants,
                                       filt.options, valid=valid, state=st)
-    return filt.replace(words=new.reshape(filt.words.shape))
+    return _repack_bank(filt, new)
 
 
 @jax.jit
@@ -576,4 +668,4 @@ def _jit_remove_routed(filt: Filter, keys: jnp.ndarray, tenants: jnp.ndarray,
     wf, st = filt._flat()
     new = filt.engine.remove_bank_routed(filt.spec, wf, keys, tenants,
                                          filt.options, valid=valid, state=st)
-    return filt.replace(words=new.reshape(filt.words.shape))
+    return _repack_bank(filt, new)

@@ -16,6 +16,10 @@ name       execution strategy
 jnp        vectorized pure-jnp reference (row gather / segmented-OR insert)
 pallas-vmem Pallas TPU kernels, filter pinned in VMEM (cache-resident regime)
 pallas-hbm  Pallas TPU kernels, filter streamed from HBM via DMA scratch
+counting   packed 4-bit counters (remove/decay/count); sole countingbf owner
+windowed   generation-ring sliding window (advance); sole generations owner
+cuckoo     bucketed fingerprint filter (remove at ~1x storage); sole owner
+           of variant="cuckoo" specs — Pallas kernels on TPU, jnp elsewhere
 replicated  one replica per mesh device; local adds + butterfly OR merges
 sharded     block-range segments per device; all_to_all ownership routing
 ========== ==================================================================
@@ -85,10 +89,17 @@ class Backend:
     # (one fused device op over the whole bank); engines without it still
     # serve banks through the generic vmap fallback below unless their
     # ``supports()`` declines a ``ctx.bank`` outright.
-    supports_remove: bool = False      # per-key deletion (counting)
+    supports_remove: bool = False      # per-key deletion (counting/cuckoo)
     supports_decay: bool = False       # uniform aging step (counting)
     supports_advance: bool = False     # window slide (generation ring)
     supports_bank: bool = False        # native single-launch bank ops
+    supports_count: bool = False       # per-key multiplicity estimates
+
+    # Stateful engines: add/remove return ``(words, state)`` instead of
+    # words alone — the second value is the traced per-filter state leaf
+    # (the cuckoo engine's cumulative insert-failure counter). The Filter
+    # jit entry points unpack accordingly.
+    stateful_ops: bool = False
 
     # Leading array dims of ONE filter's words: a bank prepends its shape
     # in front of these, which is how ``Filter.bank_shape`` is derived
@@ -104,12 +115,39 @@ class Backend:
         ~ memory traffic per key, scaled by platform efficiency."""
         raise NotImplementedError
 
+    # Reference FPR at which engines quote their memory cost. 1e-3 is the
+    # usual dedup/contamination operating point and sits right at the
+    # crossover the cost model exists to expose: a u16-fingerprint cuckoo
+    # filter beats 4-bit counters ~3.4x there.
+    REF_FPR = 1e-3
+
+    def bits_per_key(self, target_fpr: float = REF_FPR) -> Optional[float]:
+        """Storage bits per stored key this engine needs to hit
+        ``target_fpr`` — the memory axis of ``"auto"``-style selection
+        (capability flags say what an engine CAN do; this says what that
+        costs). Default: the information-theoretic Bloom sizing
+        c = ln(1/eps)/ln(2)^2 — bit-filter engines store exactly the
+        filter. None = not meaningful for this engine (e.g. windowed,
+        whose cost depends on the ring length)."""
+        import math
+        if not 0.0 < target_fpr < 1.0:
+            raise ValueError(f"target_fpr must be in (0, 1): {target_fpr}")
+        return math.log(1.0 / target_fpr) / (math.log(2.0) ** 2)
+
     def describe(self) -> Dict[str, str]:
+        try:
+            bpk = self.bits_per_key()
+        except NotImplementedError:
+            bpk = None
         return {"name": self.name, "doc": (self.__doc__ or "").strip(),
                 "supports_remove": self.supports_remove,
                 "supports_decay": self.supports_decay,
                 "supports_advance": self.supports_advance,
-                "supports_bank": self.supports_bank}
+                "supports_bank": self.supports_bank,
+                "supports_count": self.supports_count,
+                "bits_per_key_at_ref_fpr":
+                    None if bpk is None else round(bpk, 2),
+                "ref_fpr": self.REF_FPR}
 
     # -- storage -------------------------------------------------------------
     def init(self, spec: FilterSpec, options) -> jnp.ndarray:
@@ -319,6 +357,43 @@ def names() -> Tuple[str, ...]:
 
 def describe() -> Tuple[Dict[str, str], ...]:
     return tuple(_REGISTRY[n].describe() for n in names())
+
+
+def cheapest_engine(needs_remove: bool = False, needs_decay: bool = False,
+                    needs_count: bool = False,
+                    target_fpr: float = Backend.REF_FPR) -> str:
+    """Rank registered engines by :meth:`Backend.bits_per_key` among those
+    whose capability flags cover the required ops; returns the cheapest
+    engine's name.
+
+    This is the memory-aware half of ``"auto"`` selection the capability
+    flags alone couldn't express: with ``needs_remove=True`` the cuckoo
+    engine (~f/0.95 bits/key) beats the counting engine (4x the bit
+    filter) unless per-key counts/decay are also required — exactly the
+    deletable-AMQ trade the fingerprint literature documents."""
+    best = None
+    for name in names():
+        eng = get(name)
+        if needs_remove and not eng.supports_remove:
+            continue
+        if needs_decay and not eng.supports_decay:
+            continue
+        if needs_count and not eng.supports_count:
+            continue
+        try:
+            bpk = eng.bits_per_key(target_fpr)
+        except NotImplementedError:
+            bpk = None
+        if bpk is None:
+            continue
+        if best is None or bpk < best[0]:
+            best = (bpk, name)
+    if best is None:
+        raise ValueError(
+            f"no registered engine satisfies needs_remove={needs_remove}, "
+            f"needs_decay={needs_decay}, needs_count={needs_count} at "
+            f"fpr {target_fpr:g}")
+    return best[1]
 
 
 def select(spec: FilterSpec, backend: str = "auto",

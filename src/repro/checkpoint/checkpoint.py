@@ -126,8 +126,12 @@ def save_filter(ckpt_dir: str, step: int, filt, *, sync: bool = True,
         extra["filter_bank_shape"] = state["bank_shape"]
     if "options" in state:
         extra["filter_options"] = state["options"]
-    return save(ckpt_dir, step, {"filter_words": state["words"]}, sync=sync,
-                keep=keep, extra=extra)
+    leaves = {"filter_words": state["words"]}
+    if "engine_state" in state:
+        # stateful engines (cuckoo): the insert-failure counter is real
+        # operational state and rides along as a second leaf
+        leaves["filter_state"] = state["engine_state"]
+    return save(ckpt_dir, step, leaves, sync=sync, keep=keep, extra=extra)
 
 
 def restore_filter(ckpt_dir: str, *, step: Optional[int] = None,
@@ -152,6 +156,9 @@ def restore_filter(ckpt_dir: str, *, step: Optional[int] = None,
     words = np.load(os.path.join(d, manifest["leaves"]["filter_words"]["file"]))
     state = {"words": words, "spec": spec_d,
              "backend": extra["filter_backend"]}
+    if "filter_state" in manifest["leaves"]:
+        state["engine_state"] = np.load(
+            os.path.join(d, manifest["leaves"]["filter_state"]["file"]))
     if "filter_bank_shape" in extra:
         state["bank_shape"] = extra["filter_bank_shape"]
     if "filter_options" in extra:

@@ -111,6 +111,9 @@ def _plan_key(spec: FilterSpec, op: str, regime: str, mode: str,
     # (B× the gather index space, B× the RMW working set) and must never
     # silently reuse a plan tuned for the scalar filter. bank=1 keeps the
     # pre-bank key spelling so existing disk caches stay warm.
+    # ``str(spec)`` carries the variant name AND every variant-specific
+    # geometry field (FilterSpec.__str__ spells cuckoo slot geometry out),
+    # so same-m specs of different variants never share an entry.
     base = f"plan|{jax.default_backend()}|{spec}|{op}|{regime}|{mode}|tile{tile}"
     return base if bank == 1 else f"{base}|bank{bank}"
 

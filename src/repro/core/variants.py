@@ -31,6 +31,17 @@ COUNTINGBF
        and we buy with ownership partitioning (DESIGN.md §10). Storage is
        4x the bit filter: logical word w expands to counter words
        [4w, 4w+4); bit i of w lives in counter word 4w + i//8, nibble i%8.
+CUCKOO
+       Not a Bloom variant at all: a bucketed cuckoo *fingerprint* filter
+       (Fan et al.), the AMQ family GPU filter papers benchmark Bloom
+       designs against. ``slots_per_bucket`` fingerprints of ``slot_bits``
+       bits each, packed into u32 words; partial-key hashing derives the
+       alternate bucket from the fingerprint alone (XOR involution), so
+       relocation never re-reads the key. Deletable at ~1x storage (vs the
+       counting filter's 4x), at the cost of a bounded-kick insert loop
+       with an explicit failure signal. Reference semantics live in
+       ``core.fingerprint``; kernels in ``kernels.cuckoofilter``
+       (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -48,7 +59,9 @@ from repro.core import hashing as H
 WORD_BITS = 32
 _LOG2_WORD = 5
 
-VARIANTS = ("cbf", "bbf", "rbbf", "sbf", "csbf", "countingbf")
+VARIANTS = ("cbf", "bbf", "rbbf", "sbf", "csbf", "countingbf", "cuckoo")
+
+CUCKOO_SLOT_BITS = (8, 16)           # u8 / u16 fingerprint slot widths
 
 # Packed 4-bit counters (countingbf): expansion factor and nibble geometry.
 COUNTER_BITS = 4
@@ -72,6 +85,8 @@ class FilterSpec:
     k: int                       # fingerprint bits per key
     block_bits: int = 256        # B — block size in bits (blocked variants)
     z: int = 1                   # CSBF: number of sector groups
+    slot_bits: int = 8           # CUCKOO: fingerprint width (8 or 16)
+    slots_per_bucket: int = 4    # CUCKOO: slots per bucket (pow2)
 
     def __post_init__(self):
         assert self.variant in VARIANTS, self.variant
@@ -81,6 +96,16 @@ class FilterSpec:
             object.__setattr__(self, "block_bits", self.m_bits)
         if self.variant == "rbbf":
             object.__setattr__(self, "block_bits", WORD_BITS)
+        if self.variant == "cuckoo":
+            assert self.slot_bits in CUCKOO_SLOT_BITS, self.slot_bits
+            _log2i(self.slots_per_bucket)
+            bucket_bits = self.slots_per_bucket * self.slot_bits
+            assert bucket_bits >= WORD_BITS, \
+                "a bucket must fill at least one u32 word"
+            # a bucket IS the "block" of the shared geometry: s words per
+            # bucket, n_blocks == n_buckets — so layout/regime machinery
+            # (VMEM budgets, row gathers, bank offsets) applies unchanged
+            object.__setattr__(self, "block_bits", bucket_bits)
         _log2i(self.block_bits)
         assert WORD_BITS <= self.block_bits <= self.m_bits
         if self.variant == "csbf":
@@ -95,6 +120,26 @@ class FilterSpec:
     @property
     def is_counting(self) -> bool:
         return self.variant == "countingbf"
+
+    @property
+    def is_fingerprint(self) -> bool:
+        """Fingerprint (cuckoo) specs store hashed slot values, not bit
+        patterns — the Bloom engines and pattern helpers don't apply."""
+        return self.variant == "cuckoo"
+
+    # -- cuckoo geometry (is_fingerprint specs only) -------------------------
+    @property
+    def slots_per_word(self) -> int:
+        return WORD_BITS // self.slot_bits
+
+    @property
+    def n_buckets(self) -> int:
+        return self.n_blocks
+
+    @property
+    def n_slots(self) -> int:
+        """Total fingerprint slots — the capacity at load factor 1.0."""
+        return self.n_buckets * self.slots_per_bucket
 
     @property
     def storage_words(self) -> int:
@@ -127,6 +172,12 @@ class FilterSpec:
         return self.m_bits / max(n, 1)
 
     def __str__(self):
+        if self.variant == "cuckoo":
+            # slot geometry IS the spec for fingerprint filters: two cuckoo
+            # specs with equal m but different slot widths must never print
+            # (or cache-key, see core.tuning._plan_key) identically
+            return (f"cuckoo(m=2^{_log2i(self.m_bits)}b, "
+                    f"{self.slots_per_bucket}xu{self.slot_bits})")
         return (f"{self.variant}(m=2^{_log2i(self.m_bits)}b, B={self.block_bits}, "
                 f"k={self.k}" + (f", z={self.z}" if self.variant == "csbf" else "") + ")")
 
@@ -235,6 +286,7 @@ def _hashes(keys: jnp.ndarray):
 
 def contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
     """Vectorized bulk membership test. Returns (n,) bool."""
+    assert not spec.is_fingerprint, "use core.fingerprint.cuckoo_contains"
     if spec.is_counting:
         return counting_contains(spec, filt, keys)
     h1, h2 = _hashes(keys)
@@ -398,6 +450,7 @@ def or_rows(spec: FilterSpec, filt: jnp.ndarray, blk: jnp.ndarray,
 
 def add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
         method: str = "rows") -> jnp.ndarray:
+    assert not spec.is_fingerprint, "use core.fingerprint.cuckoo_add"
     if spec.is_counting:
         return counting_add(spec, filt, keys)
     if method == "loop":
@@ -847,6 +900,10 @@ def fpr_csbf(B: int, S: int, c: float, k: int, z: int) -> float:
 
 
 def fpr_theory(spec: FilterSpec, n: int) -> float:
+    if spec.is_fingerprint:
+        from repro.core import fingerprint as F     # avoid import cycle
+        return F.fpr_cuckoo(spec.slot_bits, spec.slots_per_bucket,
+                            min(n / spec.n_slots, 1.0))
     c = spec.bits_per_element(n)
     if spec.variant == "cbf":
         return fpr_cbf(spec.m_bits, n, spec.k)
@@ -859,6 +916,38 @@ def fpr_theory(spec: FilterSpec, n: int) -> float:
     raise ValueError(spec.variant)
 
 
+def snap_k(variant: str, c: float, block_bits: int = 256, z: int = 1) -> int:
+    """k near the space-optimal k* = c ln 2 (Eq. 2), snapped to the
+    variant's structural constraints (k ≡ 0 mod s for SBF-placement
+    variants, mod z for CSBF), capped at 32."""
+    k = max(int(round(optimal_k(c))), 1)
+    if variant == "csbf":
+        k = max(z, (k // z) * z)
+    if variant in ("sbf", "countingbf"):
+        s = block_bits // WORD_BITS
+        k = max(s, (k // s) * s) if k >= s else k
+    return min(k, 32)
+
+
+def space_optimal_c(variant: str, block_bits: int, z: int, n: int,
+                    target_fpr: float, max_log2_m: int = 40) -> float:
+    """Iso-error sizing: smallest bits/key c = m/n (m a power of two, k
+    snapped per :func:`snap_k`) whose variant-aware analytic FPR meets
+    ``target_fpr`` at load n — the inverse of :func:`fpr_theory` the AMQ
+    comparison harness sizes Bloom families with."""
+    assert 0.0 < target_fpr < 1.0
+    start = max(_log2i(1 << 10), int(math.ceil(math.log2(max(n, 2)))))
+    for log2m in range(start, max_log2_m):
+        m = 1 << log2m
+        k = snap_k(variant, m / n, block_bits, z)
+        spec = FilterSpec(variant=variant, m_bits=m, k=k,
+                          block_bits=block_bits, z=z)
+        if fpr_theory(spec, n) <= target_fpr:
+            return m / n
+    raise ValueError(f"no m <= 2^{max_log2_m} reaches fpr {target_fpr:g} "
+                     f"for {variant} at n={n}")
+
+
 def space_optimal_n(spec: FilterSpec, target_fpr: float = None) -> int:
     """Load n for the spec (paper §5.1).
 
@@ -869,6 +958,10 @@ def space_optimal_n(spec: FilterSpec, target_fpr: float = None) -> int:
     variant-aware) stays at or below the target; 0 if even n = 1 exceeds it.
     """
     if target_fpr is None:
+        if spec.is_fingerprint:
+            # cuckoo capacity is structural, not space-error-optimal: the
+            # standard achievable load for 4-slot buckets is ~0.95
+            return max(int(spec.n_slots * 0.95), 1)
         # k = c ln2  =>  c = k / ln2  =>  n = m / c
         c = spec.k / math.log(2.0)
         return max(int(spec.m_bits / c), 1)

@@ -167,14 +167,24 @@ class StreamingDedupStats(DedupStats):
 class StreamingDedupFilter:
     """Sliding-window dedup over an unbounded stream, with eviction.
 
-    Holds a :class:`repro.window.WindowedFilter`: signatures land in the
-    head generation, lookups OR the ring in one fused pass, and every
-    ``window_docs / generations`` admitted documents the ring advances —
-    retiring the oldest generation (its signatures become re-admissible).
-    Memory is fixed at ``generations`` sub-filters each sized for the
-    per-generation load, so drop-rate and FPR are stationary no matter how
-    long the stream runs.
+    Two eviction engines behind one stream interface:
 
+    * ``engine="window"`` (default) — a :class:`repro.window.WindowedFilter`
+      generation ring: signatures land in the head generation, lookups OR
+      the ring in one fused pass, and every ``window_docs / generations``
+      admitted documents the ring advances, retiring the oldest
+      generation (an *age class*) in O(1).
+    * ``engine="cuckoo"`` — a fingerprint filter (``variant="cuckoo"``):
+      the window's signatures are deleted *per key* via
+      ``Filter.remove`` instead of by age-class rotation. One table
+      (~slot_bits/0.95 bits per live key — no G-generation replication,
+      half to a quarter of a 4-bit counting filter), and eviction is
+      exact: a retired signature is individually cleared, not ORed away
+      with its whole generation. The stage keeps the retiring
+      generation's signatures host-side (it must know *what* to delete —
+      the fingerprint filter trades that bookkeeping for the memory).
+
+    Memory and FPR are stationary on an unbounded stream either way.
     Within the live window the no-false-negative guarantee holds: a
     duplicate of a document seen fewer than ``window_docs`` (at least
     ``window_docs * (G-1)/G``) documents ago is always dropped.
@@ -182,14 +192,30 @@ class StreamingDedupFilter:
 
     def __init__(self, window_docs: int = 1 << 16, generations: int = 4,
                  bits_per_key: float = 16.0, variant: str = "sbf",
-                 block_bits: int = 256, batch_docs: int = 256):
-        self.window = WindowedFilter.for_window(
-            window_docs, bits_per_key=bits_per_key, generations=generations,
-            variant=variant, block_bits=block_bits)
+                 block_bits: int = 256, batch_docs: int = 256,
+                 engine: str = "window"):
+        if engine not in ("window", "cuckoo"):
+            raise ValueError(f"engine must be 'window' or 'cuckoo': {engine}")
+        self.engine = engine
+        self.generations = generations
         self.batch_docs = batch_docs
         self.advance_every = max(window_docs // generations, 1)
         self._since_advance = 0
         self.stats = StreamingDedupStats()
+        if engine == "window":
+            self.window = WindowedFilter.for_window(
+                window_docs, bits_per_key=bits_per_key,
+                generations=generations, variant=variant,
+                block_bits=block_bits)
+        else:
+            # live load peaks at the full window plus the not-yet-retired
+            # newest generation; size the table so that stays under the
+            # 0.95 achievable load factor
+            self.filt = api.filter_for_n_items(
+                window_docs + self.advance_every, bits_per_key=bits_per_key,
+                variant="cuckoo")
+            self._gens: List[List[np.ndarray]] = []   # admitted, oldest first
+            self._cur: List[np.ndarray] = []          # filling generation
 
     def filter_stream(self, docs: Iterator[np.ndarray]) -> Iterator[np.ndarray]:
         buf: List[np.ndarray] = []
@@ -201,9 +227,57 @@ class StreamingDedupFilter:
         if buf:
             yield from self._flush(buf)
 
+    def _contains(self, sigs: np.ndarray) -> np.ndarray:
+        filt = self.window if self.engine == "window" else self.filt
+        return np.asarray(filt.contains(sigs))
+
+    def _admit(self, add_sigs: np.ndarray):
+        pad = self.batch_docs - len(add_sigs)
+        if self.engine == "window":
+            # ring generations are bit filters: repeat-key padding stays
+            # OR-idempotent (stable shapes, no per-flush retrace)
+            if pad > 0:
+                add_sigs = np.concatenate(
+                    [add_sigs, np.repeat(add_sigs[-1:], pad, axis=0)])
+            self.window = self.window.add(add_sigs)
+            return
+        # fingerprint inserts are NOT idempotent: pad with a validity mask
+        valid = np.zeros(max(self.batch_docs, len(add_sigs)), np.uint8)
+        valid[: len(add_sigs)] = 1
+        if pad > 0:
+            add_sigs = np.concatenate(
+                [add_sigs, np.zeros((pad, 2), np.uint32)])
+        self.filt = self.filt.add(add_sigs, valid=valid)
+        self._cur.append(add_sigs[valid.astype(bool)])
+
+    def _advance(self):
+        """Retire the oldest generation: ring rotation, or per-key
+        fingerprint deletion of exactly the signatures it admitted.
+
+        Mirrors the ring's shape: after an advance the live window is the
+        (empty) head plus ``generations - 1`` completed age classes."""
+        if self.engine == "window":
+            self.window = self.window.advance()
+            return
+        self._gens.append(self._cur)
+        self._cur = []
+        while len(self._gens) > self.generations - 1:
+            old = self._gens.pop(0)
+            if not old:
+                continue
+            sigs = np.concatenate(old)
+            # pad to the next pow2 (bounded retrace) with a valid mask —
+            # fingerprint removes are not idempotent either
+            cap = 1 << max(int(np.ceil(np.log2(max(len(sigs), 1)))), 3)
+            valid = np.zeros(cap, np.uint8)
+            valid[: len(sigs)] = 1
+            sigs = np.concatenate(
+                [sigs, np.zeros((cap - len(sigs), 2), np.uint32)])
+            self.filt = self.filt.remove(sigs, valid=valid)
+
     def _flush(self, docs: List[np.ndarray]):
         sigs = doc_signatures_batch(docs)                        # (n, 2)
-        present = np.asarray(self.window.contains(sigs))
+        present = self._contains(sigs)
         fresh_idx = np.nonzero(~present)[0]
         kept = set()
         if len(fresh_idx):
@@ -214,21 +288,14 @@ class StreamingDedupFilter:
                 if key not in seen_in_batch:
                     seen_in_batch[key] = True
                     keep.append(i)
-            # pad to batch capacity: ring generations are bit filters, so
-            # repeat-key padding stays OR-idempotent (stable shapes)
-            add_sigs = sigs[np.array(keep)]
-            pad = self.batch_docs - len(add_sigs)
-            if pad > 0:
-                add_sigs = np.concatenate(
-                    [add_sigs, np.repeat(add_sigs[-1:], pad, axis=0)])
-            self.window = self.window.add(add_sigs)
+            self._admit(sigs[np.array(keep)])
             kept = set(keep)
         self.stats.seen += len(docs)
         self.stats.dropped += len(docs) - len(kept)
         # advance on *admitted* docs: the window is measured in kept load
         self._since_advance += len(kept)
         while self._since_advance >= self.advance_every:
-            self.window = self.window.advance()
+            self._advance()
             self.stats.advances += 1
             self._since_advance -= self.advance_every
         for i in sorted(kept):
@@ -251,7 +318,20 @@ class TenantDedupFilter:
     def __init__(self, n_tenants: int, expected_docs_per_tenant: int = 1 << 14,
                  bits_per_key: float = 16.0, variant: str = "sbf",
                  block_bits: int = 256, backend: str = "auto",
-                 batch_docs: int = 256, **backend_kw):
+                 batch_docs: int = 256, engine: Optional[str] = None,
+                 **backend_kw):
+        if engine == "cuckoo":
+            # fingerprint bank: per-tenant deletion at ~1x storage becomes
+            # available (filt.remove(keys, tenants=...)) and the routed
+            # adds below are already valid-masked — the exact padding
+            # contract non-idempotent fingerprint inserts require
+            variant = "cuckoo"
+        elif engine == "counting":
+            variant = "countingbf"
+        elif engine is not None:
+            raise ValueError(
+                f"engine must be 'cuckoo', 'counting' or None (insert-only"
+                f" bit filters via variant=/backend=): {engine!r}")
         self.filt = api.filter_for_n_items(
             expected_docs_per_tenant, bits_per_key, variant=variant,
             block_bits=block_bits, backend=backend, bank=n_tenants,

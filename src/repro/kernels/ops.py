@@ -45,8 +45,10 @@ from repro.core import hashing as H
 from repro.core import partition as P
 from repro.core import variants as V
 from repro.core.variants import FilterSpec
+from repro.core import fingerprint as F
 from repro.kernels import cbf as cbf_k
 from repro.kernels import countingbf as cnt_k
+from repro.kernels import cuckoofilter as ckoo_k
 from repro.kernels import ring as ring_k
 from repro.kernels import sbf as sbf_k
 from repro.kernels.sbf import (DEFAULT_DMA_DEPTH, DEFAULT_TILE, DMA_DEPTHS,
@@ -589,6 +591,79 @@ def counting_update_partitioned(spec: FilterSpec, filt: jnp.ndarray, keys,
         part.overflow > 0,
         lambda f: _residual_counting(spec, f, keys, part.keep, op),
         lambda f: f, out)
+
+
+# ---------------------------------------------------------------------------
+# Cuckoo fingerprint dispatch (valid-masked padding; inserts/removes are
+# not idempotent). No HBM regime: a kick chain is a data-dependent pointer
+# chase DMA streaming can't pipeline — tables beyond the VMEM budget run
+# the jnp reference (same tile schedule, so results stay bit-identical).
+# ---------------------------------------------------------------------------
+
+def cuckoo_vmem_resident(spec: FilterSpec) -> bool:
+    return spec.n_words * 4 <= VMEM_FILTER_BYTES
+
+
+def cuckoo_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                    tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """(n,) bool two-bucket membership; ONE pallas_call for the batch."""
+    assert spec.is_fingerprint
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    if not cuckoo_vmem_resident(spec):
+        return F.cuckoo_contains(spec, filt, keys)
+    tile = _clamp_tile(n, tile or DEFAULT_TILE)
+    padded = _pad_keys(keys, tile)              # reads: repeat-last is safe
+    out = ckoo_k.contains_vmem(spec, filt, padded, tile=tile,
+                               interpret=_interpret())
+    return out[:n]
+
+
+def _cuckoo_tile(n: int, tile: Optional[int]) -> int:
+    """The bulk-update chunk size. MUST mirror ``fingerprint.cuckoo_add``'s
+    trace-time chunking (chunks of T over the unpadded batch): a batch at
+    or under T runs as one tile (padded up to the 8-key floor), a larger
+    one pads to a multiple of T — so the (sort, insert) order, and hence
+    the resulting table, is bit-identical between jnp and Pallas."""
+    T = tile or F.CUCKOO_ADD_TILE
+    if n <= T:
+        return max(8, 1 << int(np.ceil(np.log2(max(n, 1)))))
+    return T
+
+
+def _cuckoo_update(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                   op: str, valid: Optional[jnp.ndarray],
+                   tile: Optional[int]):
+    assert spec.is_fingerprint
+    n = keys.shape[0]
+    if n == 0:
+        return filt, jnp.zeros((0,), jnp.bool_)
+    T = tile or F.CUCKOO_ADD_TILE
+    if not cuckoo_vmem_resident(spec):
+        fn = F.cuckoo_add if op == "add" else F.cuckoo_remove
+        return fn(spec, filt, keys, valid=valid, tile=T)
+    eff = _cuckoo_tile(n, tile)
+    pk, pv = _pad_keys_valid(keys, eff, valid)
+    fn = ckoo_k.add_vmem if op == "add" else ckoo_k.remove_vmem
+    out, flags = fn(spec, filt, pk, pv, tile=eff, interpret=_interpret())
+    return out, flags[:n]
+
+
+def cuckoo_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+               valid: Optional[jnp.ndarray] = None,
+               tile: Optional[int] = None):
+    """Bulk block-sorted insert. Returns ``(table, ok)``; ``ok[i]=False``
+    is the explicit bounded-kick failure signal (never silently dropped —
+    the API accumulates it into ``Filter.insert_failures``)."""
+    return _cuckoo_update(spec, filt, keys, "add", valid, tile)
+
+
+def cuckoo_remove(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                  valid: Optional[jnp.ndarray] = None,
+                  tile: Optional[int] = None):
+    """Bulk delete (one slot cleared per key). Returns (table, found)."""
+    return _cuckoo_update(spec, filt, keys, "remove", valid, tile)
 
 
 # ---------------------------------------------------------------------------
