@@ -1,0 +1,220 @@
+"""Traffic replay harness for the filter service (request-level serving).
+
+The bulk benches answer "how fast is one big batch"; production cares
+about a *stream*: zipfian-skewed tenants, a mixed add/contains/remove op
+distribution, bursty arrivals, admission shedding, and what a worker loss
+costs. This harness replays a deterministic synthetic trace through
+:class:`repro.service.FilterService` and reports the serving numbers the
+bulk path can't:
+
+* **latency** — per-request enqueue->flush-complete, p50/p99/p999 via
+  ``common.percentile`` (nearest-rank: p999 is an observed sample, not an
+  interpolation artifact);
+* **throughput** — sustained Mops/s over the whole replay (batching
+  efficiency included: padding waste and deadline flushes count against
+  it);
+* **shed rate** — admitted vs refused under the configured admission
+  policy;
+* **recovery** — a :class:`ServiceDriver` run with an injected
+  mid-stream failure, reporting restore-to-caught-up wall time and
+  asserting the replayed filter is **bit-exact** with an uninterrupted
+  twin run (the DESIGN.md §14 invariant, measured not assumed).
+
+The trace is a pure function of ``--seed`` (zipfian tenant draw +
+per-step op mix), so runs are comparable across machines and PRs.
+
+    PYTHONPATH=src python -m benchmarks.replay --smoke
+    PYTHONPATH=src python -m benchmarks.replay --engines sbf,cuckoo \
+        --steps 200 --burst 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, latency_summary
+from repro import api
+from repro.service import (AdmissionPolicy, FilterService, MaintenanceConfig,
+                           MaintenanceLoop, ServiceConfig, ServiceDriver,
+                           ServiceDriverConfig)
+from repro.runtime.fault_tolerance import SimulatedFailure
+
+# engine name -> make_filter_bank kwargs (one Bloom-family, one cuckoo in
+# the default set — the CI acceptance pair; countingbf adds remove ops)
+ENGINES = {
+    "sbf": dict(m_bits=1 << 14, k=8),
+    "countingbf": dict(variant="countingbf", m_bits=1 << 14, k=8),
+    "cuckoo": dict(variant="cuckoo", m_bits=1 << 13),
+}
+
+
+def zipf_tenants(rng: np.random.RandomState, n: int, n_tenants: int,
+                 alpha: float) -> np.ndarray:
+    """Zipfian tenant draw over a fixed alphabet (unlike np.random.zipf,
+    which samples an unbounded support): P(t) ∝ 1/(t+1)^alpha."""
+    w = 1.0 / np.arange(1, n_tenants + 1) ** alpha
+    return rng.choice(n_tenants, size=n, p=w / w.sum()).astype(np.int64)
+
+
+def make_stream(seed: int, n_tenants: int, burst: int, alpha: float,
+                mix: dict, supports_remove: bool):
+    """A seeded, step-indexed trace: ``stream_fn(step)`` returns the
+    bursts for that step — pure in (seed, step), the determinism the
+    recovery replay depends on."""
+    ops = [op for op in ("add", "contains", "remove")
+           if mix.get(op, 0) > 0 and (op != "remove" or supports_remove)]
+    probs = np.asarray([mix[op] for op in ops], np.float64)
+    probs /= probs.sum()
+
+    def stream_fn(step: int):
+        rng = np.random.RandomState(seed * 1_000_003 + step)
+        out = []
+        for op in rng.choice(ops, size=3, p=probs):
+            # removes draw smaller bursts from the same key distribution
+            # (hit-or-miss deletes: counting removes are guarded; the
+            # throughput number is what's being measured, not semantics)
+            n = burst // 4 if op == "remove" else burst
+            keys = rng.randint(0, 2 ** 32, (n, 2)).astype(np.uint32)
+            tenants = zipf_tenants(rng, n, n_tenants, alpha)
+            out.append((op, keys, tenants))
+        return out
+
+    return stream_fn
+
+
+def replay_throughput(csv: Csv, engine: str, *, n_tenants: int, steps: int,
+                      burst: int, alpha: float, max_batch: int,
+                      seed: int) -> None:
+    """Real-clock replay: latency percentiles, Mops/s, shed rate."""
+    filt = api.make_filter_bank(n_tenants, **ENGINES[engine])
+    svc = FilterService(
+        filt,
+        ServiceConfig(max_batch=max_batch, flush_deadline=2e-3,
+                      admission=AdmissionPolicy(queue_limit=8 * max_batch)))
+    mix = {"add": 0.45, "contains": 0.45, "remove": 0.10}
+    stream = make_stream(seed, n_tenants, burst, alpha, mix,
+                         svc.filt.engine.supports_remove)
+    # warmup: compile every per-op executable outside the timed window
+    # (stream(0) may not draw all ops, so warm them explicitly)
+    wk = np.ones((1, 2), np.uint32)
+    for op in ("add", "contains") + (("remove",)
+                                     if svc.filt.engine.supports_remove
+                                     else ()):
+        svc.submit_many(op, wk, np.zeros(1, np.int64))
+    for op, keys, tenants in stream(0):
+        svc.submit_many(op, keys, tenants)
+    svc.drain()
+    for lat in svc.latencies.values():
+        lat.clear()
+    t0 = time.perf_counter()
+    for step in range(1, steps + 1):
+        for op, keys, tenants in stream(step):
+            svc.submit_many(op, keys, tenants)
+        svc.pump()
+    svc.drain()
+    wall = time.perf_counter() - t0
+    h = svc.health()
+    lat = latency_summary(svc.all_latencies())
+    done = h["flushed_ops"]
+    csv.add(f"replay/{engine}/latency", lat["p50"],
+            f"p99={lat['p99']:.1f}us p999={lat['p999']:.1f}us n={lat['n']}")
+    csv.add(f"replay/{engine}/throughput", wall / max(done, 1) * 1e6,
+            f"Mops/s={done / wall / 1e6:.3f} shed={h['shed_rate']:.3f} "
+            f"pad={h['padded_slots'] / max(h['flushes'], 1):.1f}/flush",
+            n_ops=done)
+
+
+def replay_recovery(csv: Csv, engine: str, *, n_tenants: int, steps: int,
+                    burst: int, alpha: float, max_batch: int, seed: int,
+                    ckpt_root: str) -> None:
+    """Twin-run recovery drill: fail mid-stream, restore, assert the
+    replayed filter is bit-exact with an uninterrupted run."""
+    import os
+
+    mix = {"add": 0.6, "contains": 0.4}
+
+    def run(tag: str, fail_at):
+        filt = api.make_filter_bank(n_tenants, **ENGINES[engine])
+        svc = FilterService(filt,
+                            ServiceConfig(max_batch=max_batch,
+                                          flush_deadline=2.5))
+        maint = MaintenanceLoop(MaintenanceConfig(
+            checkpoint_every=max(steps // 4, 1),
+            ckpt_dir=os.path.join(ckpt_root, f"{engine}_{tag}")))
+        stream = make_stream(seed, n_tenants, burst, alpha, mix,
+                             supports_remove=False)
+        fired = []
+
+        def hook(step):
+            if fail_at is not None and step == fail_at and not fired:
+                fired.append(step)
+                raise SimulatedFailure(f"injected at step {step}")
+
+        drv = ServiceDriver(svc, stream, maint,
+                            ServiceDriverConfig(virtual_dt=1.0),
+                            failure_hook=hook)
+        return drv.run(steps), drv
+
+    clean, _ = run("clean", None)
+    failed, drv = run("failed", max(2 * steps // 3, 1))
+    exact = bool(jnp.array_equal(clean.words, failed.words)) and (
+        clean.state is None or bool(jnp.array_equal(clean.state,
+                                                    failed.state)))
+    if not exact:
+        raise AssertionError(
+            f"replay/{engine}: recovered filter diverged from the "
+            f"uninterrupted twin run — recovery is NOT bit-exact")
+    rec = drv.recovery_times
+    csv.add(f"replay/{engine}/recovery", (rec[0] if rec else 0.0) * 1e6,
+            f"bit_exact=1 restarts={sum(1 for e in drv.events if e['kind'] == 'failure')}")
+
+
+def run(csv: Csv, *, smoke: bool = False, engines=("sbf", "cuckoo"),
+        n_tenants: int = 8, steps: int = 100, burst: int = 48,
+        alpha: float = 1.1, max_batch: int = 64, seed: int = 7,
+        ckpt_root=None) -> None:
+    import tempfile
+    if smoke:
+        steps, burst, max_batch = 12, 24, 32
+    root = ckpt_root or tempfile.mkdtemp(prefix="replay_ckpt_")
+    for engine in engines:
+        replay_throughput(csv, engine, n_tenants=n_tenants, steps=steps,
+                          burst=burst, alpha=alpha, max_batch=max_batch,
+                          seed=seed)
+        replay_recovery(csv, engine, n_tenants=n_tenants,
+                        steps=max(steps // 4, 6), burst=burst, alpha=alpha,
+                        max_batch=max_batch, seed=seed, ckpt_root=root)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace (CI harness health check)")
+    ap.add_argument("--engines", default="sbf,cuckoo",
+                    help=f"comma subset of {sorted(ENGINES)}")
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--burst", type=int, default=48)
+    ap.add_argument("--alpha", type=float, default=1.1,
+                    help="zipf skew of the tenant draw")
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+    engines = args.engines.split(",")
+    unknown = set(engines) - set(ENGINES)
+    if unknown:
+        raise SystemExit(f"unknown engines {sorted(unknown)}; "
+                         f"choose from {sorted(ENGINES)}")
+    csv = Csv()
+    csv.header()
+    run(csv, smoke=args.smoke, engines=engines, n_tenants=args.tenants,
+        steps=args.steps, burst=args.burst, alpha=args.alpha,
+        max_batch=args.max_batch, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,10 +16,14 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
                      routed tenant streams, guard/dedup consumers
     amq_compare   -> iso-error AMQ baseline: sbf vs counting vs cuckoo
                      throughput + bits/key at matched measured FPR
+    replay        -> service traffic replay: streamed zipfian request mix
+                     through the batched front end (latency percentiles,
+                     Mops/s, shed rate, recovery drill) — beyond-paper
 
 ``--smoke`` runs a tiny-size subset (window + dedup + api_backends + bank
-+ amq_compare) as a CI health check for the harness itself; the numbers
-are meaningless, the point is that every bench entry point still executes.
++ amq_compare + replay) as a CI health check for the harness itself; the
+numbers are meaningless, the point is that every bench entry point still
+executes.
 
 ``--compare BASELINE.json`` is the perf regression gate: every record whose
 name also appears in the baseline (and whose baseline time is above the
@@ -130,12 +134,12 @@ def main(argv=None) -> None:
 
     from benchmarks import (amq_compare, api_backends, bank, dedup_pipeline,
                             fig4_frontier, fig5_8_archs, fig9_breakdown,
-                            gups, layout_grid, table1_dram, table2_cache,
-                            window)
+                            gups, layout_grid, replay, table1_dram,
+                            table2_cache, window)
 
     if args.smoke:
         only = set((args.only
-                    or "window,dedup,api_backends,bank,amq_compare"
+                    or "window,dedup,api_backends,bank,amq_compare,replay"
                     ).split(","))
         if "window" in only:
             window.run(csv, smoke=True)
@@ -147,6 +151,8 @@ def main(argv=None) -> None:
             bank.run(csv, bank=8, m_bits=1 << 13, n_keys=1 << 7, smoke=True)
         if "amq_compare" in only:
             amq_compare.run(csv, smoke=True)
+        if "replay" in only:
+            replay.run(csv, smoke=True)
         if args.json:
             csv.write_json(args.json)
         if args.compare:
@@ -166,6 +172,7 @@ def main(argv=None) -> None:
         "window": lambda: window.run(csv),
         "bank": lambda: bank.run(csv),
         "amq_compare": lambda: amq_compare.run(csv),
+        "replay": lambda: replay.run(csv),
     }
     only = set(args.only.split(",")) if args.only else None
 
@@ -177,7 +184,7 @@ def main(argv=None) -> None:
     if only is None or "table2_cache" in only:
         table2_cache.run(csv)
     for name in ("fig4_frontier", "fig5_8_archs", "fig9_breakdown", "dedup",
-                 "api_backends", "window", "bank", "amq_compare"):
+                 "api_backends", "window", "bank", "amq_compare", "replay"):
         if only is None or name in only:
             benches[name]()
     if (only is None and not args.skip_layout) or (only and "layout_grid" in only):

@@ -422,6 +422,33 @@ class Filter:
         lf = F.cuckoo_load_factor(self.spec, self.words)
         return float(lf) if not self.bank_shape else lf
 
+    def health(self) -> dict:
+        """One JSON-able operational-health dict — the dashboard surface
+        shared by ``Engine.stats()``, ``launch/serve.py`` and the service
+        front end (which merges its own counters on top). Keys vary by
+        engine: Bloom-family filters report ``fill_fraction`` (their
+        FPR driver), fingerprint filters report ``load_factor`` (worst
+        member) + cumulative ``insert_failures`` (nonzero = keys were
+        dropped), windowed filters add generation-ring counters
+        (``generations``, per-member ``head``)."""
+        out = {"backend": self.backend, "variant": self.spec.variant,
+               "bank_shape": list(self.bank_shape),
+               "nbytes": self.nbytes,
+               "approx_count": self.approx_count()}
+        if self.spec.is_fingerprint:
+            lf = np.atleast_1d(np.asarray(self.load_factor(), np.float64))
+            fails = np.atleast_1d(np.asarray(self.state, np.int64))
+            out["load_factor"] = float(lf.max())
+            out["insert_failures"] = int(fails.sum())
+        else:
+            out["fill_fraction"] = self.fill_fraction()
+        if self.engine.supports_advance and self.state is not None:
+            heads = np.atleast_1d(np.asarray(self.state, np.int64))
+            out["generations"] = int(self.options.generations)
+            out["head"] = (heads.reshape(-1).tolist() if self.bank_shape
+                           else int(heads[0]))
+        return out
+
     def approx_count(self) -> float:
         """Estimated number of distinct keys inserted. Fingerprint
         filters count occupied slots exactly (minus failed inserts);

@@ -112,16 +112,20 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def save_filter(ckpt_dir: str, step: int, filt, *, sync: bool = True,
-                keep: int = 3):
+                keep: int = 3, extra: Optional[Dict] = None):
     """Checkpoint a ``repro.api.Filter`` in engine-independent form.
 
     The dense word array is the only array leaf (banks keep their leading
     bank dims on it); spec + engine name + bank shape + ring geometry
     travel in the manifest's ``extra`` metadata, so ``restore_filter`` can
-    rebuild on any engine (filter migration across deployment shapes)."""
+    rebuild on any engine (filter migration across deployment shapes).
+    ``extra`` adds caller metadata (JSON-able) to the manifest — the
+    service subsystem records its replay cursor there, read back via
+    :func:`manifest_extra`."""
     state = filt.to_state()
-    extra = {"filter_spec": state["spec"],
-             "filter_backend": state["backend"]}
+    extra = dict(extra or {})
+    extra.update({"filter_spec": state["spec"],
+                  "filter_backend": state["backend"]})
     if "bank_shape" in state:
         extra["filter_bank_shape"] = state["bank_shape"]
     if "options" in state:
@@ -132,6 +136,18 @@ def save_filter(ckpt_dir: str, step: int, filt, *, sync: bool = True,
         # operational state and rides along as a second leaf
         leaves["filter_state"] = state["engine_state"]
     return save(ckpt_dir, step, leaves, sync=sync, keep=keep, extra=extra)
+
+
+def manifest_extra(ckpt_dir: str, step: Optional[int] = None) -> Dict:
+    """The ``extra`` metadata of a checkpoint's manifest (latest step by
+    default) — caller metadata stored by ``save``/``save_filter``."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)["extra"]
 
 
 def restore_filter(ckpt_dir: str, *, step: Optional[int] = None,

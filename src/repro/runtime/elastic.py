@@ -9,6 +9,7 @@ absorb the size change — the standard elastic-DP design point).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable
 
 import jax
@@ -27,3 +28,47 @@ def validate_elastic_transition(old_mesh: Mesh, new_mesh: Mesh,
     """Data axes may change freely; the model axis must keep its extent
     (param shards stay aligned; only DP replication changes)."""
     return old_mesh.shape[model_axis] == new_mesh.shape[model_axis]
+
+
+# -- filter banks -------------------------------------------------------------
+# The serving analog of the elastic-DP design point above: a FilterBank's
+# *bank axis* plays the data axis's role (members are independent, so any
+# placement of whole members is semantics-preserving), while member
+# geometry (the words trailing dims) is the "model axis" that must never
+# split. Lose a pod -> restore the bank checkpoint on the survivors; get
+# it back -> reshard onto the larger mesh. Wired into the live path by
+# ``repro.service.resharding.reshard_service``.
+
+def validate_bank_transition(bank: int, old_mesh: Mesh, new_mesh: Mesh,
+                             axis: str = "data") -> bool:
+    """A bank move is legal when whole members divide evenly over BOTH
+    mesh extents (members never split across devices)."""
+    return (bank % old_mesh.shape[axis] == 0
+            and bank % new_mesh.shape[axis] == 0)
+
+
+def filter_bank_shardings(filt, mesh: Mesh, axis: str = "data"):
+    """Shardings pytree for a 1-D :class:`repro.api.Filter` bank: the bank
+    axis maps onto ``axis``, member word dims (and per-member traced
+    state) replicate within a shard. Feed to :func:`reshard_state` or
+    ``checkpoint.restore(shardings=...)``."""
+    if len(filt.bank_shape) != 1:
+        raise ValueError(f"bank shardings need a 1-D bank; "
+                         f"bank_shape={filt.bank_shape}")
+    if filt.bank_shape[0] % mesh.shape[axis] != 0:
+        raise ValueError(
+            f"bank size {filt.bank_shape[0]} does not divide over mesh "
+            f"axis {axis!r} ({mesh.shape[axis]} devices)")
+    def shard_for(x):
+        return NamedSharding(mesh, P(axis, *([None] * (x.ndim - 1))))
+    return jax.tree.map(shard_for, filt)
+
+
+def reshard_filter_bank(filt, mesh: Mesh, axis: str = "data"):
+    """device_put a filter bank's members over a (new) mesh — the
+    worker-lost / worker-returned move. The words are untouched, only
+    their placement changes; combined with ``checkpoint.restore_filter``
+    this is the crash-recovery path onto a different topology."""
+    filt = filt.replace(options=dataclasses.replace(
+        filt.options, mesh=mesh, axis=axis))
+    return reshard_state(filt, filter_bank_shardings(filt, mesh, axis))

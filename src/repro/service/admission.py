@@ -1,0 +1,155 @@
+"""Admission control: bounded queues, per-tenant quotas, health shedding.
+
+The service's contract with its callers is *bounded* degradation: when
+traffic exceeds what the filters can absorb, requests are refused at the
+door (cheap, explicit, counted) instead of queuing without bound (latency
+collapse) or silently corrupting filter state (a cuckoo table pushed past
+its achievable load factor starts failing inserts — the keys are simply
+not stored).
+
+Three gates, applied in order to every submission batch:
+
+* **health** (write ops only): a bank member flagged unhealthy sheds its
+  ``add`` traffic. Bloom-family members are unhealthy above a fill-fraction
+  threshold (FPR grows without bound as fill -> 1); fingerprint members are
+  unhealthy above a load-factor threshold or when their traced
+  ``insert_failures`` counter grew since the last health refresh — the
+  filter itself is telling us inserts are being dropped. Reads are never
+  health-shed: a saturated filter still answers ``contains`` correctly
+  (its FPR is degraded, not its completeness).
+* **quota**: per-tenant cap on *pending* (queued, unflushed) requests, so
+  one hot tenant cannot occupy the whole batch pipeline.
+* **queue**: global bound on total pending requests across all ops.
+
+All decisions are pure functions of (policy, tenant ids, pending counts,
+health flags) evaluated in FIFO order — deterministic, so a replayed
+request stream sheds identically (the recovery bit-exactness invariant,
+DESIGN.md §14). Health flags refresh lazily every ``health_every`` flushes
+(reading fill/load syncs with the device; per-request reads would stall
+the pipeline) and are part of the service's checkpointed cursor state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+SHED_REASONS = ("health", "quota", "queue")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Static admission knobs (all thresholds inclusive-shed)."""
+
+    queue_limit: int = 1 << 14         # max total pending requests
+    tenant_quota: Optional[int] = None  # max pending per tenant (None = off)
+    shed_fill: float = 0.95            # Bloom-family: shed adds above this
+    shed_load: float = 0.95            # fingerprint: shed adds above this
+    shed_on_insert_failures: bool = True   # cuckoo: shed when failures grow
+    health_every: int = 8              # flushes between health refreshes
+
+
+def _rank_within(ids: np.ndarray) -> np.ndarray:
+    """rank[i] = number of occurrences of ids[i] in ids[:i] (stable)."""
+    n = ids.shape[0]
+    order = np.argsort(ids, kind="stable")
+    sorted_ids = ids[order]
+    starts = np.searchsorted(sorted_ids, sorted_ids, side="left")
+    rank = np.empty(n, np.int64)
+    rank[order] = np.arange(n) - starts
+    return rank
+
+
+def member_fill(filt) -> np.ndarray:
+    """Per-member fill fraction of a bank's canonical bit view, shape (B,).
+
+    ``Filter.fill_fraction`` aggregates the whole bank; admission needs the
+    worst member, not the average — one saturated tenant must not hide
+    behind seven empty ones."""
+    dense = np.asarray(filt.dense_words())          # bank_shape + (n_words,)
+    dense = dense.reshape(filt.bank_size, -1)
+    bits = np.unpackbits(dense.view(np.uint8), axis=-1)
+    return bits.mean(axis=-1)
+
+
+class AdmissionController:
+    """Mutable admission state for one service: health flags + shed counts.
+
+    ``snapshot_state``/``restore_state`` round-trip everything a replayed
+    stream's decisions depend on (the measurement counters ride along for
+    continuity of dashboards, but only ``unhealthy``/``_seen_failures``
+    are semantically load-bearing)."""
+
+    def __init__(self, policy: AdmissionPolicy, n_tenants: int):
+        self.policy = policy
+        self.n_tenants = int(n_tenants)
+        self.unhealthy = np.zeros(self.n_tenants, bool)
+        self._seen_failures = np.zeros(self.n_tenants, np.int64)
+        self.shed_counts: Dict[str, int] = {r: 0 for r in SHED_REASONS}
+        self.admitted = 0
+
+    # -- health ---------------------------------------------------------------
+    def refresh(self, filt) -> None:
+        """Re-derive per-member health flags from the live filter."""
+        p = self.policy
+        if filt.spec.is_fingerprint:
+            load = np.atleast_1d(np.asarray(filt.load_factor(), np.float64))
+            flags = load >= p.shed_load
+            if p.shed_on_insert_failures:
+                fails = np.atleast_1d(
+                    np.asarray(filt.state, np.int64)).reshape(-1)
+                flags = flags | (fails > self._seen_failures)
+                self._seen_failures = fails.copy()
+        else:
+            flags = member_fill(filt) >= p.shed_fill
+        self.unhealthy = flags.reshape(-1).astype(bool)
+
+    # -- the gate -------------------------------------------------------------
+    def admit_many(self, op: str, tenants: np.ndarray, pending_total: int,
+                   pending_per_tenant: np.ndarray) -> np.ndarray:
+        """FIFO-order admission for one submission batch; returns an
+        accept mask (n,) bool and updates the shed counters."""
+        p = self.policy
+        tenants = np.asarray(tenants, np.int64)
+        ok = np.ones(tenants.shape[0], bool)
+        if op in ("add", "remove") and self.unhealthy.any():
+            bad = self.unhealthy[tenants] & (op == "add")
+            self.shed_counts["health"] += int(bad.sum())
+            ok &= ~bad
+        if p.tenant_quota is not None:
+            rank = np.full(tenants.shape[0], np.iinfo(np.int64).max)
+            rank[ok] = _rank_within(tenants[ok])
+            over = ok & (pending_per_tenant[tenants] + rank
+                         >= p.tenant_quota)
+            self.shed_counts["quota"] += int(over.sum())
+            ok &= ~over
+        free = max(p.queue_limit - pending_total, 0)
+        idx = np.cumsum(ok) - 1          # running index among accepted
+        over_q = ok & (idx >= free)
+        self.shed_counts["queue"] += int(over_q.sum())
+        ok &= ~over_q
+        self.admitted += int(ok.sum())
+        return ok
+
+    @property
+    def shed_total(self) -> int:
+        return sum(self.shed_counts.values())
+
+    # -- checkpoint cursor ----------------------------------------------------
+    def snapshot_state(self) -> dict:
+        return {"unhealthy": self.unhealthy.astype(int).tolist(),
+                "seen_failures": self._seen_failures.tolist(),
+                "shed_counts": dict(self.shed_counts),
+                "admitted": self.admitted}
+
+    def restore_state(self, state: dict) -> None:
+        self.unhealthy = np.asarray(state["unhealthy"], bool)
+        self._seen_failures = np.asarray(state["seen_failures"], np.int64)
+        self.shed_counts = {r: int(state["shed_counts"].get(r, 0))
+                            for r in SHED_REASONS}
+        self.admitted = int(state["admitted"])
+        if self.unhealthy.shape[0] != self.n_tenants:
+            raise ValueError(
+                f"admission snapshot covers {self.unhealthy.shape[0]} "
+                f"tenants; this service has {self.n_tenants}")

@@ -1,0 +1,295 @@
+"""Streaming front end: request accumulation into fixed-shape device batches.
+
+The serving problem the bulk benchmarks don't answer: requests arrive one
+at a time (or in small bursts), but the engines want large fixed-shape
+batches — retracing per batch size would destroy latency, and tiny
+launches destroy throughput. The front end bridges the two:
+
+* **Accumulate**: ``submit``/``submit_many`` append admitted requests to a
+  per-op FIFO (one queue per op class so ``add``/``contains``/``remove``
+  each compile to their own stable executable).
+* **Flush on size or deadline**: a queue flushes as soon as it holds
+  ``max_batch`` requests (size trigger, throughput path) or when its
+  oldest request has waited ``flush_deadline`` (deadline trigger via
+  ``pump()``, tail-latency path).
+* **Pad to tile**: every flush executes the SAME static shape —
+  ``(max_batch, 2)`` keys + ``(max_batch,)`` tenants + a valid mask —
+  so there is exactly one compiled executable per op regardless of how
+  full the batch is. Padding slots carry ``valid=False`` (adds/removes
+  must mask: fingerprint and counting updates are not idempotent) and
+  their lookup results are discarded.
+* **Route by tenant**: requests address bank members by tenant id; the
+  flush issues the Filter API's routed bank ops (flat ``(keys, tenants)``
+  through ``route_by_id``-based scatter or the engines' native routed
+  kernels), so a whole mixed-tenant batch is ONE device launch on native
+  bank engines.
+
+The service is deliberately single-threaded and clock-parameterized: the
+replay harness drives it with the real clock for honest latency numbers,
+while the recovery driver drives it with a virtual step clock so a
+replayed stream makes bit-identical decisions (DESIGN.md §14).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.service.admission import AdmissionController, AdmissionPolicy
+
+OPS = ("add", "contains", "remove")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    max_batch: int = 256               # static flush shape (pad-to-tile)
+    flush_deadline: Optional[float] = 2e-3   # seconds on the service clock
+    admission: AdmissionPolicy = AdmissionPolicy()
+
+
+class _Pending:
+    """One op's FIFO accumulator (columnar numpy, appended per submission)."""
+
+    def __init__(self):
+        self.keys: List[np.ndarray] = []      # (n_i, 2) uint32 chunks
+        self.tenants: List[np.ndarray] = []   # (n_i,) int32
+        self.t_enq: List[np.ndarray] = []     # (n_i,) float64 service clock
+        self.seq: List[np.ndarray] = []       # (n_i,) int64 ticket ids
+        self.count = 0
+
+    def append(self, keys, tenants, t_enq, seq):
+        self.keys.append(keys)
+        self.tenants.append(tenants)
+        self.t_enq.append(t_enq)
+        self.seq.append(seq)
+        self.count += keys.shape[0]
+
+    def take(self, n: int):
+        """Pop the n oldest requests (columnar concatenation, FIFO)."""
+        keys = np.concatenate(self.keys, axis=0)
+        tenants = np.concatenate(self.tenants)
+        t_enq = np.concatenate(self.t_enq)
+        seq = np.concatenate(self.seq)
+        head = (keys[:n], tenants[:n], t_enq[:n], seq[:n])
+        self.keys = [keys[n:]] if n < keys.shape[0] else []
+        self.tenants = [tenants[n:]] if n < keys.shape[0] else []
+        self.t_enq = [t_enq[n:]] if n < keys.shape[0] else []
+        self.seq = [seq[n:]] if n < keys.shape[0] else []
+        self.count -= head[0].shape[0]
+        return head
+
+    def oldest(self) -> float:
+        return float(self.t_enq[0][0])
+
+    def clear(self):
+        self.__init__()
+
+
+def service_keys(keys) -> np.ndarray:
+    """Normalize caller keys to host (n, 2) uint32 u64x2 pairs."""
+    keys = np.asarray(keys)
+    if keys.dtype == np.uint64:
+        from repro.core.hashing import u64x2_from_u64
+        keys = u64x2_from_u64(keys)
+    keys = np.asarray(keys, np.uint32)
+    if keys.ndim == 1:
+        keys = keys.reshape(1, 2)
+    if keys.ndim != 2 or keys.shape[-1] != 2:
+        raise ValueError(f"service keys must be (n, 2) u64x2 pairs or "
+                         f"uint64 (n,); got shape {keys.shape}")
+    return keys
+
+
+class FilterService:
+    """Batched streaming front end over one tenant :class:`FilterBank`.
+
+    The backing filter must be a 1-D bank (``make_filter_bank(T, ...)``;
+    ``T=1`` serves the single-tenant case) — every engine then takes the
+    same routed, valid-masked path, including the non-idempotent ones.
+
+    ``contains`` results are delivered through tickets: ``submit*`` returns
+    sequence ids (−1 for shed requests); after the flush that carries a
+    request executes, its boolean lands in :attr:`results` keyed by seq.
+    """
+
+    def __init__(self, filt, cfg: ServiceConfig = ServiceConfig(),
+                 clock: Callable[[], float] = time.perf_counter):
+        if len(filt.bank_shape) != 1:
+            raise ValueError(
+                "FilterService fronts a 1-D FilterBank (tenants = bank "
+                f"members); got bank_shape={filt.bank_shape} — build with "
+                "repro.api.make_filter_bank(n_tenants, ...)")
+        self.filt = filt
+        self.cfg = cfg
+        self.clock = clock
+        self.n_tenants = filt.bank_shape[0]
+        self.admission = AdmissionController(cfg.admission, self.n_tenants)
+        self.pending: Dict[str, _Pending] = {op: _Pending() for op in OPS}
+        self.pending_per_tenant = np.zeros(self.n_tenants, np.int64)
+        self.results: Dict[int, bool] = {}
+        self.latencies: Dict[str, List[float]] = {op: [] for op in OPS}
+        self.counters = {"submitted": 0, "flushes": 0, "size_flushes": 0,
+                         "deadline_flushes": 0, "flushed_ops": 0,
+                         "padded_slots": 0}
+        self._seq = 0
+        self._supports_remove = filt.engine.supports_remove
+
+    # -- intake ---------------------------------------------------------------
+    @property
+    def pending_total(self) -> int:
+        return sum(p.count for p in self.pending.values())
+
+    def submit(self, op: str, key, tenant: int = 0,
+               now: Optional[float] = None) -> int:
+        """Enqueue one request; returns its seq id, or −1 if shed."""
+        return int(self.submit_many(op, service_keys(key),
+                                    np.asarray([tenant]), now=now)[0])
+
+    def submit_many(self, op: str, keys, tenants, now: Optional[float] = None
+                    ) -> np.ndarray:
+        """Enqueue a FIFO burst of same-op requests; returns per-request
+        seq ids ((n,) int64, −1 where admission shed). Size-triggered
+        flushes happen inline, so a long burst drains as it arrives."""
+        if op not in OPS:
+            raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+        if op == "remove" and not self._supports_remove:
+            raise NotImplementedError(
+                f"backend {self.filt.backend!r} cannot remove keys; front "
+                f"the service with a counting or cuckoo bank")
+        keys = service_keys(keys)
+        tenants = np.asarray(tenants, np.int64).reshape(-1)
+        if keys.shape[0] != tenants.shape[0]:
+            raise ValueError(f"keys/tenants length mismatch: "
+                             f"{keys.shape[0]} vs {tenants.shape[0]}")
+        if tenants.size and (tenants.min() < 0
+                             or tenants.max() >= self.n_tenants):
+            raise ValueError(f"tenant ids must be in [0, {self.n_tenants}); "
+                             f"got range [{tenants.min()}, {tenants.max()}]")
+        now = self.clock() if now is None else now
+        self.counters["submitted"] += int(keys.shape[0])
+        ok = self.admission.admit_many(op, tenants, self.pending_total,
+                                       self.pending_per_tenant)
+        seqs = np.full(keys.shape[0], -1, np.int64)
+        n_ok = int(ok.sum())
+        if n_ok:
+            seqs[ok] = self._seq + np.arange(n_ok)
+            self._seq += n_ok
+            self.pending[op].append(
+                keys[ok].astype(np.uint32),
+                tenants[ok].astype(np.int32),
+                np.full(n_ok, now, np.float64), seqs[ok])
+            np.add.at(self.pending_per_tenant, tenants[ok], 1)
+            while self.pending[op].count >= self.cfg.max_batch:
+                self._flush_op(op, trigger="size")
+        return seqs
+
+    # -- flushing -------------------------------------------------------------
+    def pump(self, now: Optional[float] = None) -> int:
+        """Deadline sweep: flush every queue whose oldest request has aged
+        past ``flush_deadline``. Returns the number of flushes issued.
+        Call this from the serving loop's idle path."""
+        if self.cfg.flush_deadline is None:
+            return 0
+        now = self.clock() if now is None else now
+        n = 0
+        for op in OPS:
+            p = self.pending[op]
+            if p.count and now - p.oldest() >= self.cfg.flush_deadline:
+                while p.count:
+                    self._flush_op(op, trigger="deadline")
+                    n += 1
+        return n
+
+    def drain(self) -> int:
+        """Flush everything pending (checkpoint barrier / shutdown)."""
+        n = 0
+        for op in OPS:
+            while self.pending[op].count:
+                self._flush_op(op, trigger="deadline")
+                n += 1
+        return n
+
+    def _flush_op(self, op: str, trigger: str) -> None:
+        """Execute one fixed-shape batch of ``op`` (FIFO head, padded)."""
+        mb = self.cfg.max_batch
+        keys, tenants, t_enq, seq = self.pending[op].take(mb)
+        take = keys.shape[0]
+        kb = np.zeros((mb, 2), np.uint32)
+        tb = np.zeros((mb,), np.int32)
+        vb = np.zeros((mb,), bool)
+        kb[:take] = keys
+        tb[:take] = tenants
+        vb[:take] = True
+        kj, tj = jnp.asarray(kb), jnp.asarray(tb)
+        if op == "contains":
+            hits = self.filt.contains(kj, tenants=tj)
+            hits = np.asarray(hits)[:take]
+            self.results.update(zip(seq.tolist(), hits.tolist()))
+        elif op == "add":
+            self.filt = self.filt.add(kj, tenants=tj, valid=jnp.asarray(vb))
+            jax.block_until_ready(self.filt.words)
+        else:
+            self.filt = self.filt.remove(kj, tenants=tj,
+                                         valid=jnp.asarray(vb))
+            jax.block_until_ready(self.filt.words)
+        t_done = self.clock()
+        self.latencies[op].extend((t_done - t_enq).tolist())
+        np.subtract.at(self.pending_per_tenant, tenants, 1)
+        self.counters["flushes"] += 1
+        self.counters[f"{trigger}_flushes"] += 1
+        self.counters["flushed_ops"] += take
+        self.counters["padded_slots"] += mb - take
+        if self.counters["flushes"] % self.cfg.admission.health_every == 0:
+            self.admission.refresh(self.filt)
+
+    # -- results / observability ----------------------------------------------
+    def take_results(self) -> Dict[int, bool]:
+        out, self.results = self.results, {}
+        return out
+
+    def health(self) -> dict:
+        """Filter health + service counters, one dashboardable dict."""
+        out = self.filt.health()
+        out.update(self.counters)
+        out["pending"] = self.pending_total
+        out["admitted"] = self.admission.admitted
+        out["shed"] = dict(self.admission.shed_counts)
+        sub = self.counters["submitted"]
+        out["shed_rate"] = (self.admission.shed_total / sub) if sub else 0.0
+        return out
+
+    def all_latencies(self) -> np.ndarray:
+        return np.asarray([l for op in OPS for l in self.latencies[op]])
+
+    # -- recovery plumbing ----------------------------------------------------
+    def snapshot_state(self) -> dict:
+        """JSON-able cursor of everything a deterministic replay needs
+        besides the filter itself. Only meaningful at a flush barrier
+        (pending queues empty — ``drain()`` first); in-flight requests are
+        deliberately NOT checkpointed, they are re-fed by replay."""
+        if self.pending_total:
+            raise RuntimeError(
+                f"snapshot_state() at a non-barrier: {self.pending_total} "
+                f"requests pending — drain() first")
+        return {"seq": self._seq, "counters": dict(self.counters),
+                "admission": self.admission.snapshot_state()}
+
+    def restore_state(self, filt, state: dict) -> None:
+        """Install a checkpointed filter + cursor; pending queues reset
+        (lost in-flight requests are the stream replayer's to re-feed)."""
+        if tuple(filt.bank_shape) != tuple(self.filt.bank_shape):
+            raise ValueError(
+                f"restored bank shape {filt.bank_shape} != service bank "
+                f"shape {self.filt.bank_shape}")
+        self.filt = filt
+        self._seq = int(state["seq"])
+        self.counters = {k: int(v) for k, v in state["counters"].items()}
+        self.admission.restore_state(state["admission"])
+        for p in self.pending.values():
+            p.clear()
+        self.pending_per_tenant[:] = 0
+        self.results = {}

@@ -1,0 +1,106 @@
+"""Background maintenance: generation/decay ticks and periodic checkpoints.
+
+A long-lived filter service is maintained state, not a build-once artifact
+(the feature-complete-GPU-filters literature's operating model): windowed
+banks must ``advance()`` on a cadence or the window stops sliding, counting
+banks must ``decay()`` or they saturate, and everything must checkpoint or
+a worker loss is unrecoverable.
+
+The loop is *cooperative*: the serving driver calls :meth:`tick` once per
+stream step. Cadences count ticks (not wall time), so a replayed stream
+re-issues exactly the same maintenance ops at the same points — aging is
+part of filter state, so nondeterministic aging would break recovery
+bit-exactness.
+
+Checkpoints are **flush barriers**: the service drains before the filter
+is snapshotted, so a checkpoint is always a clean prefix of the request
+stream — restore + re-feed from the cursor reproduces the lost state
+exactly (DESIGN.md §14 recovery invariants). The write itself is async by
+default (snapshot-to-host first, background thread after — the
+``repro.checkpoint`` machinery), so serving continues while the bytes
+land.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenanceConfig:
+    advance_every: Optional[int] = None    # ticks between window advances
+    decay_every: Optional[int] = None      # ticks between counting decays
+    checkpoint_every: Optional[int] = None  # ticks between checkpoints
+    ckpt_dir: Optional[str] = None
+    async_checkpoint: bool = True
+    keep: int = 3
+
+
+class MaintenanceLoop:
+    """Tick-driven maintenance over one :class:`FilterService`."""
+
+    def __init__(self, cfg: MaintenanceConfig):
+        if cfg.checkpoint_every is not None and cfg.ckpt_dir is None:
+            raise ValueError("checkpoint_every set but no ckpt_dir")
+        self.cfg = cfg
+        self.events: List[dict] = []
+        self._ticks = 0
+        self._pending_save = None
+
+    def tick(self, service, step: int) -> None:
+        """One maintenance step (call after each stream step). ``step`` is
+        the NEXT stream step to execute — the value a restore resumes at —
+        and is what checkpoints are labeled with."""
+        self._ticks += 1
+        cfg = self.cfg
+        if cfg.advance_every and self._ticks % cfg.advance_every == 0:
+            service.drain()     # inserts racing an advance would straddle
+            service.filt = service.filt.advance()   # age classes
+            self.events.append({"kind": "advance", "step": step})
+        if cfg.decay_every and self._ticks % cfg.decay_every == 0:
+            service.drain()
+            service.filt = service.filt.decay()
+            self.events.append({"kind": "decay", "step": step})
+        if cfg.checkpoint_every and self._ticks % cfg.checkpoint_every == 0:
+            self.checkpoint(service, step)
+
+    def checkpoint(self, service, step: int) -> None:
+        """Flush-barrier checkpoint: drain, snapshot filter + cursors."""
+        service.drain()
+        self.wait()             # at most one async write in flight
+        extra = {"service": service.snapshot_state(),
+                 "maintenance": self.snapshot_state()}
+        self._pending_save = ckpt.save_filter(
+            self.cfg.ckpt_dir, step, service.filt,
+            sync=not self.cfg.async_checkpoint, keep=self.cfg.keep,
+            extra=extra)
+        self.events.append({"kind": "checkpoint", "step": step})
+
+    def wait(self) -> None:
+        if self._pending_save is not None:
+            self._pending_save.join()
+            self._pending_save = None
+
+    # -- recovery plumbing ----------------------------------------------------
+    def snapshot_state(self) -> dict:
+        return {"ticks": self._ticks}
+
+    def restore_state(self, state: dict) -> None:
+        self._ticks = int(state["ticks"])
+
+
+def restore_service(service, maintenance: Optional[MaintenanceLoop],
+                    ckpt_dir: str, step: Optional[int] = None) -> int:
+    """Restore a service (and its maintenance cursors) from the newest —
+    or an explicit — flush-barrier checkpoint; returns the stream step to
+    resume at. The restored filter lands on the engine that wrote it."""
+    if maintenance is not None:
+        maintenance.wait()
+    saved_step, filt = ckpt.restore_filter(ckpt_dir, step=step)
+    extra = ckpt.manifest_extra(ckpt_dir, step=saved_step)
+    service.restore_state(filt, extra["service"])
+    if maintenance is not None and "maintenance" in extra:
+        maintenance.restore_state(extra["maintenance"])
+    return saved_step

@@ -1,0 +1,92 @@
+"""Live bank resharding: grow the tenant layout and move state across meshes.
+
+Two elastic events a production bank must survive without losing filter
+state or serving a false negative:
+
+* **A tenant population outgrows the bank** — new tenants need members, or
+  hot tenants need to split across more members. :func:`grow_bank` rebuilds
+  the bank layout in place: existing members keep their words (and traced
+  state) verbatim, new members start empty. Because members are
+  independent filters, growth is exact — no rehash, no FPR change for
+  existing tenants.
+* **The mesh changes under a sharded bank** — a worker is lost (shrink) or
+  returns (grow). The words themselves don't change, only their placement:
+  :func:`repro.runtime.elastic.reshard_filter_bank` device_puts the bank
+  axis over the new mesh (bank-aware shardings from
+  ``filter_bank_shardings``), and the checkpoint subsystem covers the
+  crash path — ``restore_filter`` onto the new mesh, then reshard
+  (exercised by tests/test_elastic.py).
+
+:func:`reshard_service` is the live entry point: drain (a flush barrier —
+in-flight batches must not straddle two layouts), rebuild, and swap the
+service's filter + admission state atomically from the caller's view.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.service.admission import AdmissionController
+
+
+def grow_bank(filt, new_bank: int):
+    """Grow a 1-D bank to ``new_bank`` members; returns the new Filter.
+
+    Members ``[0, B)`` carry over bit-exactly (words AND traced state —
+    ring heads, cuckoo failure counters); members ``[B, new_bank)`` are
+    empty. Single-host engines only: a mesh-sharded bank reshapes through
+    ``reshard_filter_bank`` / checkpoint restore instead (its words
+    placement is mesh-defined)."""
+    if len(filt.bank_shape) != 1:
+        raise ValueError(f"grow_bank needs a 1-D bank; "
+                         f"bank_shape={filt.bank_shape}")
+    B = filt.bank_shape[0]
+    if new_bank < B:
+        raise ValueError(
+            f"cannot shrink a bank {B} -> {new_bank}: member filters hold "
+            f"live keys; retire tenants by select()/scatter_update instead")
+    if filt.options.mesh is not None:
+        raise ValueError("grow_bank is single-host; reshard mesh-sharded "
+                         "banks via runtime.elastic.reshard_filter_bank")
+    if new_bank == B:
+        return filt
+    pad = new_bank - B
+    words = jnp.concatenate(
+        [filt.words, jnp.zeros((pad,) + filt.words.shape[1:],
+                               filt.words.dtype)], axis=0)
+    state = filt.state
+    if state is not None:
+        fresh = filt.engine.init_state(filt.spec, filt.options)
+        state = jnp.concatenate(
+            [state, jnp.broadcast_to(fresh, (pad,) + fresh.shape)], axis=0)
+    return filt.replace(words=words, state=state)
+
+
+def reshard_service(service, *, bank: Optional[int] = None, mesh=None,
+                    axis: str = "data") -> None:
+    """Rebuild the service's bank layout live (drain-barrier semantics).
+
+    ``bank=B2`` grows the tenant axis; ``mesh=`` moves a (shardable) bank
+    onto a new mesh via the elastic path. Admission state is rebuilt for
+    the new tenant count: existing tenants keep their health flags, new
+    tenants start healthy."""
+    service.drain()
+    filt = service.filt
+    if bank is not None:
+        filt = grow_bank(filt, bank)
+    if mesh is not None:
+        from repro.runtime.elastic import reshard_filter_bank
+        filt = reshard_filter_bank(filt, mesh, axis=axis)
+    old = service.admission
+    service.filt = filt
+    service.n_tenants = filt.bank_shape[0]
+    ctl = AdmissionController(old.policy, service.n_tenants)
+    n_keep = min(old.n_tenants, service.n_tenants)
+    ctl.unhealthy[:n_keep] = old.unhealthy[:n_keep]
+    ctl._seen_failures[:n_keep] = old._seen_failures[:n_keep]
+    ctl.shed_counts = dict(old.shed_counts)
+    ctl.admitted = old.admitted
+    service.admission = ctl
+    service.pending_per_tenant = np.zeros(service.n_tenants, np.int64)

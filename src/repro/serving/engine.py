@@ -47,13 +47,23 @@ class Engine:
 
     def stats(self) -> Dict[str, float]:
         """Serving-health counters; guard filter health via the Filter API
-        (fill fraction drives when to rotate the repetition filter)."""
+        (``Filter.health()`` — fill drives when to rotate the repetition
+        filter, cuckoo ``insert_failures``/windowed ring counters surface
+        the engine-specific failure modes)."""
         out: Dict[str, float] = {}
         if self.guard is not None:
             out["guard_observed"] = float(self.guard.stats.observed)
             out["guard_penalized"] = float(self.guard.stats.penalized)
-            out["guard_fill"] = self.guard.filt.fill_fraction()
-            out["guard_approx_ngrams"] = self.guard.filt.approx_count()
+            h = self.guard.filt.health()
+            if "fill_fraction" in h:
+                out["guard_fill"] = h["fill_fraction"]
+            if "load_factor" in h:
+                out["guard_load_factor"] = h["load_factor"]
+                out["guard_insert_failures"] = float(h["insert_failures"])
+            if "head" in h:
+                out["guard_generations"] = float(h["generations"])
+                out["guard_head"] = float(np.max(h["head"]))
+            out["guard_approx_ngrams"] = h["approx_count"]
         return out
 
     def generate(self, requests: List[Request]) -> List[List[int]]:

@@ -1,0 +1,38 @@
+"""Latency-percentile helpers in benchmarks.common (pure-numpy units)."""
+import numpy as np
+import pytest
+
+from benchmarks.common import latency_summary, percentile
+
+
+def test_percentile_nearest_rank_is_an_observed_sample():
+    samples = np.arange(1, 101, dtype=float)          # 1..100
+    assert percentile(samples, 50) == 50.0
+    assert percentile(samples, 99) == 99.0
+    assert percentile(samples, 99.9) == 100.0
+    assert percentile(samples, 100) == 100.0
+    assert percentile(samples, 0) == 1.0
+    # nearest-rank never interpolates: the result is always in the set
+    rng = np.random.RandomState(0)
+    s = rng.exponential(size=997)
+    for q in (50, 90, 99, 99.9):
+        assert percentile(s, q) in s
+
+
+def test_percentile_small_and_unsorted():
+    assert percentile([5.0], 99.9) == 5.0
+    assert percentile([3.0, 1.0, 2.0], 50) == 2.0
+    with pytest.raises(ValueError):
+        percentile([], 50)
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+
+
+def test_latency_summary_units_and_keys():
+    s = latency_summary([1e-3, 2e-3, 3e-3])           # seconds -> us
+    assert s["n"] == 3
+    assert s["p50"] == pytest.approx(2000.0)
+    assert s["max"] == pytest.approx(3000.0)
+    assert s["mean"] == pytest.approx(2000.0)
+    assert set(s) == {"n", "p50", "p99", "p999", "mean", "max"}
+    assert latency_summary([2.0], unit=1.0)["p999"] == 2.0
