@@ -1,4 +1,5 @@
-"""Iso-error AMQ comparison: sbf vs counting vs cuckoo at MATCHED FPR.
+"""Iso-error AMQ comparison: sbf vs counting vs cuckoo vs quotient at
+MATCHED FPR.
 
 The question the related fingerprint-filter work poses to this repo's
 Bloom designs ("High-Performance Filters for GPUs"; "Cuckoo-GPU"): at the
@@ -7,12 +8,15 @@ many storage bits per key does each family pay?
 
 Method: for each target FPR, every family is sized by the inverse of its
 own analytic error model (``space_optimal_c`` for the Bloom families,
-``fingerprint.spec_for_n`` at load factor <= 0.95 for the cuckoo filter),
+``fingerprint.spec_for_n`` at load factor <= 0.95 for the cuckoo filter,
+``quotient.spec_for_n`` at load factor <= 0.9 for the quotient filter),
 loaded with the same n keys, timed through the same ``Filter`` API calls,
 and its empirical FPR is measured against the reserved probe keyspace —
 the "iso-error" in the name is verified, not assumed. Storage is actual
-backing bytes (the counting filter's 4x expansion and the cuckoo filter's
-load-factor overhead both show up honestly).
+backing bytes (the counting filter's 4x expansion and the fingerprint
+families' load-factor overhead both show up honestly). The quotient
+column is what the other three buy NO structural headroom for: it is the
+only family here with lossless in-place resize and same-spec merge.
 
 Off-TPU the timings are jnp / interpret schedule costs (like every other
 bench here); the bits-per-key and measured-FPR columns are
@@ -25,7 +29,7 @@ import numpy as np
 from benchmarks.common import Csv, keys_u64x2, time_fn
 from repro import api
 
-FAMILIES = ("sbf", "countingbf", "cuckoo")
+FAMILIES = ("sbf", "countingbf", "cuckoo", "quotient")
 
 
 def _fmt_fpr(fpr: float) -> str:
@@ -53,7 +57,7 @@ def run_point(csv: Csv, n: int, target_fpr: float, n_probe: int) -> None:
             csv.add(f"{tag}/{family}/remove", t_rm * 1e6,
                     f"Mkeys/s={n/t_rm/1e6:.2f}", n_ops=n)
         extra = ""
-        if family == "cuckoo":
+        if family in ("cuckoo", "quotient"):
             extra = (f" load={loaded.load_factor():.2f}"
                      f" fails={int(loaded.insert_failures)}")
         csv.add(f"{tag}/{family}/space", 0.0,

@@ -14,8 +14,8 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
                      decay) — beyond-paper
     bank          -> FilterBank: banked vs looped multi-tenant throughput,
                      routed tenant streams, guard/dedup consumers
-    amq_compare   -> iso-error AMQ baseline: sbf vs counting vs cuckoo
-                     throughput + bits/key at matched measured FPR
+    amq_compare   -> iso-error AMQ baseline: sbf vs counting vs cuckoo vs
+                     quotient throughput + bits/key at matched measured FPR
     replay        -> service traffic replay: streamed zipfian request mix
                      through the batched front end (latency percentiles,
                      Mops/s, shed rate, recovery drill) — beyond-paper

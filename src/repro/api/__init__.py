@@ -53,7 +53,7 @@ def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
                 axis: str = "data", capacity: Optional[int] = None,
                 generations: Optional[int] = None,
                 slot_bits: int = 8, slots_per_bucket: int = 4,
-                impl: Optional[str] = None) -> Filter:
+                r_bits: int = 0, impl: Optional[str] = None) -> Filter:
     """Build an empty :class:`Filter` for an explicit geometry.
 
     ``backend="auto"`` runs the registry's ranked query (pass ``mesh=`` to
@@ -62,13 +62,15 @@ def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
     (``remove``/``decay``); ``generations=G`` selects the windowed engine
     (``advance``); ``variant="cuckoo"`` selects the fingerprint engine
     (``remove`` at ~1x storage, ``slot_bits``/``slots_per_bucket``
-    geometry, ``impl`` pins its jnp vs Pallas path). Kernel knobs
-    (``layout``, ``tile``, ``probe``, ``depth``) default to the
-    autotuner's plan (``core.tuning.tune_plan``); pass explicit values to
-    pin them."""
+    geometry, ``impl`` pins its jnp vs Pallas path);
+    ``variant="quotient"`` selects the counting quotient engine
+    (``remove`` + lossless ``merge``/``resize``; ``r_bits`` sets the
+    stored remainder width). Kernel knobs (``layout``, ``tile``,
+    ``probe``, ``depth``) default to the autotuner's plan
+    (``core.tuning.tune_plan``); pass explicit values to pin them."""
     spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
                       block_bits=block_bits, z=z, slot_bits=slot_bits,
-                      slots_per_bucket=slots_per_bucket)
+                      slots_per_bucket=slots_per_bucket, r_bits=r_bits)
     options = BackendOptions(layout=layout, tile=tile, probe=probe,
                              depth=depth, mesh=mesh, axis=axis,
                              capacity=capacity, generations=generations,
@@ -86,7 +88,7 @@ def make_filter_bank(bank, variant: str = "sbf", m_bits: int = 1 << 14,
                      axis: str = "data", capacity: Optional[int] = None,
                      generations: Optional[int] = None,
                      slot_bits: int = 8, slots_per_bucket: int = 4,
-                     impl: Optional[str] = None) -> Filter:
+                     r_bits: int = 0, impl: Optional[str] = None) -> Filter:
     """Build an empty :class:`Filter` **bank**: ``bank`` independent
     same-spec member filters behind one value, with the bank dims leading
     the words leaf.
@@ -107,7 +109,7 @@ def make_filter_bank(bank, variant: str = "sbf", m_bits: int = 1 << 14,
                          f"got {bank_shape}")
     spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
                       block_bits=block_bits, z=z, slot_bits=slot_bits,
-                      slots_per_bucket=slots_per_bucket)
+                      slots_per_bucket=slots_per_bucket, r_bits=r_bits)
     options = BackendOptions(layout=layout, tile=tile, probe=probe,
                              depth=depth, mesh=mesh, axis=axis,
                              capacity=capacity, generations=generations,
@@ -153,7 +155,19 @@ def filter_for_n_items(n: int, bits_per_key: float = 16.0,
     ``fingerprint.CUCKOO_MAX_LOAD`` (0.95) instead: the slot width comes
     from ``target_fpr`` when given (smallest u8/u16 meeting it), else from
     ``bits_per_key`` (u8 fits under ~12 bits/key, u16 above); pass
-    ``slot_bits=`` to pin it."""
+    ``slot_bits=`` to pin it. ``variant="quotient"`` sizes a quotient
+    table for ~n keys at load <= ``quotient.QUOTIENT_MAX_LOAD`` (0.90),
+    deriving the q/r split from ``target_fpr`` (pass ``slot_bits=`` to
+    pin the lane width)."""
+    if variant == "quotient":
+        from repro.core import quotient as Q
+        spec = Q.spec_for_n(n, target_fpr=target_fpr,
+                            slot_bits=kw.pop("slot_bits", None))
+        common = dict(m_bits=spec.m_bits, slot_bits=spec.slot_bits,
+                      r_bits=spec.r_bits, **kw)
+        if bank is not None:
+            return make_filter_bank(bank, variant="quotient", **common)
+        return make_filter(variant="quotient", **common)
     if variant == "cuckoo":
         from repro.core import fingerprint as F
         sb = kw.pop("slot_bits", None)
@@ -187,6 +201,8 @@ def filter_for_workload(n: int, target_fpr: float = 1e-3,
                         needs_remove: bool = False,
                         needs_decay: bool = False,
                         needs_count: bool = False,
+                        needs_merge: bool = False,
+                        needs_resize: bool = False,
                         bank=None, **kw) -> Filter:
     """Capability- and memory-aware ``"auto"``: pick the cheapest engine
     (by ``bits_per_key`` at ``target_fpr``, see ``registry.describe()``)
@@ -195,13 +211,17 @@ def filter_for_workload(n: int, target_fpr: float = 1e-3,
     The interesting crossover this encodes: ``needs_remove=True`` alone
     selects the cuckoo fingerprint engine (~f/0.95 bits/key) over the
     counting engine (4x the bit filter); adding ``needs_decay`` or
-    ``needs_count`` — capabilities only counters provide — flips it back."""
+    ``needs_count`` — capabilities only counters provide — flips it back;
+    adding ``needs_merge`` or ``needs_resize`` — union / grow-in-place,
+    which value slots can't OR — selects the quotient engine instead."""
     engine = registry.cheapest_engine(needs_remove=needs_remove,
                                       needs_decay=needs_decay,
                                       needs_count=needs_count,
+                                      needs_merge=needs_merge,
+                                      needs_resize=needs_resize,
                                       target_fpr=target_fpr)
-    variant = {"counting": "countingbf", "cuckoo": "cuckoo"}.get(engine,
-                                                                 "sbf")
+    variant = {"counting": "countingbf", "cuckoo": "cuckoo",
+               "quotient": "quotient"}.get(engine, "sbf")
     kw.setdefault("backend", "auto")   # the variant pins the engine family
     return filter_for_n_items(n, variant=variant, target_fpr=target_fpr,
                               bank=bank, **kw)

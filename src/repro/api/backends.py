@@ -409,10 +409,11 @@ class CuckooBackend(Backend):
 
     name = "cuckoo"
     supports_remove = True
+    supports_merge = False             # slots hold values, not OR-able bits
     stateful_ops = True
 
     def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
-        return (_single_host(ctx) and spec.is_fingerprint
+        return (_single_host(ctx) and spec.variant == "cuckoo"
                 and ctx.generations is None)
 
     def cost(self, spec: FilterSpec, ctx: SelectionContext) -> float:
@@ -479,8 +480,8 @@ class CuckooBackend(Backend):
         raise NotImplementedError(
             "cuckoo filters cannot be merged by elementwise union (slots "
             "hold fingerprint values, not OR-able bits); re-insert the "
-            "other filter's keys, or use a Bloom/counting variant when "
-            "union is required")
+            "other filter's keys, or use variant='quotient' (lossless "
+            "fingerprint merge) when union is required")
 
     # -- banks: vmapped scalar ops with REAL valid masks ---------------------
     # The base-class fill trick re-adds a key per padding slot — fatal for
@@ -513,6 +514,107 @@ class CuckooBackend(Backend):
             lambda w, k: self.contains(spec, w, k, options))(words, keys)
 
 
+class QuotientBackend(CuckooBackend):
+    """Counting quotient filter (variant='quotient'): p-bit fingerprints
+    split into a q-bit home slot and an r-bit stored remainder, with
+    three metadata bits (occupied/continuation/shifted) packing runs into
+    clusters. The ONLY engine combining ``remove`` with **lossless**
+    ``merge`` and ``resize``: the metadata makes every stored fingerprint
+    exactly recoverable, so union = decode both + rebuild, and resize =
+    re-split p = q + r at the new table size — no raw keys anywhere
+    (DESIGN.md §15). Capacity failures accumulate in the traced
+    ``Filter.insert_failures`` state leaf exactly like cuckoo's. Pallas
+    VMEM kernels on TPU (fused run-scan contains, sequential-ownership
+    decode+rebuild updates), jnp reference elsewhere — bit-identical by
+    construction. Banks: vmapped scalar ops with REAL valid masks
+    (fingerprint inserts are not idempotent)."""
+
+    name = "quotient"
+    supports_remove = True
+    supports_merge = True
+    supports_resize = True
+    stateful_ops = True
+
+    def supports(self, spec: FilterSpec, ctx: SelectionContext) -> bool:
+        return (_single_host(ctx) and spec.is_quotient
+                and ctx.generations is None)
+
+    def bits_per_key(self, target_fpr: float = None) -> Optional[float]:
+        """lane/0.9: the remainder meeting the target FPR at 0.90 load,
+        snapped up to the smallest u8/u16/u32 slot lane that holds it
+        (+3 metadata bits)."""
+        from repro.core import quotient as Q
+        t = target_fpr if target_fpr is not None else self.REF_FPR
+        if not 0.0 < t < 1.0:
+            raise ValueError(f"target_fpr must be in (0, 1): {t}")
+        r = Q.r_bits_for_fpr(t, 20)        # q barely moves the needle
+        for sb in V.QUOTIENT_SLOT_BITS:
+            if r <= sb - V.QF_META_BITS:
+                return sb / Q.QUOTIENT_MAX_LOAD
+        return None
+
+    def _update(self, spec, words, keys, options, state, valid, op):
+        from repro.core import quotient as Q
+        if self._use_kernels(spec, options):
+            from repro.kernels import ops
+            fn = ops.quotient_add if op == "add" else ops.quotient_remove
+        else:
+            fn = Q.quotient_add if op == "add" else Q.quotient_remove
+        new, flags = fn(spec, words, keys, valid=valid,
+                        tile=self._tile(options))
+        st = jnp.zeros((), jnp.uint32) if state is None else state
+        if op == "add":
+            st = st + jnp.sum(~flags).astype(jnp.uint32)
+        return new, st
+
+    def contains(self, spec, words, keys, options, state=None):
+        if self._use_kernels(spec, options):
+            from repro.kernels import ops
+            return ops.quotient_contains(
+                spec, words, keys,
+                tile=options.tile if options.tile else None)
+        from repro.core import quotient as Q
+        return Q.quotient_contains(spec, words, keys)
+
+    def merge(self, spec, a, b, options):
+        """Lossless union: decode both multisets, rebuild the canonical
+        layout — bit-identical to a table built from the concatenated key
+        streams. Eager (host-side) capacity check: overflow would silently
+        violate losslessness, so it is refused up front; banks merge
+        member-wise and every member must fit."""
+        from repro.core import quotient as Q
+        fa = a.reshape((-1, a.shape[-1]))
+        fb = b.reshape((-1, b.shape[-1]))
+        total = (Q.occupied_slots(spec, fa).astype(jnp.int32)
+                 + Q.occupied_slots(spec, fb).astype(jnp.int32))
+        worst = int(jnp.max(total))
+        cap = spec.n_slots - 1
+        if worst > cap:
+            raise ValueError(
+                f"quotient merge overflows: {worst} combined fingerprints "
+                f"> capacity {cap} of {spec}; resize() one side first")
+        out = jax.vmap(lambda x, y: Q.quotient_merge(spec, x, y))(fa, fb)
+        return out.reshape(a.shape)
+
+    def resize(self, spec, words, new_m_bits, options):
+        """(new_spec, new_words): re-split p = q + r at the new size and
+        re-home every stored fingerprint. Shrinks are refused (eagerly,
+        host-side) when any member stores more than the new capacity."""
+        from repro.core import quotient as Q
+        new_spec = Q.spec_for_resize(spec, int(new_m_bits))
+        flat = words.reshape((-1, words.shape[-1]))
+        if new_spec.n_slots < spec.n_slots:
+            worst = int(jnp.max(Q.occupied_slots(spec, flat)))
+            cap = new_spec.n_slots - 1
+            if worst > cap:
+                raise ValueError(
+                    f"cannot shrink {spec} to m_bits={new_m_bits}: a "
+                    f"member stores {worst} fingerprints > new capacity "
+                    f"{cap}")
+        out = jax.vmap(lambda w: Q.quotient_resize(spec, w, new_spec))(flat)
+        return new_spec, out.reshape(words.shape[:-1] + (new_spec.n_words,))
+
+
 def tuned_options(spec: FilterSpec, op: str = "contains",
                   regime: str = "auto", tile: int = None):
     """Pin a ``BackendOptions`` to the autotuner's plan for (spec, op).
@@ -540,3 +642,4 @@ def register_all():
     register(CountingBackend())
     register(WindowedBackend())
     register(CuckooBackend())
+    register(QuotientBackend())

@@ -261,8 +261,8 @@ class Filter:
         if not self.engine.supports_remove:
             raise NotImplementedError(
                 f"backend {self.backend!r} cannot remove keys; build the "
-                f"filter with variant='countingbf' (engine 'counting') or "
-                f"variant='cuckoo' (engine 'cuckoo', ~1x storage)")
+                f"filter with variant='countingbf' (engine 'counting'), "
+                f"variant='cuckoo' or variant='quotient' (~1x storage)")
         keys = as_keys(keys)
         if tenants is not None:
             self._check_routed(tenants)
@@ -311,6 +311,17 @@ class Filter:
                 f"with generations=G (engine 'windowed')")
         return _jit_advance(self)
 
+    def _check_merge_supported(self):
+        """Uniform up-front capability check: engines whose slots hold
+        values rather than OR-able bits (cuckoo) cannot union, and the
+        error should say so before any engine-deep dispatch."""
+        if not self.engine.supports_merge:
+            raise ValueError(
+                f"engine {self.backend!r} does not support merge(); the "
+                f"nearest deletable engine with lossless union is "
+                f"'quotient' (variant='quotient') — or rebuild from the "
+                f"combined key stream")
+
     def _merge_windowed(self, other: "Filter") -> jnp.ndarray:
         """Windowed merge: OR the other window's dense union into MY head
         generation. Rings can NOT be merged slot-by-slot — the heads
@@ -334,6 +345,7 @@ class Filter:
         (see :meth:`bank_merge`)."""
         if other.spec != self.spec:
             raise ValueError(f"cannot merge {other.spec} into {self.spec}")
+        self._check_merge_supported()
         if self.engine.supports_advance:
             # windowed self: regardless of the other engine, its dense
             # union lands in MY head generation — generation 0 (or any
@@ -373,12 +385,32 @@ class Filter:
                 f"bank_merge needs matching (spec, backend, bank_shape); "
                 f"got {other.spec}/{other.backend}/{other.bank_shape} vs "
                 f"{self.spec}/{self.backend}/{self.bank_shape}")
+        self._check_merge_supported()
         if self.engine.supports_advance:
             new = self._merge_windowed(other)
         else:
             new = self.engine.merge(self.spec, self.words, other.words,
                                     self.options)
         return self.replace(words=new)
+
+    def resize(self, new_m_bits: int) -> "Filter":
+        """Lossless capacity change (``supports_resize`` engines — the
+        quotient filter): every stored fingerprint re-homes into the new
+        geometry with the p = q + r split moved, NO raw keys needed.
+        Membership is exactly preserved; the FPR follows the analytic
+        curve at the new size. Banks resize member-wise (one shared new
+        spec); shrinks below any member's stored count raise. Returns a
+        new ``Filter`` — the failure-counter state carries over, so
+        escalation policies (service grow-in-place) keep their history."""
+        if not self.engine.supports_resize:
+            raise ValueError(
+                f"engine {self.backend!r} does not support resize(); the "
+                f"nearest engine with lossless grow-in-place is 'quotient' "
+                f"(variant='quotient') — other variants must be rebuilt "
+                f"from their key stream")
+        new_spec, new_words = self.engine.resize(
+            self.spec, self.words, int(new_m_bits), self.options)
+        return self.replace(spec=new_spec, words=new_words)
 
     # -- introspection -------------------------------------------------------
     def dense_words(self) -> jnp.ndarray:
@@ -406,8 +438,8 @@ class Filter:
         if not self.engine.stateful_ops:
             raise NotImplementedError(
                 f"backend {self.backend!r} has no insert-failure state; "
-                f"only fingerprint engines (variant='cuckoo') can fail an "
-                f"insert")
+                f"only fingerprint engines (variant='cuckoo'/'quotient') "
+                f"can fail an insert")
         return self.state
 
     def load_factor(self):
@@ -418,8 +450,12 @@ class Filter:
             raise NotImplementedError(
                 f"load_factor() is a fingerprint-filter metric; "
                 f"{self.spec.variant!r} filters report fill_fraction()")
-        from repro.core import fingerprint as F
-        lf = F.cuckoo_load_factor(self.spec, self.words)
+        if self.spec.is_quotient:
+            from repro.core import quotient as Q
+            lf = Q.quotient_load_factor(self.spec, self.words)
+        else:
+            from repro.core import fingerprint as F
+            lf = F.cuckoo_load_factor(self.spec, self.words)
         return float(lf) if not self.bank_shape else lf
 
     def health(self) -> dict:
@@ -456,6 +492,9 @@ class Filter:
         n̂ = -(M/k) · ln(1 − fill) with M the *total* bits across the
         bank (exact in expectation for the classical filter; a close
         upper-structure estimate for blocked variants)."""
+        if self.spec.is_quotient:
+            from repro.core import quotient as Q
+            return float(jnp.sum(Q.occupied_slots(self.spec, self.words)))
         if self.spec.is_fingerprint:
             from repro.core import fingerprint as F
             return float(jnp.sum(F.occupied_slots(self.spec, self.words)))

@@ -20,6 +20,8 @@ counting   packed 4-bit counters (remove/decay/count); sole countingbf owner
 windowed   generation-ring sliding window (advance); sole generations owner
 cuckoo     bucketed fingerprint filter (remove at ~1x storage); sole owner
            of variant="cuckoo" specs — Pallas kernels on TPU, jnp elsewhere
+quotient   counting quotient filter (remove + lossless merge/resize); sole
+           owner of variant="quotient" specs — Pallas on TPU, jnp elsewhere
 replicated  one replica per mesh device; local adds + butterfly OR merges
 sharded     block-range segments per device; all_to_all ownership routing
 ========== ==================================================================
@@ -94,6 +96,13 @@ class Backend:
     supports_advance: bool = False     # window slide (generation ring)
     supports_bank: bool = False        # native single-launch bank ops
     supports_count: bool = False       # per-key multiplicity estimates
+    # Structural capability flags. ``supports_merge`` defaults True (bit
+    # filters OR-union losslessly); value engines whose slots are not
+    # OR-able (cuckoo) opt OUT. ``supports_resize`` defaults False: only
+    # engines that can re-home their stored content into a different
+    # geometry without the raw keys (quotient) opt in.
+    supports_merge: bool = True        # same-spec union of two filters
+    supports_resize: bool = False      # lossless grow/shrink in place
 
     # Stateful engines: add/remove return ``(words, state)`` instead of
     # words alone — the second value is the traced per-filter state leaf
@@ -145,6 +154,8 @@ class Backend:
                 "supports_advance": self.supports_advance,
                 "supports_bank": self.supports_bank,
                 "supports_count": self.supports_count,
+                "supports_merge": self.supports_merge,
+                "supports_resize": self.supports_resize,
                 "bits_per_key_at_ref_fpr":
                     None if bpk is None else round(bpk, 2),
                 "ref_fpr": self.REF_FPR}
@@ -192,6 +203,15 @@ class Backend:
               options) -> jnp.ndarray:
         """OR-union of two same-shape word arrays (default: elementwise)."""
         return a | b
+
+    def resize(self, spec: FilterSpec, words: jnp.ndarray, new_m_bits: int,
+               options) -> Tuple[FilterSpec, jnp.ndarray]:
+        """Lossless capacity change: returns ``(new_spec, new_words)`` with
+        every stored element re-homed (``supports_resize`` engines only)."""
+        raise NotImplementedError(
+            f"engine {self.name!r} does not support resize(); use "
+            f"variant='quotient' (engine 'quotient') for lossless "
+            f"grow-in-place")
 
     # -- forgetting ops (counting / windowed engines only) -------------------
     def remove(self, spec: FilterSpec, words: jnp.ndarray, keys: jnp.ndarray,
@@ -360,7 +380,8 @@ def describe() -> Tuple[Dict[str, str], ...]:
 
 
 def cheapest_engine(needs_remove: bool = False, needs_decay: bool = False,
-                    needs_count: bool = False,
+                    needs_count: bool = False, needs_merge: bool = False,
+                    needs_resize: bool = False,
                     target_fpr: float = Backend.REF_FPR) -> str:
     """Rank registered engines by :meth:`Backend.bits_per_key` among those
     whose capability flags cover the required ops; returns the cheapest
@@ -370,7 +391,10 @@ def cheapest_engine(needs_remove: bool = False, needs_decay: bool = False,
     flags alone couldn't express: with ``needs_remove=True`` the cuckoo
     engine (~f/0.95 bits/key) beats the counting engine (4x the bit
     filter) unless per-key counts/decay are also required — exactly the
-    deletable-AMQ trade the fingerprint literature documents."""
+    deletable-AMQ trade the fingerprint literature documents. Adding
+    ``needs_merge=True`` or ``needs_resize=True`` rules cuckoo out and
+    selects the quotient engine — the only structure combining deletion
+    with lossless union and grow-in-place."""
     best = None
     for name in names():
         eng = get(name)
@@ -379,6 +403,10 @@ def cheapest_engine(needs_remove: bool = False, needs_decay: bool = False,
         if needs_decay and not eng.supports_decay:
             continue
         if needs_count and not eng.supports_count:
+            continue
+        if needs_merge and not eng.supports_merge:
+            continue
+        if needs_resize and not eng.supports_resize:
             continue
         try:
             bpk = eng.bits_per_key(target_fpr)
@@ -391,7 +419,8 @@ def cheapest_engine(needs_remove: bool = False, needs_decay: bool = False,
     if best is None:
         raise ValueError(
             f"no registered engine satisfies needs_remove={needs_remove}, "
-            f"needs_decay={needs_decay}, needs_count={needs_count} at "
+            f"needs_decay={needs_decay}, needs_count={needs_count}, "
+            f"needs_merge={needs_merge}, needs_resize={needs_resize} at "
             f"fpr {target_fpr:g}")
     return best[1]
 

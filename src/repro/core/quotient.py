@@ -1,0 +1,513 @@
+"""Counting quotient filter — pure-jnp reference semantics.
+
+The quotient filter (Bender et al.; the structure "High-Performance
+Filters for GPUs" builds its two-level GQF on) is the one AMQ in the repo
+that combines deletion with **lossless merge and resize**. A p-bit
+fingerprint splits into ``q`` quotient bits (the home slot in a
+``2^q``-slot table) and ``r`` remainder bits stored in the slot; three
+metadata bits per slot — is_occupied / is_continuation / is_shifted —
+encode how linear-probe displacement packed same-quotient *runs* into
+maximal *clusters*. Because the metadata makes every stored fingerprint
+exactly recoverable, ``merge`` is "decode both tables, rebuild from the
+union" and ``resize`` is "decode, re-split p = q + r at the new boundary,
+rebuild" — no raw keys anywhere (DESIGN.md §15).
+
+TPU adaptation (mirroring ``core.fingerprint``'s conventions):
+
+* the table is a flat ``(n_words,)`` uint32 array of ``n_slots`` slot
+  lanes, ``slot_bits`` (8/16/32) each, packed little-endian; the top three
+  lane bits are the metadata, the low ``r_bits`` the remainder;
+* the physical layout is a **pure function of the stored fingerprint
+  multiset**: bulk inserts decode the resident fingerprints, union them
+  with the (batch-ordered, capacity-gated) new ones and rebuild the
+  canonical layout with an all-vector scan — sort by rotated fingerprint,
+  ``pos_j = j + cummax(rq_j - j)`` for the displacement, one scatter.
+  This is the bulk-build schedule of the GPU quotient filters (and of the
+  PR-3 ownership model: one sequential owner per table, sort-then-place),
+  and it makes jnp and Pallas builds bit-identical *and* tile-size
+  independent;
+* wraparound is handled by the cycle lemma: with ``cnt[s]`` fingerprints
+  homed at slot s, any argmin of ``cumsum(cnt - 1)`` is empty in the
+  final layout, so building (and decoding) in coordinates rotated to
+  start just past an empty slot never sees a wrapped cluster. Capacity is
+  ``n_slots - 1`` — one slot always stays empty as the scan anchor;
+* duplicates occupy one slot each (the *counting* behavior: multiplicity
+  is multiset multiplicity), so adds/removes are NOT idempotent and bulk
+  ops take a ``valid`` mask for padding — never repeat-key padding;
+* an insert beyond capacity fails with an EXPLICIT per-key ``ok=False``
+  (first-come-first-served in batch order), never a silent drop.
+
+Every function is plain jnp/lax vector code, so the same helpers run
+inside Pallas kernel bodies (interpret or compiled) and under
+vmap/jit/scan — the single source of truth ``kernels.quotientfilter``
+validates against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing as H
+from repro.core.variants import (QF_META_BITS, QUOTIENT_SLOT_BITS,
+                                 FilterSpec, _log2i)
+
+QUOTIENT_ADD_TILE = 2048       # bulk-update chunk (decode + rebuild unit)
+QUOTIENT_MAX_LOAD = 0.90       # practical linear-probe load ceiling
+
+# fingerprint-stream salt: the same fixed member of the global salt table
+# the cuckoo filter uses for ITS fingerprint stream, inlined at trace time
+_FP_SALT = H.SALTS[0]
+
+# empty-slot sentinel for sorted fingerprint streams: > any p<=31-bit
+# fingerprint. A numpy scalar, NOT a jnp array — Pallas kernel bodies may
+# not capture array constants, numpy scalars inline as literals.
+_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def init(spec: FilterSpec) -> jnp.ndarray:
+    assert spec.is_quotient
+    return jnp.zeros((spec.n_words,), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Hashing + slot packing
+# ---------------------------------------------------------------------------
+
+def quotient_hashes(spec: FilterSpec, keys: jnp.ndarray) -> jnp.ndarray:
+    """(n,) uint32 p-bit fingerprints (p = q + r <= 31).
+
+    One hash stream yields the whole fingerprint; the quotient/remainder
+    split is pure bit arithmetic (``fp >> r`` / ``fp & (2^r - 1)``), which
+    is what makes resize a re-split rather than a re-hash."""
+    h1 = H.xxh32_u64x2(keys, H.SEED_PATTERN)
+    return H.mulshift(h1, _FP_SALT, spec.fingerprint_bits)
+
+
+def split_fp(spec: FilterSpec, fp: jnp.ndarray):
+    """fingerprint -> (home slot (n,) int32, remainder (n,) uint32)."""
+    r = spec.r_bits
+    return ((fp >> jnp.uint32(r)).astype(jnp.int32),
+            fp & jnp.uint32((1 << r) - 1))
+
+
+def unpack_slots(spec: FilterSpec, words: jnp.ndarray) -> jnp.ndarray:
+    """(..., n_words) packed words -> (..., n_slots) slot lanes.
+    Slot j lives in word ``j // slots_per_word``, lane ``j % slots_per_word``
+    (little-endian). The loop unrolls at trace time."""
+    sb, spw = spec.slot_bits, spec.slots_per_word
+    if spw == 1:
+        return words
+    mask = jnp.uint32((1 << sb) - 1)
+    lanes = [(words >> jnp.uint32(sb * j)) & mask for j in range(spw)]
+    return jnp.stack(lanes, axis=-1).reshape(*words.shape[:-1], -1)
+
+
+def pack_slots(spec: FilterSpec, lanes: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`unpack_slots`: (..., n_slots) -> (..., n_words)."""
+    sb, spw = spec.slot_bits, spec.slots_per_word
+    if spw == 1:
+        return lanes
+    x = lanes.reshape(*lanes.shape[:-1], -1, spw)
+    acc = x[..., 0]
+    for j in range(1, spw):
+        acc = acc | (x[..., j] << jnp.uint32(sb * j))
+    return acc
+
+
+def _meta_masks(spec: FilterSpec):
+    sb = spec.slot_bits
+    occ = jnp.uint32(1 << (sb - 1))
+    cont = jnp.uint32(1 << (sb - 2))
+    shift = jnp.uint32(1 << (sb - 3))
+    rem = jnp.uint32((1 << spec.r_bits) - 1)
+    return occ, cont, shift, rem
+
+
+def _fields(spec: FilterSpec, lanes: jnp.ndarray):
+    """Per-slot metadata bits + remainder. ``in_use`` is the emptiness
+    test: any metadata bit set (an element at its home slot carries
+    is_occupied; a displaced one carries is_shifted)."""
+    occ_m, cont_m, shift_m, rem_m = _meta_masks(spec)
+    occ = (lanes & occ_m) != 0
+    cont = (lanes & cont_m) != 0
+    shifted = (lanes & shift_m) != 0
+    in_use = occ | cont | shifted
+    return occ, cont, shifted, in_use, lanes & rem_m
+
+
+# ---------------------------------------------------------------------------
+# Decode: recover the stored fingerprint multiset from the layout
+# ---------------------------------------------------------------------------
+
+def _rotated(n: int, anchor, arr: jnp.ndarray) -> jnp.ndarray:
+    """View ``arr`` in scan coordinates starting just past ``anchor``
+    (kernel-safe: iota + take, no dynamic roll)."""
+    i = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    return jnp.take(arr, jnp.mod(i + anchor + 1, n), axis=0)
+
+
+def _decode_rotated(spec: FilterSpec, lanes: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(fingerprints (n_slots,) uint32, valid (n_slots,) bool) in rotated
+    scan order (arbitrary but deterministic; callers treat it as a
+    multiset).
+
+    The scan starts just past the first empty slot, so no cluster wraps:
+    run starts (in_use & ~continuation) then correspond 1:1, in order, to
+    occupied canonical slots — the i-th run's quotient is the position of
+    the i-th occupied slot. ``searchsorted`` over the occupied prefix
+    count inverts "i-th occupied" without a scatter."""
+    n = spec.n_slots
+    occ, cont, _, in_use, rem = _fields(spec, lanes)
+    anchor = jnp.argmax(~in_use).astype(jnp.int32)     # first empty slot
+    occ_r = _rotated(n, anchor, occ)
+    cont_r = _rotated(n, anchor, cont)
+    in_use_r = _rotated(n, anchor, in_use)
+    rem_r = _rotated(n, anchor, rem)
+    runs_upto = jnp.cumsum((in_use_r & ~cont_r).astype(jnp.int32))
+    occ_upto = jnp.cumsum(occ_r.astype(jnp.int32))
+    q_rot = jnp.searchsorted(occ_upto, runs_upto, side="left")
+    q_abs = jnp.mod(q_rot.astype(jnp.int32) + anchor + 1, n)
+    fp = (q_abs.astype(jnp.uint32) << jnp.uint32(spec.r_bits)) | rem_r
+    return fp, in_use_r
+
+
+def decode_fingerprints(spec: FilterSpec, table: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Public decode: (sorted fingerprints (n_slots,) uint32 with
+    0xFFFFFFFF sentinels past the end, stored count () int32)."""
+    fp, valid = _decode_rotated(spec, unpack_slots(spec, table))
+    fps = jnp.sort(jnp.where(valid, fp, _SENTINEL))
+    return fps, jnp.sum(valid.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Build: canonical layout from a fingerprint multiset
+# ---------------------------------------------------------------------------
+
+def _layout(spec: FilterSpec, fp: jnp.ndarray, valid: jnp.ndarray
+            ) -> jnp.ndarray:
+    """Slot lanes for the canonical layout of the multiset ``fp[valid]``
+    (caller guarantees the valid count <= n_slots - 1).
+
+    Rotation: with ``cnt[s]`` fingerprints homed at s, any argmin of
+    ``cumsum(cnt - 1)`` is empty in the final layout (cycle lemma), so a
+    scan started just past it needs no wraparound handling. In rotated
+    coordinates the displaced position of the j-th smallest fingerprint is
+    the associative-scan identity ``pos_j = j + cummax(rq_j - j)``; the
+    metadata bits then read directly off the sorted stream (continuation:
+    same quotient as the predecessor; shifted: pos != home)."""
+    n, r = spec.n_slots, spec.r_bits
+    L = fp.shape[0]
+    occ_m, cont_m, shift_m, rem_m = _meta_masks(spec)
+    q = (fp >> jnp.uint32(r)).astype(jnp.int32)
+    vi = valid.astype(jnp.int32)
+    cnt = jnp.zeros((n,), jnp.int32).at[jnp.where(valid, q, 0)].add(vi)
+    anchor = jnp.argmin(jnp.cumsum(cnt - 1)).astype(jnp.int32)
+    rq = jnp.mod(q - anchor - 1, n)
+    rfp = jnp.where(valid,
+                    (rq.astype(jnp.uint32) << jnp.uint32(r)) | (fp & rem_m),
+                    _SENTINEL)
+    rfp_s = jnp.sort(rfp)                      # valid first, sorted (rq, rem)
+    valid_s = rfp_s != _SENTINEL
+    rq_s = (rfp_s >> jnp.uint32(r)).astype(jnp.int32)
+    j = jax.lax.broadcasted_iota(jnp.int32, (L,), 0)
+    pos = j + jax.lax.cummax(rq_s - j)
+    prev_rq = jnp.take(rq_s, jnp.mod(j - 1, L), axis=0)
+    cont = valid_s & (j > 0) & (rq_s == prev_rq)
+    shifted = valid_s & (pos != rq_s)
+    lane = ((rfp_s & rem_m)
+            | jnp.where(cont, cont_m, jnp.uint32(0))
+            | jnp.where(shifted, shift_m, jnp.uint32(0)))
+    tgt = jnp.where(valid_s, jnp.mod(pos + anchor + 1, n), n)
+    lanes = jnp.zeros((n,), jnp.uint32).at[tgt].set(lane, mode="drop")
+    occ_tgt = jnp.where(valid, q, n)
+    occ_arr = jnp.zeros((n,), jnp.bool_).at[occ_tgt].set(True, mode="drop")
+    return lanes | jnp.where(occ_arr, occ_m, jnp.uint32(0))
+
+
+# ---------------------------------------------------------------------------
+# contains — whole-tile gather + fused run scan
+# ---------------------------------------------------------------------------
+
+def quotient_contains(spec: FilterSpec, table: jnp.ndarray,
+                      keys: jnp.ndarray) -> jnp.ndarray:
+    """(n,) bool membership: probe remainder present in the home
+    quotient's run.
+
+    Kernel-safe whole-tile form (this exact function IS the Pallas
+    contains kernel body): one metadata scan over the resident table
+    (cumulative run-start and occupied counts, shared by every probe in
+    the tile) identifies run #k with the k-th occupied slot; each probe
+    then needs two gathers (is_occupied at its home slot, its home's
+    occupied rank) and one fused compare over the slot lanes — no per-key
+    cluster walk, no data-dependent loop."""
+    n = spec.n_slots
+    lanes = unpack_slots(spec, table)
+    occ, cont, _, in_use, rem = _fields(spec, lanes)
+    anchor = jnp.argmax(~in_use).astype(jnp.int32)
+    occ_r = _rotated(n, anchor, occ)
+    cont_r = _rotated(n, anchor, cont)
+    in_use_r = _rotated(n, anchor, in_use)
+    rem_r = _rotated(n, anchor, rem)
+    runs_upto = jnp.cumsum((in_use_r & ~cont_r).astype(jnp.int32))
+    occ_upto = jnp.cumsum(occ_r.astype(jnp.int32))
+
+    fp = quotient_hashes(spec, keys)
+    q, pr = split_fp(spec, fp)
+    home_occupied = jnp.take(occ, q, axis=0)
+    run_id = jnp.take(occ_upto, jnp.mod(q - anchor - 1, n), axis=0)
+    hit = (in_use_r[None, :]
+           & (runs_upto[None, :] == run_id[:, None])
+           & (rem_r[None, :] == pr[:, None]))
+    return home_occupied & jnp.any(hit, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# add / remove — decode + rebuild tiles (shared verbatim by the kernels)
+# ---------------------------------------------------------------------------
+
+def quotient_insert_tile(spec: FilterSpec, table: jnp.ndarray,
+                         fp: jnp.ndarray, valid: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One tile's bulk insert: decode the resident multiset, admit new
+    fingerprints first-come-first-served up to capacity (n_slots - 1),
+    rebuild the canonical layout. Returns (table words, ok per key) —
+    ``ok=False`` is the explicit table-full signal; invalid (padding)
+    slots are exact no-ops reported as ok=True."""
+    lanes = unpack_slots(spec, table)
+    tab_fp, tab_valid = _decode_rotated(spec, lanes)
+    room = jnp.int32(spec.n_slots - 1) - jnp.sum(tab_valid.astype(jnp.int32))
+    ok = valid & (jnp.cumsum(valid.astype(jnp.int32)) <= room)
+    new_lanes = _layout(spec, jnp.concatenate([tab_fp, fp]),
+                        jnp.concatenate([tab_valid, ok]))
+    return pack_slots(spec, new_lanes), ok | ~valid
+
+
+def quotient_remove_tile(spec: FilterSpec, table: jnp.ndarray,
+                         fp: jnp.ndarray, valid: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One tile's bulk delete: each key clears ONE stored copy of its
+    fingerprint (duplicate requests in a batch consume one copy each, in
+    batch order). Returns (table words, found per key); found=False means
+    no copy was left for that request. Invalid slots are no-ops with
+    found=True."""
+    T = fp.shape[0]
+    lanes = unpack_slots(spec, table)
+    tab_fp, tab_valid = _decode_rotated(spec, lanes)
+    tab_sorted = jnp.sort(jnp.where(tab_valid, tab_fp, _SENTINEL))
+    bfp = jnp.where(valid, fp, _SENTINEL)
+    order = jnp.argsort(bfp, stable=True)          # batch order within ties
+    bs = jnp.take(bfp, order, axis=0)
+    jt = jax.lax.broadcasted_iota(jnp.int32, (T,), 0)
+    rank = jt - jnp.searchsorted(bs, bs, side="left").astype(jnp.int32)
+    cnt_tab = (jnp.searchsorted(tab_sorted, bs, side="right")
+               - jnp.searchsorted(tab_sorted, bs, side="left")
+               ).astype(jnp.int32)
+    found_s = (bs != _SENTINEL) & (rank < cnt_tab)
+    found = jnp.zeros((T,), jnp.bool_).at[order].set(found_s)
+    # per-fingerprint deletion counts: drop the first nrem copies of each
+    removed = jnp.sort(jnp.where(found_s, bs, _SENTINEL))
+    n = spec.n_slots
+    jn = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    trank = jn - jnp.searchsorted(tab_sorted, tab_sorted,
+                                  side="left").astype(jnp.int32)
+    nrem = (jnp.searchsorted(removed, tab_sorted, side="right")
+            - jnp.searchsorted(removed, tab_sorted, side="left")
+            ).astype(jnp.int32)
+    keep = (tab_sorted != _SENTINEL) & (trank >= nrem)
+    return pack_slots(spec, _layout(spec, tab_sorted, keep)), found | ~valid
+
+
+def _as_valid(n: int, valid: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if valid is None:
+        return jnp.ones((n,), jnp.bool_)
+    return jnp.asarray(valid).astype(jnp.bool_)
+
+
+def _bulk(spec: FilterSpec, table: jnp.ndarray, keys: jnp.ndarray,
+          valid, tile, tile_fn):
+    assert spec.is_quotient
+    n = keys.shape[0]
+    if n == 0:
+        return table, jnp.zeros((0,), jnp.bool_)
+    fp = quotient_hashes(spec, keys)
+    v = _as_valid(n, valid)
+    T = tile or QUOTIENT_ADD_TILE
+    flags = []
+    for c in range(0, n, T):                     # trace-time chunking
+        sl = slice(c, min(c + T, n))
+        table, f = tile_fn(spec, table, fp[sl], v[sl])
+        flags.append(f)
+    return table, (flags[0] if len(flags) == 1 else jnp.concatenate(flags))
+
+
+def quotient_add(spec: FilterSpec, table: jnp.ndarray, keys: jnp.ndarray,
+                 valid: Optional[jnp.ndarray] = None,
+                 tile: Optional[int] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Bulk insert. Returns ``(table, ok)`` with ``ok[i]=False`` iff the
+    table had no room left for key i (capacity n_slots - 1; admission is
+    first-come-first-served in batch order) — the EXPLICIT failure signal
+    the API accumulates into ``Filter.insert_failures``.
+
+    Because the layout is a pure function of the stored multiset, the
+    resulting table is bit-identical for ANY tile size — and identical to
+    the Pallas kernel's build. ``valid`` masks padding (inserts are not
+    idempotent: a duplicate key stores a second fingerprint copy)."""
+    return _bulk(spec, table, keys, valid, tile, quotient_insert_tile)
+
+
+def quotient_remove(spec: FilterSpec, table: jnp.ndarray, keys: jnp.ndarray,
+                    valid: Optional[jnp.ndarray] = None,
+                    tile: Optional[int] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Bulk delete: each key removes ONE copy of its fingerprint. Returns
+    ``(table, found)``; ``found[i]=False`` means key i's fingerprint was
+    absent (or already consumed by an earlier duplicate in the batch).
+
+    Only remove keys that were actually inserted — the fingerprint-filter
+    contract (shared with cuckoo): deleting a never-inserted key can clear
+    a colliding key's fingerprint and induce false negatives."""
+    return _bulk(spec, table, keys, valid, tile, quotient_remove_tile)
+
+
+# ---------------------------------------------------------------------------
+# merge / resize — the lossless structural ops
+# ---------------------------------------------------------------------------
+
+def quotient_merge(spec: FilterSpec, table_a: jnp.ndarray,
+                   table_b: jnp.ndarray) -> jnp.ndarray:
+    """Union of two same-spec tables: decode both multisets, rebuild.
+
+    Lossless by construction — the result is bit-identical to a table
+    built from the concatenated key streams (the layout is a pure
+    function of the union multiset). The caller checks capacity
+    (count_a + count_b <= n_slots - 1) before invoking; overflow here
+    would silently violate losslessness, so `api` refuses it eagerly."""
+    fa, va = _decode_rotated(spec, unpack_slots(spec, table_a))
+    fb, vb = _decode_rotated(spec, unpack_slots(spec, table_b))
+    return pack_slots(spec, _layout(spec, jnp.concatenate([fa, fb]),
+                                    jnp.concatenate([va, vb])))
+
+
+def spec_for_resize(spec: FilterSpec, new_m_bits: int) -> FilterSpec:
+    """The resized spec: same slot lane width, same fingerprint width
+    p = q + r — each doubling moves one bit from remainder to quotient.
+    Raises ``ValueError`` when the split leaves r outside [1, lane-3]."""
+    assert spec.is_quotient
+    new_slots = new_m_bits // spec.slot_bits
+    _log2i(new_m_bits)
+    new_q = _log2i(new_slots)
+    new_r = spec.fingerprint_bits - new_q
+    if not 1 <= new_r <= spec.slot_bits - QF_META_BITS:
+        raise ValueError(
+            f"cannot resize {spec} to m=2^{_log2i(new_m_bits)}b: the "
+            f"conserved fingerprint width p={spec.fingerprint_bits} splits "
+            f"as q={new_q}, r={new_r}, but r must stay in "
+            f"[1, {spec.slot_bits - QF_META_BITS}] for u{spec.slot_bits} "
+            f"slots")
+    return dataclasses.replace(spec, m_bits=new_m_bits, r_bits=new_r)
+
+
+def quotient_resize(spec: FilterSpec, table: jnp.ndarray,
+                    new_spec: FilterSpec) -> jnp.ndarray:
+    """Re-slot the stored fingerprints into a table of a different size.
+
+    The p-bit fingerprint VALUES are conserved; only the q/r split moves,
+    so every stored element re-homes exactly — no raw keys, no FPR drift
+    beyond the analytic effect of the new split. The caller checks
+    capacity for shrinks (grows can't overflow)."""
+    assert spec.is_quotient and new_spec.is_quotient
+    assert new_spec.fingerprint_bits == spec.fingerprint_bits, \
+        "resize conserves p = q + r"
+    fp, valid = _decode_rotated(spec, unpack_slots(spec, table))
+    return pack_slots(new_spec, _layout(new_spec, fp, valid))
+
+
+# ---------------------------------------------------------------------------
+# Introspection + theory + sizing
+# ---------------------------------------------------------------------------
+
+def occupied_slots(spec: FilterSpec, table: jnp.ndarray) -> jnp.ndarray:
+    """Scalar uint32: number of in-use slots == stored fingerprints
+    (bank-shaped tables report per-member counts over the last axis)."""
+    lanes = unpack_slots(spec, table)
+    meta = (lanes >> jnp.uint32(spec.slot_bits - QF_META_BITS)) & jnp.uint32(7)
+    return jnp.sum((meta != 0).astype(jnp.uint32), axis=-1)
+
+
+def quotient_load_factor(spec: FilterSpec, table: jnp.ndarray) -> jnp.ndarray:
+    """Occupied fraction of all slots — the fingerprint filter's fill
+    metric (bit-density ``fill_fraction`` is meaningless for slot values)."""
+    return occupied_slots(spec, table).astype(jnp.float32) / spec.n_slots
+
+
+def fpr_quotient(q_bits: int, r_bits: int, alpha: float) -> float:
+    """Analytic FPR at load ``alpha``: a negative probe false-positives
+    iff its full p = q + r bit fingerprint collides with any of the
+    ``alpha * 2^q`` stored ones — exactly ``1 - (1 - 2^-p)^n ~= alpha *
+    2^-r`` (exact fingerprint compare, no per-slot probe union like
+    cuckoo's 2*b candidate slots)."""
+    n = alpha * (2.0 ** q_bits)
+    return 1.0 - (1.0 - 2.0 ** -(q_bits + r_bits)) ** n
+
+
+def bits_per_key(spec: FilterSpec, n: Optional[int] = None) -> float:
+    """Storage bits per stored key (at load n; default: max load)."""
+    n = n or max(int(spec.n_slots * QUOTIENT_MAX_LOAD), 1)
+    return spec.m_bits / max(n, 1)
+
+
+def r_bits_for_fpr(target_fpr: float, q_bits: int,
+                   alpha: float = QUOTIENT_MAX_LOAD) -> int:
+    """Smallest remainder width meeting ``target_fpr`` at load ``alpha``."""
+    r = max(int(math.ceil(math.log2(max(alpha, 1e-9) / target_fpr))), 1)
+    while fpr_quotient(q_bits, r, alpha) > target_fpr and r < 29:
+        r += 1
+    return r
+
+
+def spec_for_n(n: int, target_fpr: Optional[float] = None,
+               slot_bits: Optional[int] = None,
+               max_load: float = QUOTIENT_MAX_LOAD) -> FilterSpec:
+    """Size a quotient spec for ~n keys at load factor <= ``max_load``.
+
+    The slot count rounds up to a power of two (so realized load is at
+    most ``max_load``); the remainder width comes from the target FPR at
+    the realized load, and the slot lane snaps to the smallest of
+    u8/u16/u32 that fits r + 3 metadata bits."""
+    q = max(int(math.ceil(math.log2(max(n, 1) / max_load))), 3)
+    while (1 << q) - 1 < n:
+        q += 1
+    alpha = n / float(1 << q)
+    if target_fpr is None:
+        r = (slot_bits - QF_META_BITS) if slot_bits else 5
+    else:
+        r = r_bits_for_fpr(target_fpr, q, max(alpha, 1e-9))
+    if slot_bits is None:
+        for sb in QUOTIENT_SLOT_BITS:
+            if r <= sb - QF_META_BITS:
+                slot_bits = sb
+                break
+        else:
+            raise ValueError(
+                f"no supported quotient slot width holds r={r} remainder "
+                f"bits (+{QF_META_BITS} metadata); relax target_fpr "
+                f"{target_fpr!r}")
+    elif r > slot_bits - QF_META_BITS:
+        raise ValueError(
+            f"u{slot_bits} slots hold at most {slot_bits - QF_META_BITS} "
+            f"remainder bits; fpr {target_fpr!r} at load {max_load} "
+            f"needs r={r}")
+    if q + r > 31:
+        raise ValueError(
+            f"fingerprint q+r = {q}+{r} exceeds the uint32 budget (31 "
+            f"bits); shard the keyspace or relax target_fpr")
+    return FilterSpec(variant="quotient", m_bits=(1 << q) * slot_bits, k=1,
+                      slot_bits=slot_bits, r_bits=r)

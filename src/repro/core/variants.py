@@ -42,6 +42,20 @@ CUCKOO
        with an explicit failure signal. Reference semantics live in
        ``core.fingerprint``; kernels in ``kernels.cuckoofilter``
        (DESIGN.md §13).
+QUOTIENT
+       The second fingerprint family (Bender et al.'s quotient filter, the
+       design "High-Performance Filters for GPUs" builds its two-level GQF
+       on). A p-bit fingerprint splits into ``q = log2(n_slots)`` quotient
+       bits (the home slot) and ``r_bits`` remainder bits stored in the
+       slot; three metadata bits per slot (is_occupied / is_continuation /
+       is_shifted) encode the run/cluster structure of linear-probe
+       displacement. Every stored fingerprint is exactly recoverable from
+       the table, which is what buys the two capabilities no other engine
+       here has: **lossless merge** (decode both, union, rebuild) and
+       **lossless resize** (doubling the table moves one bit from
+       remainder to quotient — re-slot fingerprints, no raw keys).
+       Reference semantics live in ``core.quotient``; kernels in
+       ``kernels.quotientfilter`` (DESIGN.md §15).
 """
 from __future__ import annotations
 
@@ -59,9 +73,13 @@ from repro.core import hashing as H
 WORD_BITS = 32
 _LOG2_WORD = 5
 
-VARIANTS = ("cbf", "bbf", "rbbf", "sbf", "csbf", "countingbf", "cuckoo")
+VARIANTS = ("cbf", "bbf", "rbbf", "sbf", "csbf", "countingbf", "cuckoo",
+            "quotient")
 
 CUCKOO_SLOT_BITS = (8, 16)           # u8 / u16 fingerprint slot widths
+
+QUOTIENT_SLOT_BITS = (8, 16, 32)     # quotient slot lane widths
+QF_META_BITS = 3                     # occupied / continuation / shifted
 
 # Packed 4-bit counters (countingbf): expansion factor and nibble geometry.
 COUNTER_BITS = 4
@@ -85,8 +103,9 @@ class FilterSpec:
     k: int                       # fingerprint bits per key
     block_bits: int = 256        # B — block size in bits (blocked variants)
     z: int = 1                   # CSBF: number of sector groups
-    slot_bits: int = 8           # CUCKOO: fingerprint width (8 or 16)
+    slot_bits: int = 8           # CUCKOO/QUOTIENT: slot lane width
     slots_per_bucket: int = 4    # CUCKOO: slots per bucket (pow2)
+    r_bits: int = 0              # QUOTIENT: remainder bits stored per slot
 
     def __post_init__(self):
         assert self.variant in VARIANTS, self.variant
@@ -95,6 +114,20 @@ class FilterSpec:
         if self.variant == "cbf":
             object.__setattr__(self, "block_bits", self.m_bits)
         if self.variant == "rbbf":
+            object.__setattr__(self, "block_bits", WORD_BITS)
+        if self.variant == "quotient":
+            assert self.slot_bits in QUOTIENT_SLOT_BITS, self.slot_bits
+            assert 1 <= self.r_bits <= self.slot_bits - QF_META_BITS, \
+                (f"r_bits={self.r_bits} must leave {QF_META_BITS} metadata "
+                 f"bits in a u{self.slot_bits} slot")
+            n_slots = self.m_bits // self.slot_bits
+            q = _log2i(n_slots)
+            assert q + self.r_bits <= 31, \
+                "fingerprint q+r must fit a uint32 below the empty sentinel"
+            # one hash stream yields the whole p-bit fingerprint; a u32
+            # word is the "block" of the shared geometry (s == 1), so VMEM
+            # budgets and bank offsets reuse the Bloom machinery unchanged
+            object.__setattr__(self, "k", 1)
             object.__setattr__(self, "block_bits", WORD_BITS)
         if self.variant == "cuckoo":
             assert self.slot_bits in CUCKOO_SLOT_BITS, self.slot_bits
@@ -123,11 +156,16 @@ class FilterSpec:
 
     @property
     def is_fingerprint(self) -> bool:
-        """Fingerprint (cuckoo) specs store hashed slot values, not bit
-        patterns — the Bloom engines and pattern helpers don't apply."""
-        return self.variant == "cuckoo"
+        """Fingerprint (cuckoo/quotient) specs store hashed slot values,
+        not bit patterns — the Bloom engines and pattern helpers don't
+        apply, and fill is measured as slot load factor."""
+        return self.variant in ("cuckoo", "quotient")
 
-    # -- cuckoo geometry (is_fingerprint specs only) -------------------------
+    @property
+    def is_quotient(self) -> bool:
+        return self.variant == "quotient"
+
+    # -- fingerprint geometry (is_fingerprint specs only) --------------------
     @property
     def slots_per_word(self) -> int:
         return WORD_BITS // self.slot_bits
@@ -139,7 +177,21 @@ class FilterSpec:
     @property
     def n_slots(self) -> int:
         """Total fingerprint slots — the capacity at load factor 1.0."""
+        if self.is_quotient:
+            return self.m_bits // self.slot_bits
         return self.n_buckets * self.slots_per_bucket
+
+    @property
+    def q_bits(self) -> int:
+        """QUOTIENT: quotient bits — log2 of the slot count."""
+        assert self.is_quotient
+        return _log2i(self.n_slots)
+
+    @property
+    def fingerprint_bits(self) -> int:
+        """QUOTIENT: full fingerprint width p = q + r. Conserved across
+        lossless resize (a doubling moves one bit from r to q)."""
+        return self.q_bits + self.r_bits
 
     @property
     def storage_words(self) -> int:
@@ -172,6 +224,15 @@ class FilterSpec:
         return self.m_bits / max(n, 1)
 
     def __str__(self):
+        if self.variant == "quotient":
+            # the q/r split and metadata layout ARE the spec: a quotient
+            # table at the same m as an sbf or cuckoo spec (or the same
+            # quotient table pre/post resize, same p different split) must
+            # never print — or cache-key (core.tuning._plan_key) —
+            # identically
+            return (f"quotient(m=2^{_log2i(self.m_bits)}b, "
+                    f"q{self.q_bits}+r{self.r_bits}, "
+                    f"u{self.slot_bits}[occ|cont|shift])")
         if self.variant == "cuckoo":
             # slot geometry IS the spec for fingerprint filters: two cuckoo
             # specs with equal m but different slot widths must never print
@@ -900,6 +961,10 @@ def fpr_csbf(B: int, S: int, c: float, k: int, z: int) -> float:
 
 
 def fpr_theory(spec: FilterSpec, n: int) -> float:
+    if spec.is_quotient:
+        from repro.core import quotient as Q        # avoid import cycle
+        return Q.fpr_quotient(spec.q_bits, spec.r_bits,
+                              min(n / spec.n_slots, 1.0))
     if spec.is_fingerprint:
         from repro.core import fingerprint as F     # avoid import cycle
         return F.fpr_cuckoo(spec.slot_bits, spec.slots_per_bucket,
@@ -958,6 +1023,11 @@ def space_optimal_n(spec: FilterSpec, target_fpr: float = None) -> int:
     variant-aware) stays at or below the target; 0 if even n = 1 exceeds it.
     """
     if target_fpr is None:
+        if spec.is_quotient:
+            # quotient capacity is structural too: linear probing stays
+            # practical to ~0.9 load (cluster lengths blow up past it),
+            # and one slot is reserved as the cluster-scan anchor
+            return max(min(int(spec.n_slots * 0.90), spec.n_slots - 1), 1)
         if spec.is_fingerprint:
             # cuckoo capacity is structural, not space-error-optimal: the
             # standard achievable load for 4-slot buckets is ~0.95
@@ -967,7 +1037,10 @@ def space_optimal_n(spec: FilterSpec, target_fpr: float = None) -> int:
         return max(int(spec.m_bits / c), 1)
     if fpr_theory(spec, 1) > target_fpr:
         return 0
-    lo, hi = 1, spec.m_bits  # fpr_theory is monotone nondecreasing in n
+    # fpr_theory is monotone nondecreasing in n; quotient load is capped
+    # by its structural capacity (n_slots - 1 stored fingerprints)
+    lo = 1
+    hi = max(spec.n_slots - 1, 1) if spec.is_quotient else spec.m_bits
     while lo < hi:
         mid = (lo + hi + 1) // 2
         if fpr_theory(spec, mid) <= target_fpr:

@@ -46,9 +46,11 @@ from repro.core import partition as P
 from repro.core import variants as V
 from repro.core.variants import FilterSpec
 from repro.core import fingerprint as F
+from repro.core import quotient as Q
 from repro.kernels import cbf as cbf_k
 from repro.kernels import countingbf as cnt_k
 from repro.kernels import cuckoofilter as ckoo_k
+from repro.kernels import quotientfilter as qf_k
 from repro.kernels import ring as ring_k
 from repro.kernels import sbf as sbf_k
 from repro.kernels.sbf import (DEFAULT_DMA_DEPTH, DEFAULT_TILE, DMA_DEPTHS,
@@ -664,6 +666,79 @@ def cuckoo_remove(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                   tile: Optional[int] = None):
     """Bulk delete (one slot cleared per key). Returns (table, found)."""
     return _cuckoo_update(spec, filt, keys, "remove", valid, tile)
+
+
+# ---------------------------------------------------------------------------
+# Quotient filter dispatch (valid-masked padding; inserts/removes are not
+# idempotent). No HBM regime: the run scan reads the whole table per tile —
+# tables beyond the VMEM budget run the jnp reference (the decode+rebuild
+# layout is a pure function of the stored multiset, so results stay
+# bit-identical for every tile schedule).
+# ---------------------------------------------------------------------------
+
+def quotient_vmem_resident(spec: FilterSpec) -> bool:
+    return spec.n_words * 4 <= VMEM_FILTER_BYTES
+
+
+def quotient_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                      tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """(n,) bool run-scan membership; ONE pallas_call for the batch."""
+    assert spec.is_quotient
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    if not quotient_vmem_resident(spec):
+        return Q.quotient_contains(spec, filt, keys)
+    tile = _clamp_tile(n, tile or DEFAULT_TILE)
+    padded = _pad_keys(keys, tile)              # reads: repeat-last is safe
+    out = qf_k.contains_vmem(spec, filt, padded, tile=tile,
+                             interpret=_interpret())
+    return out[:n]
+
+
+def _quotient_tile(n: int, tile: Optional[int]) -> int:
+    """The bulk-update chunk size. Mirrors ``quotient.quotient_add``'s
+    trace-time chunking (chunks of T over the unpadded batch) for schedule
+    parity with the jnp reference — and unlike cuckoo, the quotient build
+    is tile-size independent anyway (pure function of the multiset)."""
+    T = tile or Q.QUOTIENT_ADD_TILE
+    if n <= T:
+        return max(8, 1 << int(np.ceil(np.log2(max(n, 1)))))
+    return T
+
+
+def _quotient_update(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                     op: str, valid: Optional[jnp.ndarray],
+                     tile: Optional[int]):
+    assert spec.is_quotient
+    n = keys.shape[0]
+    if n == 0:
+        return filt, jnp.zeros((0,), jnp.bool_)
+    T = tile or Q.QUOTIENT_ADD_TILE
+    if not quotient_vmem_resident(spec):
+        fn = Q.quotient_add if op == "add" else Q.quotient_remove
+        return fn(spec, filt, keys, valid=valid, tile=T)
+    eff = _quotient_tile(n, tile)
+    pk, pv = _pad_keys_valid(keys, eff, valid)
+    fn = qf_k.add_vmem if op == "add" else qf_k.remove_vmem
+    out, flags = fn(spec, filt, pk, pv, tile=eff, interpret=_interpret())
+    return out, flags[:n]
+
+
+def quotient_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                 valid: Optional[jnp.ndarray] = None,
+                 tile: Optional[int] = None):
+    """Bulk decode+rebuild insert. Returns ``(table, ok)``; ``ok[i]=False``
+    is the explicit table-full signal (never silently dropped — the API
+    accumulates it into ``Filter.insert_failures``)."""
+    return _quotient_update(spec, filt, keys, "add", valid, tile)
+
+
+def quotient_remove(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
+                    valid: Optional[jnp.ndarray] = None,
+                    tile: Optional[int] = None):
+    """Bulk delete (one fingerprint copy per key). Returns (table, found)."""
+    return _quotient_update(spec, filt, keys, "remove", valid, tile)
 
 
 # ---------------------------------------------------------------------------

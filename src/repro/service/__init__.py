@@ -14,8 +14,9 @@ with a request-level serving story:
 * :class:`ServiceDriver` — trap / restore / replay over a seeded request
   stream (the ``TrainingDriver`` recovery loop, re-homed to serving),
   with failure injection and bit-exact replay.
-* :func:`grow_bank` / :func:`reshard_service` — live bank resharding;
-  the cross-mesh moves live in ``repro.runtime.elastic``.
+* :func:`grow_bank` / :func:`grow_capacity` / :func:`reshard_service` —
+  live bank resharding and lossless in-place capacity growth (quotient
+  engine); the cross-mesh moves live in ``repro.runtime.elastic``.
 
 See DESIGN.md §14 for the architecture and its recovery invariants, and
 ``benchmarks/replay.py`` for the traffic-replay harness that measures it.
@@ -27,10 +28,11 @@ from repro.service.frontend import (FilterService, OPS, ServiceConfig,
 from repro.service.maintenance import (MaintenanceConfig, MaintenanceLoop,
                                        restore_service)
 from repro.service.driver import ServiceDriver, ServiceDriverConfig
-from repro.service.resharding import grow_bank, reshard_service
+from repro.service.resharding import (grow_bank, grow_capacity,
+                                      reshard_service)
 
 __all__ = ["AdmissionController", "AdmissionPolicy", "SHED_REASONS",
            "member_fill", "FilterService", "OPS", "ServiceConfig",
            "service_keys", "MaintenanceConfig", "MaintenanceLoop",
            "restore_service", "ServiceDriver", "ServiceDriverConfig",
-           "grow_bank", "reshard_service"]
+           "grow_bank", "grow_capacity", "reshard_service"]

@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
+import numpy as np
+
 from repro.checkpoint import checkpoint as ckpt
 
 
@@ -36,6 +38,17 @@ class MaintenanceConfig:
     ckpt_dir: Optional[str] = None
     async_checkpoint: bool = True
     keep: int = 3
+    # Saturation-triggered capacity growth (resizable engines — the
+    # quotient filter): every ``resize_every`` ticks the worst member's
+    # load factor is measured; at or above ``resize_at_load`` the whole
+    # bank grows ``resize_factor``x in place via ``grow_capacity`` (drain
+    # barrier, lossless fingerprint re-homing — zero shed adds). The
+    # check fires BELOW the admission shed_load threshold by design:
+    # growth is the escalation that makes health shedding unnecessary.
+    resize_every: Optional[int] = None     # ticks between load checks
+    resize_at_load: float = 0.80           # grow at/above this load factor
+    resize_factor: int = 2                 # m_bits multiplier per growth
+    resize_max_m_bits: Optional[int] = None  # growth ceiling (None = off)
 
 
 class MaintenanceLoop:
@@ -63,8 +76,33 @@ class MaintenanceLoop:
             service.drain()
             service.filt = service.filt.decay()
             self.events.append({"kind": "decay", "step": step})
+        if cfg.resize_every and self._ticks % cfg.resize_every == 0:
+            self._maybe_resize(service, step)
         if cfg.checkpoint_every and self._ticks % cfg.checkpoint_every == 0:
             self.checkpoint(service, step)
+
+    def _maybe_resize(self, service, step: int) -> None:
+        """Grow the bank in place when the worst member saturates."""
+        cfg = self.cfg
+        filt = service.filt
+        if not filt.engine.supports_resize:
+            raise ValueError(
+                f"resize_every is set but engine {filt.backend!r} does not "
+                f"support resize(); use variant='quotient' or drop the "
+                f"resize maintenance config")
+        load = float(np.max(np.atleast_1d(
+            np.asarray(filt.load_factor(), np.float64))))
+        if load < cfg.resize_at_load:
+            return
+        target = filt.spec.m_bits * int(cfg.resize_factor)
+        if cfg.resize_max_m_bits is not None \
+                and target > cfg.resize_max_m_bits:
+            return                     # at the ceiling: shedding takes over
+        from repro.service.resharding import grow_capacity
+        grow_capacity(service, new_m_bits=target)
+        self.events.append({"kind": "resize", "step": step,
+                            "load": round(load, 4),
+                            "m_bits": service.filt.spec.m_bits})
 
     def checkpoint(self, service, step: int) -> None:
         """Flush-barrier checkpoint: drain, snapshot filter + cursors."""

@@ -17,6 +17,15 @@ state or serving a false negative:
   crash path — ``restore_filter`` onto the new mesh, then reshard
   (exercised by tests/test_elastic.py).
 
+* **A member outgrows its own capacity** — the filter itself saturates
+  (quotient/cuckoo load factor, Bloom fill). For resizable engines (the
+  quotient filter) :func:`grow_capacity` escalates in place: drain, then
+  ``Filter.resize()`` re-homes every stored fingerprint into a larger
+  table losslessly — no raw keys, no dropped adds, bit-exact membership
+  across the boundary. This is the escalation path health shedding was
+  standing in for: instead of refusing a saturating member's adds at the
+  door, the member grows.
+
 :func:`reshard_service` is the live entry point: drain (a flush barrier —
 in-flight batches must not straddle two layouts), rebuild, and swap the
 service's filter + admission state atomically from the caller's view.
@@ -62,6 +71,38 @@ def grow_bank(filt, new_bank: int):
         state = jnp.concatenate(
             [state, jnp.broadcast_to(fresh, (pad,) + fresh.shape)], axis=0)
     return filt.replace(words=words, state=state)
+
+
+def grow_capacity(service, *, factor: int = 2,
+                  new_m_bits: Optional[int] = None):
+    """Grow the service's filter capacity in place (drain-barrier
+    semantics); returns the new per-member ``m_bits``.
+
+    Resizable engines only (``supports_resize`` — the quotient filter):
+    the whole bank resizes member-wise under the flush barrier, every
+    stored fingerprint re-homed losslessly, so a member approaching its
+    load ceiling escalates to a bigger table instead of having its adds
+    health-shed. Admission health is refreshed immediately afterwards:
+    flags derived from the pre-resize load factor are exactly the ones the
+    resize just relieved, and leaving them set would keep shedding a
+    now-healthy member until the next lazy refresh."""
+    filt = service.filt
+    if not filt.engine.supports_resize:
+        raise ValueError(
+            f"engine {filt.backend!r} does not support resize(); "
+            f"grow_capacity needs a resizable engine "
+            f"(variant='quotient') — reshard_service(bank=...) grows the "
+            f"tenant axis instead")
+    target = int(new_m_bits) if new_m_bits is not None \
+        else filt.spec.m_bits * int(factor)
+    if target < filt.spec.m_bits:
+        raise ValueError(
+            f"grow_capacity cannot shrink ({filt.spec.m_bits} -> {target} "
+            f"bits): use Filter.resize() directly for deliberate shrinks")
+    service.drain()             # in-flight batches must not straddle specs
+    service.filt = service.filt.resize(target)
+    service.admission.refresh(service.filt)
+    return service.filt.spec.m_bits
 
 
 def reshard_service(service, *, bank: Optional[int] = None, mesh=None,

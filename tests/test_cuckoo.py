@@ -272,8 +272,14 @@ def test_registry_claims_and_flags():
         api.make_filter(variant="sbf", m_bits=1 << 13).remove(keys_of(4))
     with pytest.raises(NotImplementedError):
         f.decay()
-    with pytest.raises(NotImplementedError):
+    # the supports_merge flag is checked up front: a uniform ValueError
+    # naming the engine and the nearest alternative, not an engine-deep
+    # NotImplementedError
+    assert not d["supports_merge"] and not d["supports_resize"]
+    with pytest.raises(ValueError, match="quotient"):
         f.merge(api.make_filter(variant="cuckoo", m_bits=1 << 13))
+    with pytest.raises(ValueError, match="quotient"):
+        f.resize(1 << 14)
 
 
 def test_filter_for_workload_prefers_cuckoo_for_remove_only():
@@ -409,16 +415,23 @@ def test_tenant_dedup_cuckoo_engine():
 
 
 def test_tune_plan_key_disambiguates_variants(tmp_path, monkeypatch):
-    """Satellite: cuckoo and sbf plans for the same geometry — and two
-    cuckoo slot geometries at the same m — get distinct cache keys."""
+    """Satellite: cuckoo, quotient and sbf plans for the same geometry —
+    and two slot/split geometries at the same m — get distinct cache
+    keys (the quotient __str__ spells out its q/r split and lane)."""
     from repro.core import tuning
     monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "t.json"))
     sbf = FilterSpec(variant="sbf", m_bits=1 << 14, k=8, block_bits=64)
     ck8 = spec_of(1 << 14, slot_bits=8)
     ck16 = spec_of(1 << 14, slot_bits=16)
+    qf8 = FilterSpec(variant="quotient", m_bits=1 << 14, k=1, slot_bits=8,
+                     r_bits=5)
+    qf16 = FilterSpec(variant="quotient", m_bits=1 << 14, k=1, slot_bits=16,
+                      r_bits=5)
+    qf16b = FilterSpec(variant="quotient", m_bits=1 << 14, k=1, slot_bits=16,
+                       r_bits=9)
     keys = {tuning._plan_key(s, "contains", "vmem", "structural", 256)
-            for s in (sbf, ck8, ck16)}
-    assert len(keys) == 3
+            for s in (sbf, ck8, ck16, qf8, qf16, qf16b)}
+    assert len(keys) == 6
     assert os.environ["REPRO_TUNING_CACHE"]          # env respected
 
 

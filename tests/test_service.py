@@ -17,8 +17,8 @@ from repro import api
 from repro.runtime.fault_tolerance import SimulatedFailure
 from repro.service import (AdmissionPolicy, FilterService, MaintenanceConfig,
                            MaintenanceLoop, ServiceConfig, ServiceDriver,
-                           ServiceDriverConfig, grow_bank, reshard_service,
-                           restore_service)
+                           ServiceDriverConfig, grow_bank, grow_capacity,
+                           reshard_service, restore_service)
 
 T = 4
 
@@ -261,6 +261,52 @@ def test_reshard_service_live():
     svc.drain()
     hits = svc.filt.contains(jnp.asarray(keys), tenants=jnp.asarray(tenants))
     assert bool(np.asarray(hits).all())
+
+
+def test_grow_capacity_resizes_saturating_quotient_in_place():
+    """Acceptance: a quotient bank streamed past its load ceiling grows in
+    place via the maintenance resize tick — zero shed adds, zero insert
+    failures, and the grown bank is bit-identical to a from-scratch build
+    at the final geometry (the resize re-homed every fingerprint)."""
+    fb = api.filter_for_n_items(100, variant="quotient", target_fpr=1e-3,
+                                bank=T)
+    svc = FilterService(fb, ServiceConfig(
+        max_batch=16, flush_deadline=None,
+        admission=AdmissionPolicy(health_every=1)))
+    maint = MaintenanceLoop(MaintenanceConfig(resize_every=1))
+    m0 = svc.filt.spec.m_bits
+    keys, tenants = _requests(600, seed=14)    # ~150/tenant >> 0.8 ceiling
+    shed = 0
+    for step, i in enumerate(range(0, 600, 16)):
+        seqs = svc.submit_many("add", keys[i:i + 16], tenants[i:i + 16])
+        shed += int((np.asarray(seqs) < 0).sum())
+        svc.drain()
+        maint.tick(svc, step + 1)
+    assert shed == 0                                    # nothing health-shed
+    assert int(np.asarray(svc.filt.state).sum()) == 0   # nothing dropped
+    assert svc.filt.spec.m_bits > m0
+    resizes = [e for e in maint.events if e["kind"] == "resize"]
+    assert resizes and all(e["load"] >= 0.80 for e in resizes)
+    assert not svc.admission.unhealthy.any()     # refreshed post-resize
+    # every pre- and post-resize add is present at the new geometry
+    hits = svc.filt.contains(jnp.asarray(keys), tenants=jnp.asarray(tenants))
+    assert bool(np.asarray(hits).all())
+    # bit-exact losslessness: identical words to a from-scratch build
+    spec = svc.filt.spec
+    ref = api.make_filter_bank(
+        T, variant="quotient", m_bits=spec.m_bits, slot_bits=spec.slot_bits,
+        r_bits=spec.r_bits).add(jnp.asarray(keys),
+                                tenants=jnp.asarray(tenants))
+    assert jnp.array_equal(ref.words, svc.filt.words)
+
+
+def test_grow_capacity_requires_resizable_engine():
+    svc = FilterService(_bank(), ServiceConfig(max_batch=16))
+    with pytest.raises(ValueError, match="resize"):
+        grow_capacity(svc)
+    maint = MaintenanceLoop(MaintenanceConfig(resize_every=1))
+    with pytest.raises(ValueError, match="resize"):
+        maint.tick(svc, 1)
 
 
 # -- recovery (the acceptance invariant) --------------------------------------
