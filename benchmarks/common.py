@@ -68,15 +68,20 @@ class Csv:
         self.records: List[dict] = []
 
     def add(self, name: str, us_per_call: float, derived: str = "",
-            n_ops: int = None):
+            n_ops: int = None, predicted_us: float = None):
         """One bench row. ``n_ops`` (ops per timed call) derives Mops for
-        the machine-readable record so future PRs can diff throughput."""
+        the machine-readable record so future PRs can diff throughput;
+        ``predicted_us`` is the perfmodel's full prediction for the same
+        call (records carrying it feed the warn-only model-sanity gate in
+        benchmarks/run.py)."""
         row = f"{name},{us_per_call:.3f},{derived}"
         self.rows.append(row)
         rec = {"name": name, "us_per_call": round(float(us_per_call), 3),
                "derived": derived}
         if n_ops and us_per_call > 0:
             rec["mops"] = round(n_ops / us_per_call, 3)
+        if predicted_us is not None:
+            rec["predicted_us"] = round(float(predicted_us), 3)
         self.records.append(rec)
         print(row, flush=True)
 

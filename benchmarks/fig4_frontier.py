@@ -1,11 +1,26 @@
-"""Paper Figure 4 analogue: throughput vs false-positive-rate frontier.
+"""Paper Figure 4 analogue: throughput vs false-positive-rate frontier,
+plus the measured SPEED-OF-LIGHT fraction per kernel configuration.
 
-For every variant (CBF / BBF / RBBF / SBF / CSBF at several block sizes and
-z), measures BOTH empirical FPR (space-optimal load, paper §5.1 protocol:
-insert n* keys solving Eq.(3), probe with disjoint keys) and bulk lookup /
-construction throughput. Reproduces the paper's qualitative frontier:
-CBF = accurate+slow corner, RBBF = fast+inaccurate corner, optimized
-SBF/CSBF dominating the middle.
+Part 1 (frontier): for every variant (CBF / BBF / RBBF / SBF / CSBF at
+several block sizes and z), measures BOTH empirical FPR (space-optimal
+load, paper §5.1 protocol: insert n* keys solving Eq.(3), probe with
+disjoint keys) and bulk lookup / construction throughput. Reproduces the
+paper's qualitative frontier: CBF = accurate+slow corner, RBBF =
+fast+inaccurate corner, optimized SBF/CSBF dominating the middle.
+
+Part 2 (speed of light): for each engine x regime x coop x mix
+configuration, measures bulk ``contains`` through the single-launch
+Pallas kernels and reports
+
+    sol = measured Mops/s  /  model-predicted ceiling Mops/s
+
+where the ceiling is ``repro.perfmodel.ceiling_mops`` — the calibrated
+roofline max of HBM bytes, resident bytes and ALU flops plus launch
+overhead, with NO schedule term. On TPU sol is the fraction of the
+practical speed of light the schedule achieves; off-TPU (interpret mode)
+sol is tiny and the interesting column is the *relative* ordering plus
+``predicted_us`` (full model WITH the schedule term), which the warn-only
+sanity gate in ``benchmarks/run.py`` checks against the measurement.
 """
 from __future__ import annotations
 
@@ -14,8 +29,11 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Csv, keys_u64x2, time_fn
+from repro import api
+from repro import perfmodel as PM
 from repro.core import hashing as H
 from repro.core import variants as V
+from repro.kernels import ops
 
 M_BITS = 1 << 23
 N_KEYS = 1 << 18
@@ -33,13 +51,16 @@ CONFIGS = [
     ("csbf_B1024_z4", dict(variant="csbf", k=16, block_bits=1024, z=4)),
 ]
 
+SMOKE_CONFIGS = [CONFIGS[0], CONFIGS[5]]        # cbf + sbf_B256
 
-def run(csv: Csv):
-    probe = keys_u64x2(N_PROBE, seed=999)
-    bench_keys = keys_u64x2(N_KEYS, seed=1)
-    for name, kw in CONFIGS:
-        variant = kw.pop("variant", "cbf")
-        spec = V.FilterSpec(variant, M_BITS, kw["k"],
+
+def _frontier(csv: Csv, configs, m_bits: int, n_keys: int, n_probe: int,
+              warmup: int, reps: int) -> None:
+    probe = keys_u64x2(n_probe, seed=999)
+    bench_keys = keys_u64x2(n_keys, seed=1)
+    for name, kw in configs:
+        variant = kw.get("variant", "cbf")
+        spec = V.FilterSpec(variant, m_bits, kw["k"],
                             block_bits=kw.get("block_bits", 256),
                             z=kw.get("z", 1))
         # space-optimal load per paper §5.1 (solve Eq. 3 for n)
@@ -49,19 +70,103 @@ def run(csv: Csv):
         fpr = float(np.asarray(V.contains(spec, filt, probe)).mean())
         contains = jax.jit(lambda f, k, spec=spec: V.contains(spec, f, k))
         add = jax.jit(lambda f, k, spec=spec: V.add_loop(spec, f, k))
-        add_keys = bench_keys[: 1 << 14]
-        t_c = time_fn(contains, filt, bench_keys)
-        t_a = time_fn(add, filt, add_keys, warmup=1, reps=3)
+        add_keys = bench_keys[: max(n_keys >> 4, 1)]
+        t_c = time_fn(contains, filt, bench_keys, warmup=warmup, reps=reps)
+        t_a = time_fn(add, filt, add_keys, warmup=1, reps=min(reps, 3))
         csv.add(f"fig4/{name}/contains", t_c * 1e6,
-                f"GElem/s={N_KEYS/t_c/1e9:.4f} fpr={fpr:.2e} "
-                f"fpr_theory={V.fpr_theory(spec, len(ins)):.2e}")
+                f"GElem/s={n_keys/t_c/1e9:.4f} fpr={fpr:.2e} "
+                f"fpr_theory={V.fpr_theory(spec, len(ins)):.2e}",
+                n_ops=n_keys)
         csv.add(f"fig4/{name}/add", t_a * 1e6,
-                f"GElem/s={len(add_keys)/t_a/1e9:.4f}")
-        # restore k for reuse of CONFIGS on repeated run() calls
-        kw["k"] = spec.k
+                f"GElem/s={len(add_keys)/t_a/1e9:.4f}", n_ops=len(add_keys))
+
+
+def _sol_row(csv: Csv, name: str, fn, keys, spec, regime: str, *,
+             warmup: int, reps: int, calib, **cfg) -> None:
+    """Time one jitted bulk-contains configuration and report the measured
+    speed-of-light fraction vs the model ceiling + the full prediction."""
+    n = keys.shape[0]
+    t = time_fn(fn, keys, warmup=warmup, reps=reps)
+    mops = n / t / 1e6
+    ceil = PM.ceiling_mops(spec, "contains", regime, n_keys=n, calib=calib,
+                           **cfg)
+    pred = PM.predict_us(
+        PM.op_cost(spec, "contains", regime, n_keys=n, **cfg), calib)
+    csv.add(f"fig4/sol/{name}", t * 1e6,
+            f"Mops={mops:.3f} ceiling_mops={ceil:.1f} sol={mops/ceil:.2e}",
+            n_ops=n, predicted_us=pred)
+
+
+def _speed_of_light(csv: Csv, smoke: bool, warmup: int, reps: int) -> None:
+    # fig4 is the one consumer that *requires* a measured ceiling: the
+    # microbench suite runs once (~1.5s) and is disk-cached per machine.
+    calib = PM.get_calibration(measure=True)
+    tile = 128 if smoke else 256
+    n = (1 << 9) if smoke else (1 << 14)
+    keys = keys_u64x2(n, seed=77)
+
+    # --- blocked Bloom, VMEM regime: full coop x mix grid -----------------
+    spec = V.FilterSpec("sbf", 1 << 16 if smoke else 1 << 20, 8,
+                        block_bits=256)
+    filt = V.add_scatter(spec, V.init(spec), keys[: n // 2])
+    grid = ([("none", "cheap"), ("subtile", "cheap")] if smoke else
+            [(c, m) for c in ops.sbf_k.COOPS for m in ops.sbf_k.MIXES])
+    for coop, mix in grid:
+        fn = jax.jit(lambda k, f=filt, c=coop, m=mix: ops.bloom_contains(
+            spec, f, k, regime="vmem", tile=tile, probe="gather",
+            coop=c, mix=m))
+        _sol_row(csv, f"sbf_vmem/coop={coop}/mix={mix}", fn, keys, spec,
+                 "vmem", warmup=warmup, reps=reps, calib=calib,
+                 probe="gather", coop=coop, mix=mix, tile=tile)
+
+    # --- blocked Bloom, HBM regime: cooperative DMA dedup -----------------
+    for coop in ("none", "subtile"):
+        fn = jax.jit(lambda k, f=filt, c=coop: ops.bloom_contains(
+            spec, f, k, regime="hbm", tile=tile, coop=c, mix="cheap"))
+        _sol_row(csv, f"sbf_hbm/coop={coop}/mix=cheap", fn, keys, spec,
+                 "hbm", warmup=warmup, reps=reps, calib=calib,
+                 coop=coop, mix="cheap", tile=tile, depth=2)
+
+    # --- counting Bloom, VMEM: the 4x counter-word stream -----------------
+    cspec = V.FilterSpec("countingbf", 1 << 14 if smoke else 1 << 18, 4,
+                         block_bits=256)
+    cfilt = ops.counting_add(cspec, V.init(cspec), keys[: n // 2], tile=tile)
+    for coop in ("none", "subtile"):
+        fn = jax.jit(lambda k, f=cfilt, c=coop: ops.counting_contains(
+            cspec, f, k, regime="vmem", tile=tile, coop=c, mix="cheap"))
+        _sol_row(csv, f"countingbf_vmem/coop={coop}/mix=cheap", fn, keys,
+                 cspec, "vmem", warmup=warmup, reps=reps, calib=calib,
+                 coop=coop, mix="cheap", tile=tile)
+
+    # --- fingerprint families: ballot-gated second probe ------------------
+    for family in ("cuckoo", "quotient"):
+        filt_api = api.filter_for_n_items(n // 2, variant=family,
+                                          target_fpr=1e-3)
+        loaded = filt_api.add(keys[: n // 2])
+        fspec, fwords = loaded.spec, loaded.words
+        op = (ops.cuckoo_contains if family == "cuckoo"
+              else ops.quotient_contains)
+        for coop in ("none", "subtile"):
+            fn = jax.jit(lambda k, f=fwords, o=op, s=fspec, c=coop:
+                         o(s, f, k, tile=tile, coop=c))
+            _sol_row(csv, f"{family}_vmem/coop={coop}", fn, keys, fspec,
+                     "vmem", warmup=warmup, reps=reps, calib=calib,
+                     coop=coop, tile=tile)
+
+
+def run(csv: Csv, smoke: bool = False):
+    if smoke:
+        _frontier(csv, SMOKE_CONFIGS, m_bits=1 << 16, n_keys=1 << 10,
+                  n_probe=1 << 12, warmup=1, reps=3)
+        _speed_of_light(csv, smoke=True, warmup=1, reps=3)
+    else:
+        _frontier(csv, CONFIGS, m_bits=M_BITS, n_keys=N_KEYS,
+                  n_probe=N_PROBE, warmup=2, reps=5)
+        _speed_of_light(csv, smoke=False, warmup=2, reps=5)
 
 
 if __name__ == "__main__":
+    import sys
     c = Csv()
     c.header()
-    run(c)
+    run(c, smoke="--smoke" in sys.argv)

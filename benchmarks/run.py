@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
     table2_cache  -> Table 2 (cache-resident sweep)
     layout_grid   -> Tables 1/2 (Θ, Φ) dimension (structural, Pallas kernels)
     fig4_frontier -> Figure 4 (throughput vs FPR frontier, measured FPR)
+                     + per-configuration speed-of-light fraction: measured
+                     Mops/s / calibrated perfmodel ceiling (repro.perfmodel)
     fig5_8_archs  -> Figures 5-8 (cross-accelerator projection, derived)
     fig9_breakdown-> Figure 9 (incremental optimization breakdown)
     dedup         -> framework integration (paper technique in the pipeline)
@@ -21,9 +23,10 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
                      Mops/s, shed rate, recovery drill) — beyond-paper
 
 ``--smoke`` runs a tiny-size subset (window + dedup + api_backends + bank
-+ amq_compare + replay) as a CI health check for the harness itself; the
-numbers are meaningless, the point is that every bench entry point still
-executes.
++ amq_compare + replay + fig4_frontier) as a CI health check for the
+harness itself; the numbers are meaningless, the point is that every
+bench entry point still executes (fig4's smoke also exercises the
+perfmodel calibration + speed-of-light path end to end).
 
 ``--compare BASELINE.json`` is the perf regression gate: every record whose
 name also appears in the baseline (and whose baseline time is above the
@@ -92,6 +95,37 @@ def compare_records(records, baseline_path: str, threshold: float,
     return regressions, len(compared)
 
 
+# The perfmodel's expectation constants describe ranking, not absolute
+# time, so the sanity gate is deliberately loose: a >16x disagreement on a
+# record slow enough to be schedule-dominated (>= 10ms) means a model term
+# is structurally wrong (missing pass, wrong regime), not mistuned.
+MODEL_SANITY_FACTOR = 16.0
+
+
+def model_sanity(records, floor_us: float = COMPARE_FLOOR_US,
+                 factor: float = MODEL_SANITY_FACTOR) -> int:
+    """WARN-ONLY gate: for every record that carries a ``predicted_us``
+    (the fig4 speed-of-light rows) and is above the noise floor, check
+    that measured and model-predicted time agree within ``factor``.
+    Returns the number of warnings; never exits."""
+    checked = warned = 0
+    for rec in records:
+        pred = rec.get("predicted_us")
+        meas = rec.get("us_per_call", 0.0)
+        if pred is None or meas < floor_us or pred <= 0:
+            continue
+        checked += 1
+        ratio = meas / pred
+        if ratio > factor or ratio < 1.0 / factor:
+            warned += 1
+            print(f"# MODEL-SANITY WARNING {rec['name']}: measured "
+                  f"{meas:.1f}us vs predicted {pred:.1f}us "
+                  f"({ratio:.2f}x outside {factor:.0f}x)", flush=True)
+    print(f"# model-sanity: {checked} records checked (>= {floor_us:.0f}us "
+          f"with predicted_us), {warned} warnings (warn-only)", flush=True)
+    return warned
+
+
 def run_compare(csv: Csv, args) -> None:
     regressions, n = compare_records(csv.records, args.compare,
                                      args.compare_threshold,
@@ -139,7 +173,8 @@ def main(argv=None) -> None:
 
     if args.smoke:
         only = set((args.only
-                    or "window,dedup,api_backends,bank,amq_compare,replay"
+                    or "window,dedup,api_backends,bank,amq_compare,replay,"
+                       "fig4_frontier"
                     ).split(","))
         if "window" in only:
             window.run(csv, smoke=True)
@@ -153,6 +188,9 @@ def main(argv=None) -> None:
             amq_compare.run(csv, smoke=True)
         if "replay" in only:
             replay.run(csv, smoke=True)
+        if "fig4_frontier" in only:
+            fig4_frontier.run(csv, smoke=True)
+        model_sanity(csv.records)
         if args.json:
             csv.write_json(args.json)
         if args.compare:
@@ -189,6 +227,7 @@ def main(argv=None) -> None:
             benches[name]()
     if (only is None and not args.skip_layout) or (only and "layout_grid" in only):
         layout_grid.run(csv)
+    model_sanity(csv.records)
     if args.json:
         csv.write_json(args.json)
     if args.compare:

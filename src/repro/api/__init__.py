@@ -29,6 +29,7 @@ from repro.core.variants import FilterSpec
 from repro.api import registry
 from repro.api.filter import BackendOptions, Filter, as_keys
 from repro.api import backends as _backends
+from repro.api.backends import tuned_options
 from repro.api import dist_backends as _dist_backends
 
 _backends.register_all()
@@ -49,7 +50,8 @@ registry.register_alias("pallas", _legacy_pallas)
 def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
                 block_bits: int = 256, z: int = 1, backend: str = "auto",
                 layout=None, tile: Optional[int] = None,
-                probe: str = "auto", depth: Optional[int] = None, mesh=None,
+                probe: str = "auto", depth: Optional[int] = None,
+                coop: str = "auto", mix: str = "auto", mesh=None,
                 axis: str = "data", capacity: Optional[int] = None,
                 generations: Optional[int] = None,
                 slot_bits: int = 8, slots_per_bucket: int = 4,
@@ -66,15 +68,17 @@ def make_filter(variant: str = "sbf", m_bits: int = 1 << 20, k: int = 8,
     ``variant="quotient"`` selects the counting quotient engine
     (``remove`` + lossless ``merge``/``resize``; ``r_bits`` sets the
     stored remainder width). Kernel knobs (``layout``, ``tile``,
-    ``probe``, ``depth``) default to the autotuner's plan
-    (``core.tuning.tune_plan``); pass explicit values to pin them."""
+    ``probe``, ``depth``, ``coop``, ``mix``) default to the autotuner's
+    model-driven plan (``core.tuning.tune_plan``); pass explicit values to
+    pin them (``coop="subtile"`` forces lane-group cooperative probing,
+    ``mix="cheap"`` the fused double-hash — both bit-exact)."""
     spec = FilterSpec(variant=variant, m_bits=m_bits, k=k,
                       block_bits=block_bits, z=z, slot_bits=slot_bits,
                       slots_per_bucket=slots_per_bucket, r_bits=r_bits)
     options = BackendOptions(layout=layout, tile=tile, probe=probe,
-                             depth=depth, mesh=mesh, axis=axis,
-                             capacity=capacity, generations=generations,
-                             impl=impl)
+                             depth=depth, coop=coop, mix=mix, mesh=mesh,
+                             axis=axis, capacity=capacity,
+                             generations=generations, impl=impl)
     eng = registry.select(spec, backend, options.ctx())
     return Filter(spec=spec, words=eng.init(spec, options), backend=eng.name,
                   options=options, state=eng.init_state(spec, options))
@@ -84,7 +88,8 @@ def make_filter_bank(bank, variant: str = "sbf", m_bits: int = 1 << 14,
                      k: int = 8, block_bits: int = 256, z: int = 1,
                      backend: str = "auto", layout=None,
                      tile: Optional[int] = None, probe: str = "auto",
-                     depth: Optional[int] = None, mesh=None,
+                     depth: Optional[int] = None, coop: str = "auto",
+                     mix: str = "auto", mesh=None,
                      axis: str = "data", capacity: Optional[int] = None,
                      generations: Optional[int] = None,
                      slot_bits: int = 8, slots_per_bucket: int = 4,
@@ -111,9 +116,9 @@ def make_filter_bank(bank, variant: str = "sbf", m_bits: int = 1 << 14,
                       block_bits=block_bits, z=z, slot_bits=slot_bits,
                       slots_per_bucket=slots_per_bucket, r_bits=r_bits)
     options = BackendOptions(layout=layout, tile=tile, probe=probe,
-                             depth=depth, mesh=mesh, axis=axis,
-                             capacity=capacity, generations=generations,
-                             impl=impl)
+                             depth=depth, coop=coop, mix=mix, mesh=mesh,
+                             axis=axis, capacity=capacity,
+                             generations=generations, impl=impl)
     total = 1
     for d in bank_shape:
         total *= d
@@ -254,4 +259,4 @@ def get_backend(name: str) -> registry.Backend:
 __all__ = ["Filter", "FilterSpec", "BackendOptions", "as_keys", "registry",
            "make_filter", "make_filter_bank", "route", "filter_for_n_items",
            "filter_for_workload", "union", "backends", "describe_backends",
-           "get_backend"]
+           "get_backend", "tuned_options"]

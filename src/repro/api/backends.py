@@ -108,7 +108,8 @@ class _PallasBackend(Backend):
         return V.init(spec)
 
     def _kw(self, options):
-        kw = {"regime": self.regime, "probe": options.probe}
+        kw = {"regime": self.regime, "probe": options.probe,
+              "coop": options.coop, "mix": options.mix}
         if options.layout is not None:
             kw["layout"] = options.layout
         if options.tile is not None:
@@ -138,7 +139,7 @@ class PallasVmemBackend(_PallasBackend):
     supports_bank = True
 
     def _bank_kw(self, options):
-        kw = {"probe": options.probe}
+        kw = {"probe": options.probe, "mix": options.mix}
         if options.layout is not None:
             kw["layout"] = options.layout
         if options.tile is not None:
@@ -236,7 +237,8 @@ class CountingBackend(Backend):
         return jax.default_backend() == "tpu"
 
     def _kw(self, options):
-        kw = {"layout": options.layout, "probe": options.probe}
+        kw = {"layout": options.layout, "probe": options.probe,
+              "coop": options.coop, "mix": options.mix}
         if options.tile is not None:
             kw["tile"] = options.tile
         return kw
@@ -286,7 +288,8 @@ class CountingBackend(Backend):
     def _bank_update(self, spec, words, keys, member, valid, op, options):
         if self._tpu():
             from repro.kernels import ops
-            kw = {"probe": options.probe, "layout": options.layout}
+            kw = {"probe": options.probe, "layout": options.layout,
+                  "mix": options.mix}
             if options.tile is not None:
                 kw["tile"] = options.tile
             return ops.counting_bank_update(spec, words, keys, member, op,
@@ -472,7 +475,8 @@ class CuckooBackend(Backend):
             from repro.kernels import ops
             return ops.cuckoo_contains(
                 spec, words, keys,
-                tile=options.tile if options.tile else None)
+                tile=options.tile if options.tile else None,
+                coop=options.coop)
         from repro.core import fingerprint as F
         return F.cuckoo_contains(spec, words, keys)
 
@@ -572,7 +576,8 @@ class QuotientBackend(CuckooBackend):
             from repro.kernels import ops
             return ops.quotient_contains(
                 spec, words, keys,
-                tile=options.tile if options.tile else None)
+                tile=options.tile if options.tile else None,
+                coop=options.coop)
         from repro.core import quotient as Q
         return Q.quotient_contains(spec, words, keys)
 
@@ -632,7 +637,7 @@ def tuned_options(spec: FilterSpec, op: str = "contains",
     plan = tuning.tune_plan(spec, op, regime=kops._regime(spec, regime),
                             tile=tile)
     return BackendOptions(layout=plan.layout, tile=tile, probe=plan.probe,
-                          depth=plan.depth)
+                          depth=plan.depth, coop=plan.coop, mix=plan.mix)
 
 
 def register_all():

@@ -49,10 +49,11 @@ class BackendOptions:
     ``tile`` / ``probe`` / ``depth`` steer the Pallas kernels,
     ``mesh``/``axis``/``capacity`` the distributed engines.
 
-    ``probe="auto"`` and ``depth=None`` resolve through
-    ``core.tuning.tune_plan`` at trace time — the tuned plan (probe
-    strategy, DMA pipeline depth, layout) flows from the disk-persisted
-    tuning cache into every kernel launched through the API.
+    ``probe="auto"``, ``coop="auto"``, ``mix="auto"`` and ``depth=None``
+    resolve through ``core.tuning.tune_plan`` at trace time — the tuned
+    plan (probe strategy, cooperation mode, hash mix, DMA pipeline depth,
+    layout) flows from the disk-persisted tuning cache into every kernel
+    launched through the API.
 
     Note the windowed ring *head* is NOT here: it is traced per-filter
     state (``Filter.state``), so ``advance()`` never changes the pytree
@@ -63,6 +64,8 @@ class BackendOptions:
     tile: Optional[int] = None         # Pallas key-tile override
     probe: str = "auto"                # vmem phase 2: "loop"|"gather"|"auto"
     depth: Optional[int] = None        # HBM contains DMA pipeline depth
+    coop: str = "auto"                 # "none"|"subtile"|"auto" lane groups
+    mix: str = "auto"                  # "full"|"cheap"|"auto" fused hash
     mesh: Optional[object] = None      # jax.sharding.Mesh
     axis: str = "data"
     capacity: Optional[int] = None     # sharded routing capacity per (src,dst)

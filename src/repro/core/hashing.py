@@ -97,6 +97,38 @@ def xxh32_u64x2(keys: jnp.ndarray, seed=SEED_PATTERN) -> jnp.ndarray:
     return acc
 
 
+def xxh32_u64x2_pair(keys: jnp.ndarray):
+    """Fused dual-seed xxHash32 — both hash streams from ONE wide mix.
+
+    Returns ``(xxh32_u64x2(keys, SEED_PATTERN), xxh32_u64x2(keys, SEED_BLOCK))``
+    bit-for-bit, but computes the seed-independent lane products
+    ``lane * PRIME3`` once and feeds them to both accumulators. The seed
+    only enters xxHash32 through the accumulator initial value, so the
+    per-lane multiplies (the expensive u32 ops on a 32-bit VPU) are shared:
+    2 of the 8 multiplies drop out relative to two independent evaluations.
+    This is the ``mix="cheap"`` engine option (paper §4.2's fused
+    multi-hash): identical uint32 arithmetic, merely restructured, which is
+    what keeps every kernel built on it bit-exact with ``mix="full"``.
+    """
+    keys = _u32(keys)
+    hi = keys[..., 0]
+    lo = keys[..., 1]
+    plo = lo * _P3                       # seed-independent lane products,
+    phi = hi * _P3                       # computed once for both streams
+    outs = []
+    for seed in (SEED_PATTERN, SEED_BLOCK):
+        acc = _u32(seed) + _P5 + np.uint32(8)
+        for lanep in (plo, phi):         # little-endian order: low word first
+            acc = rotl32(acc + lanep, 17) * _P4
+        acc = acc ^ (acc >> np.uint32(15))
+        acc = acc * _P2
+        acc = acc ^ (acc >> np.uint32(13))
+        acc = acc * _P3
+        acc = acc ^ (acc >> np.uint32(16))
+        outs.append(acc)
+    return outs[0], outs[1]
+
+
 def xxh32_u32(keys: jnp.ndarray, seed=SEED_PATTERN) -> jnp.ndarray:
     """Exact xxHash32 of a 4-byte key (single uint32 lane)."""
     keys = _u32(keys)

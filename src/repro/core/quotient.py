@@ -268,6 +268,42 @@ def quotient_contains(spec: FilterSpec, table: jnp.ndarray,
     return home_occupied & jnp.any(hit, axis=1)
 
 
+def quotient_contains_coop(spec: FilterSpec, table: jnp.ndarray,
+                           keys: jnp.ndarray) -> jnp.ndarray:
+    """Cooperative early-exit contains: the tile shares ONE home-slot
+    ballot before paying for the run scan. ``home_occupied`` needs only the
+    decoded occupied bits (one gather per key); the rotation, the two
+    cumulative scans and the (tile × n_slots) hit matrix — the expensive
+    phase — run under a ``lax.cond`` that the whole tile skips when no
+    key's home quotient is occupied (every result is then False by the
+    ``home_occupied &`` guard). Bit-exact with :func:`quotient_contains`
+    for either branch, kernel-safe like the baseline (this function is the
+    coop Pallas contains kernel body)."""
+    n = spec.n_slots
+    lanes = unpack_slots(spec, table)
+    occ, cont, _, in_use, rem = _fields(spec, lanes)
+    fp = quotient_hashes(spec, keys)
+    q, pr = split_fp(spec, fp)
+    home_occupied = jnp.take(occ, q, axis=0)
+
+    def run_scan(ho):
+        anchor = jnp.argmax(~in_use).astype(jnp.int32)
+        occ_r = _rotated(n, anchor, occ)
+        cont_r = _rotated(n, anchor, cont)
+        in_use_r = _rotated(n, anchor, in_use)
+        rem_r = _rotated(n, anchor, rem)
+        runs_upto = jnp.cumsum((in_use_r & ~cont_r).astype(jnp.int32))
+        occ_upto = jnp.cumsum(occ_r.astype(jnp.int32))
+        run_id = jnp.take(occ_upto, jnp.mod(q - anchor - 1, n), axis=0)
+        hit = (in_use_r[None, :]
+               & (runs_upto[None, :] == run_id[:, None])
+               & (rem_r[None, :] == pr[:, None]))
+        return ho & jnp.any(hit, axis=1)
+
+    return jax.lax.cond(jnp.any(home_occupied), run_scan,
+                        lambda ho: jnp.zeros_like(ho), home_occupied)
+
+
 # ---------------------------------------------------------------------------
 # add / remove — decode + rebuild tiles (shared verbatim by the kernels)
 # ---------------------------------------------------------------------------

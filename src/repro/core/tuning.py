@@ -12,11 +12,13 @@ the kernels:
 * ``mode="measure"`` times the Pallas kernels, best-of-``repeats`` after a
   warmup run to de-noise the grid (meaningful on real TPU; in interpret
   mode the ratios reflect schedule structure);
-* ``mode="structural"`` scores candidates analytically (loads per block,
-  strided steps, vector width, schedule-step counts, DMA stall model — the
-  §4.1 derivations) and applies the paper's empirical tie-breaks
-  (Θ̂_c = max(1, B/256), Θ̂_a = s), giving a deterministic offline choice
-  for dry-run/compile-only environments.
+* ``mode="structural"`` (default) ranks the candidate grid — now including
+  the cooperation axes (``coop``: lane-group subtile probing, ``mix``:
+  fused cheap double-hash) — by the calibrated performance model's
+  predicted cost (``repro.perfmodel``: bytes moved / flops / launch and
+  schedule overhead per bulk op, converted to time through the measured
+  machine calibration). The original §4.1 structural scorers remain for
+  ``tune_layout`` (the paper's empirical Θ̂ tie-breaks) and diagnostics.
 
 Results are cached per (spec, op, mode, tile[, regime]) in-process AND in a
 disk-persisted JSON cache (``REPRO_TUNING_CACHE`` env var, default
@@ -56,16 +58,20 @@ class Plan:
     probe: str = "gather"          # "loop" | "gather" (vmem-regime phase 2)
     depth: int = 2                 # HBM contains DMA pipeline depth
     n_segments: int = 8            # partitioned bulk-add grid width
+    coop: str = "none"             # "none" | "subtile" lane-group probing
+    mix: str = "full"              # "full" | "cheap" fused double-hash
 
     def to_dict(self) -> dict:
         return {"theta": self.layout.theta, "phi": self.layout.phi,
                 "probe": self.probe, "depth": self.depth,
-                "n_segments": self.n_segments}
+                "n_segments": self.n_segments, "coop": self.coop,
+                "mix": self.mix}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Plan":
         return cls(Layout(int(d["theta"]), int(d["phi"])), str(d["probe"]),
-                   int(d["depth"]), int(d["n_segments"]))
+                   int(d["depth"]), int(d["n_segments"]),
+                   str(d.get("coop", "none")), str(d.get("mix", "full")))
 
 
 # ---------------------------------------------------------------------------
@@ -103,18 +109,26 @@ def _store_disk(key: str, value: dict) -> None:
 
 
 def _plan_key(spec: FilterSpec, op: str, regime: str, mode: str,
-              tile: int, bank: int = 1) -> str:
+              tile: int, bank: int = 1, coop: str = "auto",
+              mix: str = "auto") -> str:
     # The backend is part of the key: measure-mode timings taken in CPU
     # interpret mode must never pin a plan for a real TPU run (the same
     # stale-key class of bug as omitting tile). ``bank`` joins the key for
     # the same reason — a B-member bank shifts the loop/gather crossover
     # (B× the gather index space, B× the RMW working set) and must never
-    # silently reuse a plan tuned for the scalar filter. bank=1 keeps the
-    # pre-bank key spelling so existing disk caches stay warm.
+    # silently reuse a plan tuned for the scalar filter.
+    # ``coop``/``mix`` join the key because a PINNED cooperation or mix
+    # axis restricts the candidate grid: a plan tuned under coop="none"
+    # must never answer a coop="subtile" query (and vice versa) — the same
+    # stale-key bug class again. The "plan2" version prefix retires every
+    # pre-cooperation cache entry wholesale: old entries lack the
+    # coop/mix fields and were ranked by the structural scorer, not the
+    # perfmodel predictor.
     # ``str(spec)`` carries the variant name AND every variant-specific
     # geometry field (FilterSpec.__str__ spells cuckoo slot geometry out),
     # so same-m specs of different variants never share an entry.
-    base = f"plan|{jax.default_backend()}|{spec}|{op}|{regime}|{mode}|tile{tile}"
+    base = (f"plan2|{jax.default_backend()}|{spec}|{op}|{regime}|{mode}"
+            f"|tile{tile}|coop:{coop}|mix:{mix}")
     return base if bank == 1 else f"{base}|bank{bank}"
 
 
@@ -264,62 +278,114 @@ def tune_layout(spec: FilterSpec, op: str = "contains",
 # Full-plan sweep: probe strategy x depth x segments (+ the layout grid)
 # ---------------------------------------------------------------------------
 
+def _model_candidates(coop: str, mix: str):
+    """The (probe, coop, mix) candidate grid under optional pinning.
+    coop="subtile" supersedes the probe strategy in the kernels, so
+    cooperative candidates are canonicalized to probe="gather" — one
+    spelling per distinct schedule, no duplicate cache entries. Order
+    breaks predicted-cost ties toward the non-coop baseline and the full
+    mix's cheap sibling is ranked by its strictly-lower flop count."""
+    coops = ("none", "subtile") if coop == "auto" else (coop,)
+    mixes = ("cheap", "full") if mix == "auto" else (mix,)
+    out = []
+    for c in coops:
+        probes = ("gather", "loop") if c == "none" else ("gather",)
+        for p in probes:
+            for m in mixes:
+                out.append((p, c, m))
+    return out
+
+
 @functools.lru_cache(maxsize=256)
 def tune_plan(spec: FilterSpec, op: str = "contains", regime: str = "vmem",
               mode: str = "structural", n_keys: int = 1024, repeats: int = 3,
-              tile: int = DEFAULT_TILE, bank: int = 1) -> Plan:
-    """Pick (layout, probe, depth, n_segments) for a (spec, op, regime).
+              tile: int = DEFAULT_TILE, bank: int = 1, coop: str = "auto",
+              mix: str = "auto") -> Plan:
+    """Pick (layout, probe, coop, mix, depth, n_segments) for a
+    (spec, op, regime).
 
-    Checks the disk cache first; a miss runs the sweep (structural scores
-    or best-of-k measurements) and persists the winner, so every process
-    on a host converges to one tuned plan per configuration.
+    Checks the disk cache first; a miss runs the sweep and persists the
+    winner, so every process on a host converges to one tuned plan per
+    configuration. The default (non-measure) mode ranks the full
+    (layout x probe x coop x mix x depth) candidate grid by the
+    calibrated performance model's predicted cost
+    (``perfmodel.predict_config_us``) — the structural scorers survive as
+    the legacy ``tune_layout`` path and for diagnostics, but plan
+    selection is model-driven.
+
+    ``coop``/``mix``: ``"auto"`` sweeps both axes; a pinned value
+    restricts the grid (and keys the cache entry — see ``_plan_key``).
+    ``mode="measure"`` still times the actual kernels for the probe/depth
+    axes and keeps the pinned-or-baseline coop/mix (measuring the
+    cooperative kernels adds nothing off-TPU where every path is
+    interpret-mode).
 
     ``bank`` keys the plan to a B-member :class:`FilterBank` workload: the
-    structural probe choice scales the loop probe's per-trip cost by the
-    bank's deeper working set while the gather probe stays whole-tile
-    constant, and measure-mode timings are taken on the scalar kernels
-    only (bank kernels share their schedule, offset arithmetic aside).
+    model scales the loop probe's per-trip cost by the bank's deeper
+    working set while the gather probe stays whole-tile constant.
     """
     assert op in ("contains", "add") and bank >= 1
-    key = _plan_key(spec, op, regime, mode, tile, bank)
+    from repro.kernels.sbf import COOPS, DMA_DEPTHS, MIXES, PROBES
+    assert coop == "auto" or coop in COOPS, coop
+    assert mix == "auto" or mix in MIXES, mix
+    key = _plan_key(spec, op, regime, mode, tile, bank, coop, mix)
     cached = _load_disk().get(key)
     if cached is not None:
         try:
             plan = Plan.from_dict(cached)
             # Re-validate against the CURRENT constraint sets — a stale
             # entry from an older library version (depth no longer in the
-            # sweep, renamed probe, Θ that stopped dividing the tile) must
-            # re-tune, not crash every probe="auto" call until the user
-            # deletes the cache file by hand.
-            from repro.kernels.sbf import DMA_DEPTHS, PROBES
+            # sweep, renamed probe/coop/mix, Θ that stopped dividing the
+            # tile) must re-tune, not crash every probe="auto" call until
+            # the user deletes the cache file by hand.
             if (plan.probe in PROBES and plan.depth in DMA_DEPTHS
-                    and plan.n_segments in TUNABLE_SEGMENTS):
+                    and plan.n_segments in TUNABLE_SEGMENTS
+                    and plan.coop in COOPS and plan.mix in MIXES):
                 plan.layout.validate(spec, tile)
                 return plan
         except (KeyError, ValueError, TypeError, AssertionError):
             pass                   # stale/corrupt entry: re-tune
     layout, _ = tune_layout(spec, op, mode=mode, n_keys=n_keys,
                             repeats=repeats, tile=tile)
-    if mode == "measure" and regime == "vmem":
-        t_loop = _measure(spec, op, n_keys, repeats, layout=layout,
-                          tile=tile, probe="loop", regime="vmem")
-        t_gather = _measure(spec, op, n_keys, repeats, tile=tile,
-                            probe="gather", regime="vmem")
-        probe = "gather" if t_gather <= t_loop else "loop"
+    if mode == "measure":
+        if regime == "vmem":
+            t_loop = _measure(spec, op, n_keys, repeats, layout=layout,
+                              tile=tile, probe="loop", regime="vmem")
+            t_gather = _measure(spec, op, n_keys, repeats, tile=tile,
+                                probe="gather", regime="vmem")
+            probe = "gather" if t_gather <= t_loop else "loop"
+        else:
+            probe = "gather"
+        if regime == "hbm" and op == "contains":
+            timed = {d: _measure(spec, op, n_keys, repeats, regime="hbm",
+                                 tile=tile, depth=d) for d in TUNABLE_DEPTHS}
+            depth = min(timed, key=timed.get)
+        else:
+            depth = min(TUNABLE_DEPTHS,
+                        key=lambda d: depth_structural_score(spec, d))
+        best_coop = coop if coop != "auto" else "none"
+        best_mix = mix if mix != "auto" else "full"
     else:
-        steps = {p: probe_schedule_steps(spec, layout, op, tile, p, bank=bank)
-                 for p in ("loop", "gather")}
-        probe = min(steps, key=steps.get)
-    if mode == "measure" and regime == "hbm" and op == "contains":
-        timed = {d: _measure(spec, op, n_keys, repeats, regime="hbm",
-                             tile=tile, depth=d) for d in TUNABLE_DEPTHS}
-        depth = min(timed, key=timed.get)
-    else:
+        from repro import perfmodel as PM
+        calib = PM.get_calibration()
+
+        def score(p, c, m, d):
+            t = PM.predict_config_us(spec, op, regime, layout=layout,
+                                     probe=p, coop=c, mix=m, depth=d,
+                                     tile=tile, bank=bank, calib=calib)
+            flops = PM.op_cost(spec, op, regime, layout=layout, probe=p,
+                               coop=c, mix=m, depth=d, tile=tile,
+                               n_keys=tile, bank=bank).flops
+            return (t, flops)      # flop tie-break: cheap mix wins ties
+
+        cands = _model_candidates(coop, mix)
+        probe, best_coop, best_mix = min(
+            cands, key=lambda pcm: score(*pcm, 2))
         depth = min(TUNABLE_DEPTHS,
-                    key=lambda d: depth_structural_score(spec, d))
+                    key=lambda d: score(probe, "none", best_mix, d))
     n_segments = min(TUNABLE_SEGMENTS,
                      key=lambda ns: segments_structural_score(spec, ns))
     plan = Plan(layout=layout, probe=probe, depth=depth,
-                n_segments=n_segments)
+                n_segments=n_segments, coop=best_coop, mix=best_mix)
     _store_disk(key, plan.to_dict())
     return plan

@@ -34,20 +34,20 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import hashing as H
 from repro.core import variants as V
 from repro.core.variants import FilterSpec
-from repro.kernels.sbf import (DEFAULT_DMA_DEPTH, DEFAULT_TILE, DMA_DEPTHS,
-                               Layout, PROBES, _COMPILER_PARAMS, _mask_row,
+from repro.kernels.sbf import (COOPS, DEFAULT_DMA_DEPTH, DEFAULT_TILE,
+                               DMA_DEPTHS, Layout, MIXES, PROBES,
+                               _COMPILER_PARAMS, _hash_streams, _mask_row,
                                _take_scalar)
 
 
 def _cfingerprints(spec: FilterSpec, keys: jnp.ndarray,
-                   valid: jnp.ndarray = None):
+                   valid: jnp.ndarray = None, mix: str = "full"):
     """Lockstep phase 1 for counting kernels.
 
     Returns (cstarts[int32], cmasks[uint32 (n, 4s)]): counter-row starts and
     nibble-increment words, already valid-masked (padded slots -> all-zero
     rows, an RMW no-op)."""
-    h1 = H.xxh32_u64x2(keys, H.SEED_PATTERN)
-    h2 = H.xxh32_u64x2(keys, H.SEED_BLOCK)
+    h1, h2 = _hash_streams(keys, mix)
     blk = H.block_index(h2, spec.n_blocks)
     masks = V.block_patterns(spec, h1, batched=False)
     cmasks = V.expand_mask_words(masks)                       # (n, 4s)
@@ -86,7 +86,8 @@ def default_counting_layout(spec: FilterSpec, op: str) -> Layout:
 # ---------------------------------------------------------------------------
 
 def _update_vmem_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
-                        spec: FilterSpec, layout: Layout, tile: int, op: str):
+                        spec: FilterSpec, layout: Layout, tile: int, op: str,
+                        mix: str):
     cs, theta, phi = spec.counter_row_words, layout.theta, layout.phi
     n_chunks = cs // phi
     update = _update(op)
@@ -95,7 +96,8 @@ def _update_vmem_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
     def _seed():
         out_ref[...] = filt_ref[...]
 
-    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...])
+    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...],
+                                     mix=mix)
 
     def group_body(g, carry):
         base = g * theta
@@ -130,7 +132,8 @@ def _accumulate(op: str):
 
 
 def _update_vmem_gather_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
-                               spec: FilterSpec, tile: int, op: str):
+                               spec: FilterSpec, tile: int, op: str,
+                               mix: str):
     cs = spec.counter_row_words
     apply = _accumulate(op)
 
@@ -138,7 +141,8 @@ def _update_vmem_gather_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
     def _seed():
         out_ref[...] = filt_ref[...]
 
-    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...])
+    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...],
+                                     mix=mix)
     blk = jax.lax.div(cstarts, jnp.int32(cs))
     order = jnp.argsort(blk)
     sb = blk[order]
@@ -149,10 +153,9 @@ def _update_vmem_gather_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
 
 
 def _contains_vmem_gather_kernel(keys_ref, filt_ref, out_ref, *,
-                                 spec: FilterSpec, tile: int):
+                                 spec: FilterSpec, tile: int, mix: str):
     cs = spec.counter_row_words
-    h1 = H.xxh32_u64x2(keys_ref[...], H.SEED_PATTERN)
-    h2 = H.xxh32_u64x2(keys_ref[...], H.SEED_BLOCK)
+    h1, h2 = _hash_streams(keys_ref[...], mix)
     blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
     masks = V.block_patterns(spec, h1, batched=False)          # logical (n, s)
     rows = jnp.take(filt_ref[...].reshape(-1, cs), blk, axis=0)  # (tile, 4s)
@@ -161,11 +164,10 @@ def _contains_vmem_gather_kernel(keys_ref, filt_ref, out_ref, *,
 
 
 def _contains_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
-                          layout: Layout, tile: int):
+                          layout: Layout, tile: int, mix: str):
     cs, theta, phi = spec.counter_row_words, layout.theta, layout.phi
     n_chunks = cs // phi
-    h1 = H.xxh32_u64x2(keys_ref[...], H.SEED_PATTERN)
-    h2 = H.xxh32_u64x2(keys_ref[...], H.SEED_BLOCK)
+    h1, h2 = _hash_streams(keys_ref[...], mix)
     blk = H.block_index(h2, spec.n_blocks)
     masks = V.block_patterns(spec, h1, batched=False)          # logical (n, s)
     cstarts = (blk * jnp.uint32(cs)).astype(jnp.int32)
@@ -191,24 +193,92 @@ def _contains_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
     out_ref[...] = out
 
 
+# ---------------------------------------------------------------------------
+# Cooperative sub-tile kernels (coop="subtile") — counting analogue
+# ---------------------------------------------------------------------------
+# Same cooperative tiling as sbf, at COUNTER-WORD granularity:
+#
+# * update: every (key, counter word) pair becomes one lane of a
+#   (tile*4s,) flat stream, sorted by absolute counter-word index and
+#   collapsed with the segmented saturating nibble add — one flat gather +
+#   one conflict-free flat scatter per tile, each unique counter WORD
+#   touched once (the "none" gather engine collapses at row granularity).
+#   Bit-exact because min(Σ, 15) is grouping-independent for nonnegative
+#   nibbles, per word exactly as per row.
+# * contains: column-major early-exit over LOGICAL word columns — column c
+#   gathers its 4 counter words, collapses them to the occupancy word, and
+#   folds the test into the per-key alive mask under a lax.cond ballot.
+
+def _update_vmem_coop_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
+                             spec: FilterSpec, tile: int, op: str, mix: str):
+    cs = spec.counter_row_words
+    apply = _accumulate(op)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...],
+                                     mix=mix)
+    idx = (cstarts[:, None]
+           + jax.lax.broadcasted_iota(jnp.int32, (tile, cs), 1)
+           ).reshape(tile * cs)
+    vals = cmasks.reshape(tile * cs)
+    order = jnp.argsort(idx)
+    si = idx[order]
+    tot = V.segment_totals(si, vals[order][:, None], V.nib_sat_add_words)[:, 0]
+    f = out_ref[...]
+    words = jnp.take(f, si, axis=0)
+    # duplicate indices carry identical segment totals -> deterministic set
+    out_ref[...] = f.at[si].set(apply(words, tot))
+
+
+def _contains_vmem_coop_kernel(keys_ref, filt_ref, out_ref, *,
+                               spec: FilterSpec, tile: int, mix: str):
+    cs = spec.counter_row_words
+    h1, h2 = _hash_streams(keys_ref[...], mix)
+    blk = H.block_index(h2, spec.n_blocks)
+    masks = V.block_patterns(spec, h1, batched=False)          # logical (n, s)
+    cstarts = (blk * jnp.uint32(cs)).astype(jnp.int32)
+    filt = filt_ref[...]
+    alive = jnp.ones((tile,), jnp.bool_)
+    for c in range(spec.s):                     # static unroll over columns
+        m = masks[:, c]
+
+        def probe_col(al, m=m, c=c):
+            cw = jnp.stack([jnp.take(filt, cstarts + 4 * c + j, axis=0)
+                            for j in range(4)], axis=-1)       # (tile, 4)
+            occ = V.collapse_counter_words(cw)[:, 0]           # (tile,)
+            return al & ((occ & m) == m)
+
+        alive = jax.lax.cond(jnp.any(alive), probe_col, lambda al: al, alive)
+    out_ref[...] = alive
+
+
 def update_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                 valid: jnp.ndarray, op: str, layout: Layout = None,
                 tile: int = DEFAULT_TILE, interpret: bool = True,
-                probe: str = "loop") -> jnp.ndarray:
+                probe: str = "loop", coop: str = "none",
+                mix: str = "full") -> jnp.ndarray:
     """Bulk increment/decrement, whole counter array pinned in VMEM."""
     n = keys.shape[0]
     assert n % tile == 0
     assert probe in PROBES, probe
+    assert coop in COOPS, coop
+    assert mix in MIXES, mix
     # An explicitly-passed layout is validated regardless of probe — the
     # gather engine ignores it, but never silently accepts an invalid one.
     layout = counting_layout(
         spec, layout or default_counting_layout(spec, op), tile)
-    if probe == "gather":
+    if coop == "subtile":      # cooperative schedule supersedes the probe
+        kern = functools.partial(_update_vmem_coop_kernel, spec=spec,
+                                 tile=tile, op=op, mix=mix)
+    elif probe == "gather":
         kern = functools.partial(_update_vmem_gather_kernel, spec=spec,
-                                 tile=tile, op=op)
+                                 tile=tile, op=op, mix=mix)
     else:
         kern = functools.partial(_update_vmem_kernel, spec=spec, layout=layout,
-                                 tile=tile, op=op)
+                                 tile=tile, op=op, mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -225,18 +295,24 @@ def update_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                   layout: Layout = None, tile: int = DEFAULT_TILE,
-                  interpret: bool = True, probe: str = "loop") -> jnp.ndarray:
+                  interpret: bool = True, probe: str = "loop",
+                  coop: str = "none", mix: str = "full") -> jnp.ndarray:
     n = keys.shape[0]
     assert n % tile == 0
     assert probe in PROBES, probe
+    assert coop in COOPS, coop
+    assert mix in MIXES, mix
     layout = counting_layout(
         spec, layout or default_counting_layout(spec, "contains"), tile)
-    if probe == "gather":
+    if coop == "subtile":      # cooperative schedule supersedes the probe
+        kern = functools.partial(_contains_vmem_coop_kernel, spec=spec,
+                                 tile=tile, mix=mix)
+    elif probe == "gather":
         kern = functools.partial(_contains_vmem_gather_kernel, spec=spec,
-                                 tile=tile)
+                                 tile=tile, mix=mix)
     else:
         kern = functools.partial(_contains_vmem_kernel, spec=spec,
-                                 layout=layout, tile=tile)
+                                 layout=layout, tile=tile, mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -260,14 +336,15 @@ def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 # idempotent) and same-row increments collapse through the segmented
 # saturating nibble add before the one row scatter (gather probe).
 
-def _bank_cstarts(spec: FilterSpec, keys, member, valid=None):
-    cstarts, cmasks = _cfingerprints(spec, keys, valid)
+def _bank_cstarts(spec: FilterSpec, keys, member, valid=None,
+                  mix: str = "full"):
+    cstarts, cmasks = _cfingerprints(spec, keys, valid, mix=mix)
     return cstarts + member * jnp.int32(spec.storage_words), cmasks
 
 
 def _bank_update_vmem_gather_kernel(keys_ref, member_ref, valid_ref, filt_ref,
                                     out_ref, *, spec: FilterSpec, tile: int,
-                                    bank: int, op: str):
+                                    bank: int, op: str, mix: str):
     cs = spec.counter_row_words
     apply = _accumulate(op)
 
@@ -276,7 +353,7 @@ def _bank_update_vmem_gather_kernel(keys_ref, member_ref, valid_ref, filt_ref,
         out_ref[...] = filt_ref[...]
 
     cstarts, cmasks = _bank_cstarts(spec, keys_ref[...], member_ref[...],
-                                    valid_ref[...])
+                                    valid_ref[...], mix=mix)
     blk = jax.lax.div(cstarts, jnp.int32(cs))       # member-offset row ids
     order = jnp.argsort(blk)
     sb = blk[order]
@@ -288,7 +365,7 @@ def _bank_update_vmem_gather_kernel(keys_ref, member_ref, valid_ref, filt_ref,
 
 def _bank_update_vmem_kernel(keys_ref, member_ref, valid_ref, filt_ref,
                              out_ref, *, spec: FilterSpec, layout: Layout,
-                             tile: int, op: str):
+                             tile: int, op: str, mix: str):
     cs, theta, phi = spec.counter_row_words, layout.theta, layout.phi
     n_chunks = cs // phi
     update = _update(op)
@@ -298,7 +375,7 @@ def _bank_update_vmem_kernel(keys_ref, member_ref, valid_ref, filt_ref,
         out_ref[...] = filt_ref[...]
 
     cstarts, cmasks = _bank_cstarts(spec, keys_ref[...], member_ref[...],
-                                    valid_ref[...])
+                                    valid_ref[...], mix=mix)
 
     def group_body(g, carry):
         base = g * theta
@@ -318,10 +395,9 @@ def _bank_update_vmem_kernel(keys_ref, member_ref, valid_ref, filt_ref,
 
 def _bank_contains_vmem_gather_kernel(keys_ref, member_ref, filt_ref, out_ref,
                                       *, spec: FilterSpec, tile: int,
-                                      bank: int):
+                                      bank: int, mix: str):
     cs = spec.counter_row_words
-    h1 = H.xxh32_u64x2(keys_ref[...], H.SEED_PATTERN)
-    h2 = H.xxh32_u64x2(keys_ref[...], H.SEED_BLOCK)
+    h1, h2 = _hash_streams(keys_ref[...], mix)
     blk = H.block_index(h2, spec.n_blocks).astype(jnp.int32)
     blk = member_ref[...] * jnp.int32(spec.n_blocks) + blk
     masks = V.block_patterns(spec, h1, batched=False)          # logical (n, s)
@@ -334,21 +410,22 @@ def _bank_contains_vmem_gather_kernel(keys_ref, member_ref, filt_ref, out_ref,
 def bank_update_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
                      member: jnp.ndarray, valid: jnp.ndarray, op: str,
                      layout: Layout = None, tile: int = DEFAULT_TILE,
-                     interpret: bool = True, probe: str = "gather"
-                     ) -> jnp.ndarray:
+                     interpret: bool = True, probe: str = "gather",
+                     mix: str = "full") -> jnp.ndarray:
     """Flat routed counter update of a (B, storage_words) bank — one launch."""
     n = keys.shape[0]
     assert n % tile == 0 and member.shape == (n,) and valid.shape == (n,)
     assert probe in PROBES, probe
+    assert mix in MIXES, mix
     B, flat = bank.shape[0], bank.reshape(-1)
     layout = counting_layout(
         spec, layout or default_counting_layout(spec, op), tile)
     if probe == "gather":
         kern = functools.partial(_bank_update_vmem_gather_kernel, spec=spec,
-                                 tile=tile, bank=B, op=op)
+                                 tile=tile, bank=B, op=op, mix=mix)
     else:
         kern = functools.partial(_bank_update_vmem_kernel, spec=spec,
-                                 layout=layout, tile=tile, op=op)
+                                 layout=layout, tile=tile, op=op, mix=mix)
     out = pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -367,14 +444,16 @@ def bank_update_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
 
 def bank_contains_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
                        member: jnp.ndarray, tile: int = DEFAULT_TILE,
-                       interpret: bool = True) -> jnp.ndarray:
+                       interpret: bool = True, mix: str = "full"
+                       ) -> jnp.ndarray:
     """Flat routed occupancy membership against a counter bank — one launch
     (whole-tile gather probe; the loop probe adds nothing for banks)."""
     n = keys.shape[0]
     assert n % tile == 0 and member.shape == (n,)
+    assert mix in MIXES, mix
     B, flat = bank.shape[0], bank.reshape(-1)
     kern = functools.partial(_bank_contains_vmem_gather_kernel, spec=spec,
-                             tile=tile, bank=B)
+                             tile=tile, bank=B, mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -394,7 +473,8 @@ def bank_contains_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _update_hbm_kernel(keys_ref, valid_ref, filt_hbm, out_hbm, scratch,
-                       sem_r, sem_w, *, spec: FilterSpec, tile: int, op: str):
+                       sem_r, sem_w, *, spec: FilterSpec, tile: int, op: str,
+                       mix: str):
     """Block-sorted coalesced DMA RMW: the tile is sorted by counter row
     and same-row increments collapse to one total via the segmented
     saturating nibble add, so the DMA loop touches each *unique* row once
@@ -409,7 +489,8 @@ def _update_hbm_kernel(keys_ref, valid_ref, filt_hbm, out_hbm, scratch,
         cp.start()
         cp.wait()
 
-    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...])
+    cstarts, cmasks = _cfingerprints(spec, keys_ref[...], valid_ref[...],
+                                     mix=mix)
     order = jnp.argsort(cstarts)
     sst = cstarts[order]
     totals = V.segment_totals(sst, cmasks[order], V.nib_sat_add_words)
@@ -436,12 +517,11 @@ def _update_hbm_kernel(keys_ref, valid_ref, filt_hbm, out_hbm, scratch,
 
 
 def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
-                         spec: FilterSpec, tile: int, depth: int):
+                         spec: FilterSpec, tile: int, depth: int, mix: str):
     """Depth-tunable row-streaming pipeline, counting analogue of sbf
     contains_hbm: up to depth-1 row DMAs in flight ahead of the test."""
     cs = spec.counter_row_words
-    h1 = H.xxh32_u64x2(keys_ref[...], H.SEED_PATTERN)
-    h2 = H.xxh32_u64x2(keys_ref[...], H.SEED_BLOCK)
+    h1, h2 = _hash_streams(keys_ref[...], mix)
     blk = H.block_index(h2, spec.n_blocks)
     masks = V.block_patterns(spec, h1, batched=False)
     cstarts = (blk * jnp.uint32(cs)).astype(jnp.int32)
@@ -473,12 +553,55 @@ def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
     out_ref[...] = out
 
 
+def _contains_hbm_coop_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
+                              spec: FilterSpec, tile: int, mix: str):
+    """Cooperative HBM contains, counting analogue of sbf: the tile is
+    sorted by counter-row start so same-row sub-tiles share ONE row DMA —
+    each unique row crosses the bus once per tile; results are computed in
+    sorted order and unsorted with one scatter."""
+    cs = spec.counter_row_words
+    h1, h2 = _hash_streams(keys_ref[...], mix)
+    blk = H.block_index(h2, spec.n_blocks)
+    masks = V.block_patterns(spec, h1, batched=False)
+    cstarts = (blk * jnp.uint32(cs)).astype(jnp.int32)
+    order = jnp.argsort(cstarts)
+    sst = cstarts[order]
+    smasks = masks[order]
+    is_head = jnp.concatenate(
+        [jnp.ones((1,), bool), sst[1:] != sst[:-1]])
+
+    def body(i, acc):
+        @pl.when(_take_scalar(is_head, i))
+        def _fetch():                      # one DMA per unique counter row
+            st = _take_scalar(sst, i)
+            cp = pltpu.make_async_copy(
+                filt_hbm.at[pl.ds(st, cs)], scratch.at[0], sem.at[0])
+            cp.start()
+            cp.wait()
+        row = pl.load(scratch, (pl.ds(0, 1), slice(None)))[0]      # (4s,)
+        occ = V.collapse_counter_words(row[None])[0]               # (s,)
+        m = _mask_row(smasks, i, spec.s)
+        ok = jnp.all((occ & m) == m)
+        return jax.lax.dynamic_update_slice(acc, ok[None], (i,))
+
+    sorted_ok = jax.lax.fori_loop(0, tile, body,
+                                  jnp.zeros((tile,), jnp.bool_))
+    out_ref[...] = jnp.zeros((tile,), jnp.bool_).at[order].set(sorted_ok)
+
+
 def update_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                valid: jnp.ndarray, op: str, tile: int = DEFAULT_TILE,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool = True, coop: str = "none",
+               mix: str = "full") -> jnp.ndarray:
+    # Like sbf.add_hbm, the HBM update is already cooperative (sorted
+    # unique-row DMA RMW); coop is validated and threads through to the
+    # same kernel for either value.
     n = keys.shape[0]
     assert n % tile == 0
-    kern = functools.partial(_update_hbm_kernel, spec=spec, tile=tile, op=op)
+    assert coop in COOPS, coop
+    assert mix in MIXES, mix
+    kern = functools.partial(_update_hbm_kernel, spec=spec, tile=tile, op=op,
+                             mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -500,13 +623,21 @@ def update_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                  tile: int = DEFAULT_TILE, interpret: bool = True,
-                 depth: int = DEFAULT_DMA_DEPTH) -> jnp.ndarray:
+                 depth: int = DEFAULT_DMA_DEPTH, coop: str = "none",
+                 mix: str = "full") -> jnp.ndarray:
     n = keys.shape[0]
     assert n % tile == 0
     assert depth in DMA_DEPTHS, f"depth={depth} not in {DMA_DEPTHS}"
+    assert coop in COOPS, coop
+    assert mix in MIXES, mix
     depth = min(depth, tile)
-    kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile,
-                             depth=depth)
+    if coop == "subtile":
+        depth = 1                          # single shared scratch row
+        kern = functools.partial(_contains_hbm_coop_kernel, spec=spec,
+                                 tile=tile, mix=mix)
+    else:
+        kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile,
+                                 depth=depth, mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -530,7 +661,7 @@ def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 def _update_partitioned_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
                                spec: FilterSpec, seg_cwords: int,
-                               capacity: int, op: str):
+                               capacity: int, op: str, mix: str):
     """One grid step owns one counter segment exclusively (PARALLEL-safe).
 
     Keys were pre-partitioned by block segment; padded slots have valid=0
@@ -541,7 +672,7 @@ def _update_partitioned_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
     out_ref[...] = filt_ref[...]
     keys = pl.load(keys_ref, (pl.ds(0, 1), slice(None), slice(None)))[0]
     valid = pl.load(valid_ref, (pl.ds(0, 1), slice(None)))[0]
-    cstarts, cmasks = _cfingerprints(spec, keys, valid)
+    cstarts, cmasks = _cfingerprints(spec, keys, valid, mix=mix)
     # counter-word offset within this segment
     cstarts = jax.lax.rem(cstarts, jnp.int32(seg_cwords))
 
@@ -557,14 +688,16 @@ def _update_partitioned_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
 
 def update_partitioned(spec: FilterSpec, filt: jnp.ndarray,
                        keys_by_seg: jnp.ndarray, valid: jnp.ndarray,
-                       n_segments: int, op: str, interpret: bool = True
-                       ) -> jnp.ndarray:
+                       n_segments: int, op: str, interpret: bool = True,
+                       mix: str = "full") -> jnp.ndarray:
     """keys_by_seg: (n_segments, capacity, 2); valid: (n_segments, capacity)."""
     assert spec.storage_words % n_segments == 0
+    assert mix in MIXES, mix
     seg_cwords = spec.storage_words // n_segments
     capacity = keys_by_seg.shape[1]
     kern = functools.partial(_update_partitioned_kernel, spec=spec,
-                             seg_cwords=seg_cwords, capacity=capacity, op=op)
+                             seg_cwords=seg_cwords, capacity=capacity, op=op,
+                             mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n_segments,),

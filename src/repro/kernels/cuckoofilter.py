@@ -35,21 +35,27 @@ from jax.experimental import pallas as pl
 
 from repro.core import fingerprint as F
 from repro.core.variants import FilterSpec
-from repro.kernels.sbf import DEFAULT_TILE
+from repro.kernels.sbf import COOPS, DEFAULT_TILE
 
 
-def _contains_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec):
-    out_ref[...] = F.cuckoo_contains(spec, filt_ref[...], keys_ref[...])
+def _contains_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
+                     coop: str = "none"):
+    fn = F.cuckoo_contains_coop if coop == "subtile" else F.cuckoo_contains
+    out_ref[...] = fn(spec, filt_ref[...], keys_ref[...])
 
 
 def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
-                  tile: int = DEFAULT_TILE, interpret: bool = True
-                  ) -> jnp.ndarray:
-    """Bulk membership, table pinned in VMEM — one launch, gather probe."""
+                  tile: int = DEFAULT_TILE, interpret: bool = True,
+                  coop: str = "none") -> jnp.ndarray:
+    """Bulk membership, table pinned in VMEM — one launch, gather probe.
+    ``coop="subtile"`` swaps in the early-exit two-phase bucket probe
+    (``cuckoo_contains_coop``) — bit-exact, alternate-bucket gather skipped
+    when the whole tile already hit in its primary buckets."""
     n = keys.shape[0]
     assert n % tile == 0
+    assert coop in COOPS, coop
     return pl.pallas_call(
-        functools.partial(_contains_kernel, spec=spec),
+        functools.partial(_contains_kernel, spec=spec, coop=coop),
         grid=(n // tile,),
         in_specs=[
             pl.BlockSpec((tile, 2), lambda i: (i, 0)),          # key tile

@@ -12,6 +12,13 @@
   fused compare / conflict-free segment-reduced scatter); ``"auto"``
   resolves through ``core.tuning.tune_plan``. The HBM regime instead
   exposes the DMA pipeline ``depth``;
+* cooperation axes: ``coop="subtile"`` switches to the lane-group
+  cooperative kernels (column-major early-exit contains, word-granular
+  flat-lane adds, sorted unique-row DMA sharing in HBM), ``mix="cheap"``
+  to the fused double-hash that shares the seed-independent lane
+  products — both bit-exact vs the baselines; ``"auto"`` resolves through
+  the model-driven tuner (bloom/counting) or the lru-cached perfmodel
+  helper (cuckoo/quotient);
 * ``bloom_add_partitioned`` offers the partitioned ownership path — our
   beyond-paper TPU-native optimization. The partition step is
   **device-resident by default** (``core.partition.partition_jit``):
@@ -81,7 +88,7 @@ def _clamp_tile(n: int, tile: int) -> int:
 
 def _resolve_probe(spec: FilterSpec, op: str, probe: str, regime: str,
                    tile: int, bank: int = 1) -> str:
-    """``"auto"`` consults the structural tuner (lru + disk cached; all
+    """``"auto"`` consults the model-driven tuner (lru + disk cached; all
     arguments static, so this also runs at trace time under jit)."""
     if probe != "auto":
         assert probe in PROBES, probe
@@ -89,6 +96,37 @@ def _resolve_probe(spec: FilterSpec, op: str, probe: str, regime: str,
     from repro.core import tuning
     return tuning.tune_plan(spec, op, regime=regime, tile=tile,
                             bank=bank).probe
+
+
+def _resolve_pcm(spec: FilterSpec, op: str, regime: str, tile: int,
+                 probe: str = "auto", coop: str = "auto",
+                 mix: str = "auto", bank: int = 1):
+    """Resolve the (probe, coop, mix) triple: pinned values pass through,
+    ``"auto"`` axes come from ONE ``tune_plan`` query keyed to the pinned
+    axes (so a pinned coop never reuses a plan tuned under another)."""
+    from repro.kernels.sbf import COOPS, MIXES
+    if probe != "auto" and coop != "auto" and mix != "auto":
+        assert probe in PROBES and coop in COOPS and mix in MIXES
+        return probe, coop, mix
+    from repro.core import tuning
+    plan = tuning.tune_plan(spec, op, regime=regime, tile=tile, bank=bank,
+                            coop=coop, mix=mix)
+    return (probe if probe != "auto" else plan.probe,
+            coop if coop != "auto" else plan.coop,
+            mix if mix != "auto" else plan.mix)
+
+
+def _resolve_mix(spec: FilterSpec, op: str, mix: str, regime: str,
+                 tile: int, bank: int = 1) -> str:
+    """Mix-only resolution for the bank paths (no cooperative bank
+    kernels — the bank already amortizes the working set)."""
+    from repro.kernels.sbf import MIXES
+    if mix != "auto":
+        assert mix in MIXES, mix
+        return mix
+    from repro.core import tuning
+    return tuning.tune_plan(spec, op, regime=regime, tile=tile,
+                            bank=bank).mix
 
 
 def _resolve_depth(spec: FilterSpec, op: str, depth: Optional[int],
@@ -132,7 +170,8 @@ def _pad_keys_valid(keys: jnp.ndarray, tile: int,
 def bloom_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                    layout: Optional[Layout] = None, regime: str = "auto",
                    tile: int = DEFAULT_TILE, probe: str = "auto",
-                   depth: Optional[int] = None) -> jnp.ndarray:
+                   depth: Optional[int] = None, coop: str = "auto",
+                   mix: str = "auto") -> jnp.ndarray:
     assert not spec.is_counting, "use counting_contains for countingbf"
     n = keys.shape[0]
     if n == 0:
@@ -143,20 +182,25 @@ def bloom_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     if spec.variant == "cbf":
         out = cbf_k.contains_vmem(spec, filt, padded, tile=tile, interpret=interp)
     elif _regime(spec, regime) == "vmem":
+        p, c, m = _resolve_pcm(spec, "contains", "vmem", tile, probe, coop,
+                               mix)
         out = sbf_k.contains_vmem(
             spec, filt, padded, layout or default_layout(spec, "contains"),
-            tile=tile, interpret=interp,
-            probe=_resolve_probe(spec, "contains", probe, "vmem", tile))
+            tile=tile, interpret=interp, probe=p, coop=c, mix=m)
     else:
+        _, c, m = _resolve_pcm(spec, "contains", "hbm", tile, "gather",
+                               coop, mix)
         out = sbf_k.contains_hbm(
             spec, filt, padded, tile=tile, interpret=interp,
-            depth=_resolve_depth(spec, "contains", depth, tile))
+            depth=_resolve_depth(spec, "contains", depth, tile),
+            coop=c, mix=m)
     return out[:n]
 
 
 def bloom_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
               layout: Optional[Layout] = None, regime: str = "auto",
-              tile: int = DEFAULT_TILE, probe: str = "auto") -> jnp.ndarray:
+              tile: int = DEFAULT_TILE, probe: str = "auto",
+              coop: str = "auto", mix: str = "auto") -> jnp.ndarray:
     assert not spec.is_counting, "use counting_add/counting_remove"
     n = keys.shape[0]
     if n == 0:
@@ -167,11 +211,13 @@ def bloom_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     if spec.variant == "cbf":
         return cbf_k.add_vmem(spec, filt, padded, tile=tile, interpret=interp)
     if _regime(spec, regime) == "vmem":
+        p, c, m = _resolve_pcm(spec, "add", "vmem", tile, probe, coop, mix)
         return sbf_k.add_vmem(
             spec, filt, padded, layout or default_layout(spec, "add"),
-            tile=tile, interpret=interp,
-            probe=_resolve_probe(spec, "add", probe, "vmem", tile))
-    return sbf_k.add_hbm(spec, filt, padded, tile=tile, interpret=interp)
+            tile=tile, interpret=interp, probe=p, coop=c, mix=m)
+    _, c, m = _resolve_pcm(spec, "add", "hbm", tile, "gather", coop, mix)
+    return sbf_k.add_hbm(spec, filt, padded, tile=tile, interpret=interp,
+                         coop=c, mix=m)
 
 
 # ---------------------------------------------------------------------------
@@ -217,8 +263,8 @@ def _pad_flat_valid(keys: jnp.ndarray, member: jnp.ndarray,
 def bloom_bank_contains(spec: FilterSpec, bank: jnp.ndarray,
                         keys: jnp.ndarray, member: jnp.ndarray,
                         layout: Optional[Layout] = None,
-                        tile: int = DEFAULT_TILE, probe: str = "auto"
-                        ) -> jnp.ndarray:
+                        tile: int = DEFAULT_TILE, probe: str = "auto",
+                        mix: str = "auto") -> jnp.ndarray:
     """(N,) bool membership of flat routed keys against a (B, n_words) bank."""
     assert not spec.is_counting
     n = keys.shape[0]
@@ -233,14 +279,15 @@ def bloom_bank_contains(spec: FilterSpec, bank: jnp.ndarray,
     out = sbf_k.bank_contains_vmem(
         spec, bank, pk, pm, layout or default_layout(spec, "contains"),
         tile=tile, interpret=_interpret(),
-        probe=_resolve_probe(spec, "contains", probe, "vmem", tile, bank=B))
+        probe=_resolve_probe(spec, "contains", probe, "vmem", tile, bank=B),
+        mix=_resolve_mix(spec, "contains", mix, "vmem", tile, bank=B))
     return out[:n]
 
 
 def bloom_bank_add(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
                    member: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
                    layout: Optional[Layout] = None, tile: int = DEFAULT_TILE,
-                   probe: str = "auto") -> jnp.ndarray:
+                   probe: str = "auto", mix: str = "auto") -> jnp.ndarray:
     """Valid-masked bulk OR of flat routed keys into a (B, n_words) bank."""
     assert not spec.is_counting
     n = keys.shape[0]
@@ -255,7 +302,8 @@ def bloom_bank_add(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
     return sbf_k.bank_add_vmem(
         spec, bank, pk, pm, pv, layout or default_layout(spec, "add"),
         tile=tile, interpret=_interpret(),
-        probe=_resolve_probe(spec, "add", probe, "vmem", tile, bank=B))
+        probe=_resolve_probe(spec, "add", probe, "vmem", tile, bank=B),
+        mix=_resolve_mix(spec, "add", mix, "vmem", tile, bank=B))
 
 
 def counting_bank_update(spec: FilterSpec, bank: jnp.ndarray,
@@ -263,8 +311,8 @@ def counting_bank_update(spec: FilterSpec, bank: jnp.ndarray,
                          op: str = "add",
                          valid: Optional[jnp.ndarray] = None,
                          layout: Optional[Layout] = None,
-                         tile: int = DEFAULT_TILE, probe: str = "auto"
-                         ) -> jnp.ndarray:
+                         tile: int = DEFAULT_TILE, probe: str = "auto",
+                         mix: str = "auto") -> jnp.ndarray:
     """Flat routed counter increment/decrement of a (B, 4*n_words) bank."""
     assert spec.is_counting
     n = keys.shape[0]
@@ -279,7 +327,8 @@ def counting_bank_update(spec: FilterSpec, bank: jnp.ndarray,
     return cnt_k.bank_update_vmem(
         spec, bank, pk, pm, pv, op, layout=layout, tile=tile,
         interpret=_interpret(),
-        probe=_resolve_probe(spec, "add", probe, "vmem", tile, bank=B))
+        probe=_resolve_probe(spec, "add", probe, "vmem", tile, bank=B),
+        mix=_resolve_mix(spec, "add", mix, "vmem", tile, bank=B))
 
 
 def counting_bank_contains(spec: FilterSpec, bank: jnp.ndarray,
@@ -419,6 +468,7 @@ def _cached_jit(key, make):
 def bloom_add_jit(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                   *, layout: Optional[Layout] = None, regime: str = "auto",
                   tile: int = DEFAULT_TILE, probe: str = "auto",
+                  coop: str = "auto", mix: str = "auto",
                   donate: bool = True) -> jnp.ndarray:
     """Cached-jit bulk add with the filter buffer DONATED to the update:
     repeated streaming adds reuse one compiled executable per static
@@ -427,13 +477,13 @@ def bloom_add_jit(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     (``filt.is_deleted()`` afterwards); pass ``donate=False`` to keep it.
     """
     keys = jnp.asarray(keys)
-    key = ("bloom_add", spec, layout, regime, tile, probe,
+    key = ("bloom_add", spec, layout, regime, tile, probe, coop, mix,
            keys.shape, str(keys.dtype), bool(donate))
 
     def make():
         def run(f, k):
             return bloom_add(spec, f, k, layout=layout, regime=regime,
-                             tile=tile, probe=probe)
+                             tile=tile, probe=probe, coop=coop, mix=mix)
         return jax.jit(run, donate_argnums=(0,) if donate else ())
 
     return _cached_jit(key, make)(filt, keys)
@@ -442,17 +492,18 @@ def bloom_add_jit(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 def bloom_contains_jit(spec: FilterSpec, filt: jnp.ndarray,
                        keys: jnp.ndarray, *, layout: Optional[Layout] = None,
                        regime: str = "auto", tile: int = DEFAULT_TILE,
-                       probe: str = "auto", depth: Optional[int] = None
-                       ) -> jnp.ndarray:
+                       probe: str = "auto", depth: Optional[int] = None,
+                       coop: str = "auto", mix: str = "auto") -> jnp.ndarray:
     """Cached-jit bulk membership (read-only — nothing to donate)."""
     keys = jnp.asarray(keys)
     key = ("bloom_contains", spec, layout, regime, tile, probe, depth,
-           keys.shape, str(keys.dtype))
+           coop, mix, keys.shape, str(keys.dtype))
 
     def make():
         def run(f, k):
             return bloom_contains(spec, f, k, layout=layout, regime=regime,
-                                  tile=tile, probe=probe, depth=depth)
+                                  tile=tile, probe=probe, depth=depth,
+                                  coop=coop, mix=mix)
         return jax.jit(run)
 
     return _cached_jit(key, make)(filt, keys)
@@ -462,18 +513,19 @@ def counting_update_jit(spec: FilterSpec, filt: jnp.ndarray,
                         keys: jnp.ndarray, op: str = "add", *,
                         layout: Optional[Layout] = None, regime: str = "auto",
                         tile: int = DEFAULT_TILE, probe: str = "auto",
+                        coop: str = "auto", mix: str = "auto",
                         donate: bool = True) -> jnp.ndarray:
     """Cached-jit counting increment/decrement with a donated counter
     buffer — the counting analogue of :func:`bloom_add_jit`."""
     keys = jnp.asarray(keys)
-    key = ("counting_update", spec, op, layout, regime, tile, probe,
-           keys.shape, str(keys.dtype), bool(donate))
+    key = ("counting_update", spec, op, layout, regime, tile, probe, coop,
+           mix, keys.shape, str(keys.dtype), bool(donate))
 
     def make():
         fn = counting_add if op == "add" else counting_remove
         def run(f, k):
             return fn(spec, f, k, layout=layout, regime=regime, tile=tile,
-                      probe=probe)
+                      probe=probe, coop=coop, mix=mix)
         return jax.jit(run, donate_argnums=(0,) if donate else ())
 
     return _cached_jit(key, make)(filt, keys)
@@ -486,7 +538,8 @@ def counting_update_jit(spec: FilterSpec, filt: jnp.ndarray,
 def _counting_update(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                      op: str, layout: Optional[Layout], regime: str,
                      tile: int, valid: Optional[jnp.ndarray],
-                     probe: str = "auto") -> jnp.ndarray:
+                     probe: str = "auto", coop: str = "auto",
+                     mix: str = "auto") -> jnp.ndarray:
     assert spec.is_counting
     n = keys.shape[0]
     if n == 0:
@@ -495,38 +548,42 @@ def _counting_update(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     padded, pvalid = _pad_keys_valid(keys, tile, valid)
     interp = _interpret()
     if _regime(spec, regime) == "vmem":
+        p, c, m = _resolve_pcm(spec, "add", "vmem", tile, probe, coop, mix)
         return cnt_k.update_vmem(
             spec, filt, padded, pvalid, op, layout=layout, tile=tile,
-            interpret=interp,
-            probe=_resolve_probe(spec, "add", probe, "vmem", tile))
+            interpret=interp, probe=p, coop=c, mix=m)
+    _, c, m = _resolve_pcm(spec, "add", "hbm", tile, "gather", coop, mix)
     return cnt_k.update_hbm(spec, filt, padded, pvalid, op, tile=tile,
-                            interpret=interp)
+                            interpret=interp, coop=c, mix=m)
 
 
 def counting_add(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                  layout: Optional[Layout] = None, regime: str = "auto",
                  tile: int = DEFAULT_TILE,
                  valid: Optional[jnp.ndarray] = None,
-                 probe: str = "auto") -> jnp.ndarray:
+                 probe: str = "auto", coop: str = "auto",
+                 mix: str = "auto") -> jnp.ndarray:
     """Bulk saturating increment of each key's k counters."""
     return _counting_update(spec, filt, keys, "add", layout, regime, tile,
-                            valid, probe)
+                            valid, probe, coop, mix)
 
 
 def counting_remove(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                     layout: Optional[Layout] = None, regime: str = "auto",
                     tile: int = DEFAULT_TILE,
                     valid: Optional[jnp.ndarray] = None,
-                    probe: str = "auto") -> jnp.ndarray:
+                    probe: str = "auto", coop: str = "auto",
+                    mix: str = "auto") -> jnp.ndarray:
     """Bulk guarded decrement (0 floors, saturated counters stick)."""
     return _counting_update(spec, filt, keys, "remove", layout, regime, tile,
-                            valid, probe)
+                            valid, probe, coop, mix)
 
 
 def counting_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                       layout: Optional[Layout] = None, regime: str = "auto",
                       tile: int = DEFAULT_TILE, probe: str = "auto",
-                      depth: Optional[int] = None) -> jnp.ndarray:
+                      depth: Optional[int] = None, coop: str = "auto",
+                      mix: str = "auto") -> jnp.ndarray:
     """Bulk membership against the counter occupancy (read-only, so
     repeat-key padding is safe here — results are sliced off)."""
     assert spec.is_counting
@@ -537,13 +594,18 @@ def counting_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     padded = _pad_keys(keys, tile)
     interp = _interpret()
     if _regime(spec, regime) == "vmem":
+        p, c, m = _resolve_pcm(spec, "contains", "vmem", tile, probe, coop,
+                               mix)
         out = cnt_k.contains_vmem(
             spec, filt, padded, layout=layout, tile=tile, interpret=interp,
-            probe=_resolve_probe(spec, "contains", probe, "vmem", tile))
+            probe=p, coop=c, mix=m)
     else:
+        _, c, m = _resolve_pcm(spec, "contains", "hbm", tile, "gather",
+                               coop, mix)
         out = cnt_k.contains_hbm(
             spec, filt, padded, tile=tile, interpret=interp,
-            depth=_resolve_depth(spec, "contains", depth, tile))
+            depth=_resolve_depth(spec, "contains", depth, tile),
+            coop=c, mix=m)
     return out[:n]
 
 
@@ -606,9 +668,24 @@ def cuckoo_vmem_resident(spec: FilterSpec) -> bool:
     return spec.n_words * 4 <= VMEM_FILTER_BYTES
 
 
+def _resolve_coop_fp(spec: FilterSpec, coop: str, tile: int) -> str:
+    """``"auto"`` cooperation for the fingerprint/quotient engines: the
+    lru-cached perfmodel helper (these engines have no layout grid, so
+    they bypass ``tune_plan``; all-static, trace-time safe)."""
+    if coop != "auto":
+        from repro.kernels.sbf import COOPS
+        assert coop in COOPS, coop
+        return coop
+    from repro import perfmodel as PM
+    return PM.choose_coop(spec, "contains", "vmem", tile)[0]
+
+
 def cuckoo_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
-                    tile: int = DEFAULT_TILE) -> jnp.ndarray:
-    """(n,) bool two-bucket membership; ONE pallas_call for the batch."""
+                    tile: int = DEFAULT_TILE,
+                    coop: str = "auto") -> jnp.ndarray:
+    """(n,) bool two-bucket membership; ONE pallas_call for the batch.
+    ``coop="subtile"`` gates the alternate-bucket gather on the tile-wide
+    primary-hit ballot (bit-exact early exit)."""
     assert spec.is_fingerprint
     n = keys.shape[0]
     if n == 0:
@@ -618,7 +695,8 @@ def cuckoo_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     tile = _clamp_tile(n, tile or DEFAULT_TILE)
     padded = _pad_keys(keys, tile)              # reads: repeat-last is safe
     out = ckoo_k.contains_vmem(spec, filt, padded, tile=tile,
-                               interpret=_interpret())
+                               interpret=_interpret(),
+                               coop=_resolve_coop_fp(spec, coop, tile))
     return out[:n]
 
 
@@ -681,8 +759,11 @@ def quotient_vmem_resident(spec: FilterSpec) -> bool:
 
 
 def quotient_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
-                      tile: int = DEFAULT_TILE) -> jnp.ndarray:
-    """(n,) bool run-scan membership; ONE pallas_call for the batch."""
+                      tile: int = DEFAULT_TILE,
+                      coop: str = "auto") -> jnp.ndarray:
+    """(n,) bool run-scan membership; ONE pallas_call for the batch.
+    ``coop="subtile"`` predicates the run scan on the tile-wide home-slot
+    ballot (bit-exact early exit)."""
     assert spec.is_quotient
     n = keys.shape[0]
     if n == 0:
@@ -692,7 +773,8 @@ def quotient_contains(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
     tile = _clamp_tile(n, tile or DEFAULT_TILE)
     padded = _pad_keys(keys, tile)              # reads: repeat-last is safe
     out = qf_k.contains_vmem(spec, filt, padded, tile=tile,
-                             interpret=_interpret())
+                             interpret=_interpret(),
+                             coop=_resolve_coop_fp(spec, coop, tile))
     return out[:n]
 
 

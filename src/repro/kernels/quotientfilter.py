@@ -38,21 +38,27 @@ from jax.experimental import pallas as pl
 
 from repro.core import quotient as Q
 from repro.core.variants import FilterSpec
-from repro.kernels.sbf import DEFAULT_TILE
+from repro.kernels.sbf import COOPS, DEFAULT_TILE
 
 
-def _contains_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec):
-    out_ref[...] = Q.quotient_contains(spec, filt_ref[...], keys_ref[...])
+def _contains_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
+                     coop: str = "none"):
+    fn = (Q.quotient_contains_coop if coop == "subtile"
+          else Q.quotient_contains)
+    out_ref[...] = fn(spec, filt_ref[...], keys_ref[...])
 
 
 def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
-                  tile: int = DEFAULT_TILE, interpret: bool = True
-                  ) -> jnp.ndarray:
-    """Bulk membership, table pinned in VMEM — one launch, fused run scan."""
+                  tile: int = DEFAULT_TILE, interpret: bool = True,
+                  coop: str = "none") -> jnp.ndarray:
+    """Bulk membership, table pinned in VMEM — one launch, fused run scan.
+    ``coop="subtile"`` predicates the run scan on the tile-wide home-slot
+    ballot (``quotient_contains_coop``) — bit-exact early exit."""
     n = keys.shape[0]
     assert n % tile == 0
+    assert coop in COOPS, coop
     return pl.pallas_call(
-        functools.partial(_contains_kernel, spec=spec),
+        functools.partial(_contains_kernel, spec=spec, coop=coop),
         grid=(n // tile,),
         in_specs=[
             pl.BlockSpec((tile, 2), lambda i: (i, 0)),          # key tile

@@ -101,14 +101,27 @@ def default_layout(spec: FilterSpec, op: str) -> Layout:
 # Phase 1 — lockstep fingerprint generation (shared by all kernels)
 # ---------------------------------------------------------------------------
 
-def _fingerprints(spec: FilterSpec, keys: jnp.ndarray):
+def _hash_streams(keys: jnp.ndarray, mix: str):
+    """(pattern, block) hash pair under the chosen mixing schedule.
+
+    ``mix="full"`` evaluates the two seeded xxh32 streams independently;
+    ``mix="cheap"`` shares the seed-independent lane products between them
+    (one wide mix feeding all k indices) — bit-identical outputs either
+    way (see ``hashing.xxh32_u64x2_pair``)."""
+    assert mix in MIXES, mix
+    if mix == "cheap":
+        return H.xxh32_u64x2_pair(keys)
+    return (H.xxh32_u64x2(keys, H.SEED_PATTERN),
+            H.xxh32_u64x2(keys, H.SEED_BLOCK))
+
+
+def _fingerprints(spec: FilterSpec, keys: jnp.ndarray, mix: str = "full"):
     """Vectorized hash + pattern phase: (starts[int32], masks[uint32 (n,s)]).
 
     batched=False: inside a pallas_call the salts must stay scalar literals
     (kernel bodies may not capture array constants) — this is also exactly
     the paper's inlined-multiplier regime."""
-    h1 = H.xxh32_u64x2(keys, H.SEED_PATTERN)
-    h2 = H.xxh32_u64x2(keys, H.SEED_BLOCK)
+    h1, h2 = _hash_streams(keys, mix)
     blk = H.block_index(h2, spec.n_blocks)
     masks = V.block_patterns(spec, h1, batched=False)
     starts = (blk * jnp.uint32(spec.s)).astype(jnp.int32)
@@ -124,6 +137,14 @@ def _mask_row(masks: jnp.ndarray, i, s: int) -> jnp.ndarray:
 
 
 PROBES = ("loop", "gather")
+# Cooperation axis (paper §4.3 / McCoy et al.): "none" keeps the per-key
+# probe schedules; "subtile" shares one key's probe row across a lane
+# sub-tile — column-major early-exit contains, word-granular flat-lane
+# segmented adds. Every coop path is bit-exact with its "none" baseline.
+COOPS = ("none", "subtile")
+# Hash mixing schedule: "full" = two independent seeded xxh32 streams;
+# "cheap" = one fused wide mix feeding both streams (bit-identical).
+MIXES = ("full", "cheap")
 DMA_DEPTHS = (1, 2, 4, 8)
 DEFAULT_DMA_DEPTH = 2
 
@@ -133,10 +154,10 @@ DEFAULT_DMA_DEPTH = 2
 # ---------------------------------------------------------------------------
 
 def _contains_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
-                          layout: Layout, tile: int):
+                          layout: Layout, tile: int, mix: str):
     s, theta, phi = spec.s, layout.theta, layout.phi
     n_chunks = s // phi
-    starts, masks = _fingerprints(spec, keys_ref[...])
+    starts, masks = _fingerprints(spec, keys_ref[...], mix=mix)
 
     def group_body(g, acc):
         base = g * theta
@@ -167,7 +188,7 @@ def _contains_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
 
 
 def _add_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
-                     layout: Layout, tile: int):
+                     layout: Layout, tile: int, mix: str):
     s, theta, phi = spec.s, layout.theta, layout.phi
     n_chunks = s // phi
 
@@ -178,7 +199,7 @@ def _add_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
     def _seed():
         out_ref[...] = filt_ref[...]
 
-    starts, masks = _fingerprints(spec, keys_ref[...])
+    starts, masks = _fingerprints(spec, keys_ref[...], mix=mix)
 
     def group_body(g, carry):
         base = g * theta
@@ -208,45 +229,109 @@ def _add_vmem_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
 # the whole tile IS the vector.
 
 def _contains_vmem_gather_kernel(keys_ref, filt_ref, out_ref, *,
-                                 spec: FilterSpec, tile: int):
+                                 spec: FilterSpec, tile: int, mix: str):
     s = spec.s
-    starts, masks = _fingerprints(spec, keys_ref[...])
+    starts, masks = _fingerprints(spec, keys_ref[...], mix=mix)
     idx = starts[:, None] + jax.lax.broadcasted_iota(jnp.int32, (tile, s), 1)
     words = jnp.take(filt_ref[...], idx, axis=0)         # (tile, s) gather
     out_ref[...] = jnp.all((words & masks) == masks, axis=-1)
 
 
 def _add_vmem_gather_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
-                            tile: int):
+                            tile: int, mix: str):
     s = spec.s
 
     @pl.when(pl.program_id(0) == 0)
     def _seed():
         out_ref[...] = filt_ref[...]
 
-    starts, masks = _fingerprints(spec, keys_ref[...])
+    starts, masks = _fingerprints(spec, keys_ref[...], mix=mix)
     blk = jax.lax.div(starts, jnp.int32(s))
     out_ref[...] = V.or_rows(spec, out_ref[...], blk, masks)
 
 
+# ---------------------------------------------------------------------------
+# Cooperative sub-tile kernels (coop="subtile")
+# ---------------------------------------------------------------------------
+# The cooperation axis re-slices phase 2 at WORD granularity instead of KEY
+# granularity — the TPU analogue of a lane group sharing one key's k probes:
+#
+# * contains: column-major early-exit. The whole tile probes word column c
+#   together (ONE flat gather of tile words), folds the column test into a
+#   per-key `alive` mask, and the next column only runs while any key is
+#   still alive (`lax.cond` — the cooperative ballot). Bit-exact because
+#   the result is the same AND over the s per-column tests, and a dead key
+#   stays dead regardless of skipped columns.
+# * add: word-granular flat-lane scatter. Every (key, word) pair becomes
+#   one lane of a (tile*s,) flat stream, sorted by absolute word index and
+#   OR-collapsed with the segmented scan — one flat gather + one
+#   conflict-free flat scatter touches each unique WORD once (the "none"
+#   gather engine collapses at block granularity; this is the finer
+#   cooperative tiling of the same associative reduction).
+
+def _contains_vmem_coop_kernel(keys_ref, filt_ref, out_ref, *,
+                               spec: FilterSpec, tile: int, mix: str):
+    s = spec.s
+    starts, masks = _fingerprints(spec, keys_ref[...], mix=mix)
+    filt = filt_ref[...]
+    alive = jnp.ones((tile,), jnp.bool_)
+    for c in range(s):                          # static unroll over columns
+        m = masks[:, c]
+
+        def probe_col(al, m=m, c=c):
+            w = jnp.take(filt, starts + c, axis=0)        # (tile,) flat gather
+            return al & ((w & m) == m)
+
+        alive = jax.lax.cond(jnp.any(alive), probe_col, lambda al: al, alive)
+    out_ref[...] = alive
+
+
+def _add_vmem_coop_kernel(keys_ref, filt_ref, out_ref, *, spec: FilterSpec,
+                          tile: int, mix: str):
+    s = spec.s
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = filt_ref[...]
+
+    starts, masks = _fingerprints(spec, keys_ref[...], mix=mix)
+    idx = (starts[:, None]
+           + jax.lax.broadcasted_iota(jnp.int32, (tile, s), 1)
+           ).reshape(tile * s)
+    vals = masks.reshape(tile * s)
+    order = jnp.argsort(idx)
+    si = idx[order]
+    or_w = V.segment_totals(si, vals[order][:, None], jnp.bitwise_or)[:, 0]
+    f = out_ref[...]
+    words = jnp.take(f, si, axis=0)
+    # duplicate indices carry identical segment totals -> deterministic set
+    out_ref[...] = f.at[si].set(words | or_w)
+
+
 def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                   layout: Layout, tile: int = DEFAULT_TILE,
-                  interpret: bool = True, probe: str = "loop") -> jnp.ndarray:
+                  interpret: bool = True, probe: str = "loop",
+                  coop: str = "none", mix: str = "full") -> jnp.ndarray:
     """Bulk membership test, whole filter pinned in VMEM via BlockSpec."""
     n = keys.shape[0]
     assert n % tile == 0
     assert probe in PROBES, probe
+    assert coop in COOPS, coop
+    assert mix in MIXES, mix
     grid = (n // tile,)
     # An explicit layout is ALWAYS validated, even though the gather engine
     # ignores it — probe is a schedule choice and must never change which
     # (layout, tile) combinations are accepted.
     layout = layout.validate(spec, tile)
-    if probe == "gather":
+    if coop == "subtile":      # cooperative schedule supersedes the probe
+        kern = functools.partial(_contains_vmem_coop_kernel, spec=spec,
+                                 tile=tile, mix=mix)
+    elif probe == "gather":
         kern = functools.partial(_contains_vmem_gather_kernel, spec=spec,
-                                 tile=tile)
+                                 tile=tile, mix=mix)
     else:
         kern = functools.partial(_contains_vmem_kernel, spec=spec,
-                                 layout=layout, tile=tile)
+                                 layout=layout, tile=tile, mix=mix)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -262,18 +347,25 @@ def contains_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 def add_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
              layout: Layout, tile: int = DEFAULT_TILE,
-             interpret: bool = True, probe: str = "loop") -> jnp.ndarray:
+             interpret: bool = True, probe: str = "loop",
+             coop: str = "none", mix: str = "full") -> jnp.ndarray:
     """Bulk insert, whole filter pinned in VMEM; sequential-grid RMW."""
     n = keys.shape[0]
     assert n % tile == 0
     assert probe in PROBES, probe
+    assert coop in COOPS, coop
+    assert mix in MIXES, mix
     grid = (n // tile,)
     layout = layout.validate(spec, tile)     # validated even on gather
-    if probe == "gather":
-        kern = functools.partial(_add_vmem_gather_kernel, spec=spec, tile=tile)
+    if coop == "subtile":      # cooperative schedule supersedes the probe
+        kern = functools.partial(_add_vmem_coop_kernel, spec=spec, tile=tile,
+                                 mix=mix)
+    elif probe == "gather":
+        kern = functools.partial(_add_vmem_gather_kernel, spec=spec, tile=tile,
+                                 mix=mix)
     else:
         kern = functools.partial(_add_vmem_kernel, spec=spec,
-                                 layout=layout, tile=tile)
+                                 layout=layout, tile=tile, mix=mix)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -292,13 +384,13 @@ def add_vmem(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
-                         spec: FilterSpec, tile: int, depth: int):
+                         spec: FilterSpec, tile: int, depth: int, mix: str):
     """Depth-``depth`` block-streaming pipeline: keep up to ``depth - 1``
     block DMAs in flight ahead of the one being tested — the TPU-explicit
     version of the paper's load pipelining, with the pipeline depth a
     tunable instead of hardcoded double-buffering (depth=2)."""
     s = spec.s
-    starts, masks = _fingerprints(spec, keys_ref[...])
+    starts, masks = _fingerprints(spec, keys_ref[...], mix=mix)
 
     def dma(i, slot):
         st = _take_scalar(starts, i)
@@ -328,7 +420,7 @@ def _contains_hbm_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
 
 
 def _add_hbm_kernel(keys_ref, filt_hbm, out_hbm, scratch, sem_r, sem_w, *,
-                    spec: FilterSpec, tile: int):
+                    spec: FilterSpec, tile: int, mix: str):
     """HBM insert: block-sorted coalesced DMA read-modify-write.
 
     The tile is sorted by target block and same-block masks are OR-reduced
@@ -348,7 +440,7 @@ def _add_hbm_kernel(keys_ref, filt_hbm, out_hbm, scratch, sem_r, sem_w, *,
         cp.start()
         cp.wait()
 
-    starts, masks = _fingerprints(spec, keys_ref[...])
+    starts, masks = _fingerprints(spec, keys_ref[...], mix=mix)
     order = jnp.argsort(starts)
     sst = starts[order]                                       # sorted starts
     or_full = V.segment_totals(sst, masks[order], jnp.bitwise_or)
@@ -374,15 +466,57 @@ def _add_hbm_kernel(keys_ref, filt_hbm, out_hbm, scratch, sem_r, sem_w, *,
     jax.lax.fori_loop(0, tile, body, jnp.int32(0))
 
 
+def _contains_hbm_coop_kernel(keys_ref, filt_hbm, out_ref, scratch, sem, *,
+                              spec: FilterSpec, tile: int, mix: str):
+    """Cooperative HBM contains: the tile is sorted by block start so every
+    sub-tile of same-block keys shares ONE DMA — the sub-tile "head" (first
+    key of each block run) fetches the row, followers test against the
+    scratch row already resident. Each unique block moves over the HBM bus
+    exactly once per tile (vs once per key in the depth-ring engine);
+    results are computed in sorted order and unsorted with one scatter."""
+    s = spec.s
+    starts, masks = _fingerprints(spec, keys_ref[...], mix=mix)
+    order = jnp.argsort(starts)
+    sst = starts[order]
+    smasks = masks[order]
+    is_head = jnp.concatenate(
+        [jnp.ones((1,), bool), sst[1:] != sst[:-1]])
+
+    def body(i, acc):
+        @pl.when(_take_scalar(is_head, i))
+        def _fetch():                      # one DMA per unique block
+            st = _take_scalar(sst, i)
+            cp = pltpu.make_async_copy(
+                filt_hbm.at[pl.ds(st, s)], scratch.at[0], sem.at[0])
+            cp.start()
+            cp.wait()
+        row = pl.load(scratch, (pl.ds(0, 1), slice(None)))[0]    # (s,)
+        m = _mask_row(smasks, i, s)
+        ok = jnp.all((row & m) == m)
+        return jax.lax.dynamic_update_slice(acc, ok[None], (i,))
+
+    sorted_ok = jax.lax.fori_loop(0, tile, body,
+                                  jnp.zeros((tile,), jnp.bool_))
+    out_ref[...] = jnp.zeros((tile,), jnp.bool_).at[order].set(sorted_ok)
+
+
 def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
                  tile: int = DEFAULT_TILE, interpret: bool = True,
-                 depth: int = DEFAULT_DMA_DEPTH) -> jnp.ndarray:
+                 depth: int = DEFAULT_DMA_DEPTH, coop: str = "none",
+                 mix: str = "full") -> jnp.ndarray:
     n = keys.shape[0]
     assert n % tile == 0
     assert depth in DMA_DEPTHS, f"depth={depth} not in {DMA_DEPTHS}"
+    assert coop in COOPS, coop
+    assert mix in MIXES, mix
     depth = min(depth, tile)
-    kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile,
-                             depth=depth)
+    if coop == "subtile":
+        depth = 1                          # single shared scratch row
+        kern = functools.partial(_contains_hbm_coop_kernel, spec=spec,
+                                 tile=tile, mix=mix)
+    else:
+        kern = functools.partial(_contains_hbm_kernel, spec=spec, tile=tile,
+                                 depth=depth, mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -401,10 +535,18 @@ def contains_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 
 
 def add_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
-            tile: int = DEFAULT_TILE, interpret: bool = True) -> jnp.ndarray:
+            tile: int = DEFAULT_TILE, interpret: bool = True,
+            coop: str = "none", mix: str = "full") -> jnp.ndarray:
+    # The HBM add is already fully cooperative: the block-sorted
+    # segment-OR schedule touches each unique block once per tile, which
+    # is exactly the coop="subtile" memory schedule. The axis is accepted
+    # (and validated) so dispatch can thread a uniform plan; both values
+    # run the same kernel.
     n = keys.shape[0]
     assert n % tile == 0
-    kern = functools.partial(_add_hbm_kernel, spec=spec, tile=tile)
+    assert coop in COOPS, coop
+    assert mix in MIXES, mix
+    kern = functools.partial(_add_hbm_kernel, spec=spec, tile=tile, mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -434,16 +576,17 @@ def add_hbm(spec: FilterSpec, filt: jnp.ndarray, keys: jnp.ndarray,
 # get from fusing many small structures into one kernel. Adds are
 # valid-masked (zero mask = OR no-op) so routed/padded batches stay exact.
 
-def _bank_starts(spec: FilterSpec, keys, member):
-    starts, masks = _fingerprints(spec, keys)
+def _bank_starts(spec: FilterSpec, keys, member, mix: str = "full"):
+    starts, masks = _fingerprints(spec, keys, mix=mix)
     return starts + member * jnp.int32(spec.n_words), masks
 
 
 def _bank_contains_vmem_kernel(keys_ref, member_ref, filt_ref, out_ref, *,
-                               spec: FilterSpec, layout: Layout, tile: int):
+                               spec: FilterSpec, layout: Layout, tile: int,
+                               mix: str):
     s, theta, phi = spec.s, layout.theta, layout.phi
     n_chunks = s // phi
-    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...])
+    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...], mix)
 
     def group_body(g, acc):
         base = g * theta
@@ -465,16 +608,18 @@ def _bank_contains_vmem_kernel(keys_ref, member_ref, filt_ref, out_ref, *,
 
 
 def _bank_contains_vmem_gather_kernel(keys_ref, member_ref, filt_ref, out_ref,
-                                      *, spec: FilterSpec, tile: int):
+                                      *, spec: FilterSpec, tile: int,
+                                      mix: str):
     s = spec.s
-    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...])
+    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...], mix)
     idx = starts[:, None] + jax.lax.broadcasted_iota(jnp.int32, (tile, s), 1)
     words = jnp.take(filt_ref[...], idx, axis=0)         # (tile, s) gather
     out_ref[...] = jnp.all((words & masks) == masks, axis=-1)
 
 
 def _bank_add_vmem_kernel(keys_ref, member_ref, valid_ref, filt_ref, out_ref,
-                          *, spec: FilterSpec, layout: Layout, tile: int):
+                          *, spec: FilterSpec, layout: Layout, tile: int,
+                          mix: str):
     s, theta, phi = spec.s, layout.theta, layout.phi
     n_chunks = s // phi
 
@@ -482,7 +627,7 @@ def _bank_add_vmem_kernel(keys_ref, member_ref, valid_ref, filt_ref, out_ref,
     def _seed():
         out_ref[...] = filt_ref[...]
 
-    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...])
+    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...], mix)
     masks = masks * valid_ref[...][:, None].astype(jnp.uint32)
 
     def group_body(g, carry):
@@ -503,12 +648,12 @@ def _bank_add_vmem_kernel(keys_ref, member_ref, valid_ref, filt_ref, out_ref,
 
 def _bank_add_vmem_gather_kernel(keys_ref, member_ref, valid_ref, filt_ref,
                                  out_ref, *, spec: FilterSpec, tile: int,
-                                 bank: int):
+                                 bank: int, mix: str):
     @pl.when(pl.program_id(0) == 0)
     def _seed():
         out_ref[...] = filt_ref[...]
 
-    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...])
+    starts, masks = _bank_starts(spec, keys_ref[...], member_ref[...], mix)
     masks = masks * valid_ref[...][:, None].astype(jnp.uint32)
     blk = jax.lax.div(starts, jnp.int32(spec.s))    # member-offset block ids
     out_ref[...] = V.or_rows(spec, out_ref[...], blk, masks,
@@ -518,19 +663,20 @@ def _bank_add_vmem_gather_kernel(keys_ref, member_ref, valid_ref, filt_ref,
 def bank_contains_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
                        member: jnp.ndarray, layout: Layout,
                        tile: int = DEFAULT_TILE, interpret: bool = True,
-                       probe: str = "gather") -> jnp.ndarray:
+                       probe: str = "gather", mix: str = "full") -> jnp.ndarray:
     """Flat routed membership against a (B, n_words) bank — one launch."""
     n = keys.shape[0]
     assert n % tile == 0 and member.shape == (n,)
     assert probe in PROBES, probe
+    assert mix in MIXES, mix
     B, flat = bank.shape[0], bank.reshape(-1)
     layout = layout.validate(spec, tile)
     if probe == "gather":
         kern = functools.partial(_bank_contains_vmem_gather_kernel, spec=spec,
-                                 tile=tile)
+                                 tile=tile, mix=mix)
     else:
         kern = functools.partial(_bank_contains_vmem_kernel, spec=spec,
-                                 layout=layout, tile=tile)
+                                 layout=layout, tile=tile, mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -548,20 +694,21 @@ def bank_contains_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
 def bank_add_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
                   member: jnp.ndarray, valid: jnp.ndarray, layout: Layout,
                   tile: int = DEFAULT_TILE, interpret: bool = True,
-                  probe: str = "gather") -> jnp.ndarray:
+                  probe: str = "gather", mix: str = "full") -> jnp.ndarray:
     """Flat routed valid-masked insert into a (B, n_words) bank — one
     launch, sequential-grid RMW over the whole VMEM-resident bank."""
     n = keys.shape[0]
     assert n % tile == 0 and member.shape == (n,) and valid.shape == (n,)
     assert probe in PROBES, probe
+    assert mix in MIXES, mix
     B, flat = bank.shape[0], bank.reshape(-1)
     layout = layout.validate(spec, tile)
     if probe == "gather":
         kern = functools.partial(_bank_add_vmem_gather_kernel, spec=spec,
-                                 tile=tile, bank=B)
+                                 tile=tile, bank=B, mix=mix)
     else:
         kern = functools.partial(_bank_add_vmem_kernel, spec=spec,
-                                 layout=layout, tile=tile)
+                                 layout=layout, tile=tile, mix=mix)
     out = pl.pallas_call(
         kern,
         grid=(n // tile,),
@@ -583,7 +730,8 @@ def bank_add_vmem(spec: FilterSpec, bank: jnp.ndarray, keys: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _add_partitioned_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
-                            spec: FilterSpec, seg_words: int, capacity: int):
+                            spec: FilterSpec, seg_words: int, capacity: int,
+                            mix: str):
     """One grid step owns one filter segment exclusively (PARALLEL-safe).
 
     Keys were pre-partitioned so every key in this step's tile lands in this
@@ -593,7 +741,7 @@ def _add_partitioned_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
     out_ref[...] = filt_ref[...]
     keys = pl.load(keys_ref, (pl.ds(0, 1), slice(None), slice(None)))[0]
     valid = pl.load(valid_ref, (pl.ds(0, 1), slice(None)))[0]    # (capacity,)
-    starts, masks = _fingerprints(spec, keys)
+    starts, masks = _fingerprints(spec, keys, mix=mix)
     masks = masks * valid[:, None].astype(jnp.uint32)
     # local word offset within this segment
     starts = jax.lax.rem(starts, jnp.int32(seg_words))
@@ -610,13 +758,15 @@ def _add_partitioned_kernel(keys_ref, valid_ref, filt_ref, out_ref, *,
 
 def add_partitioned(spec: FilterSpec, filt: jnp.ndarray,
                     keys_by_seg: jnp.ndarray, valid: jnp.ndarray,
-                    n_segments: int, interpret: bool = True) -> jnp.ndarray:
+                    n_segments: int, interpret: bool = True,
+                    mix: str = "full") -> jnp.ndarray:
     """keys_by_seg: (n_segments, capacity, 2); valid: (n_segments, capacity)."""
     assert spec.n_words % n_segments == 0
+    assert mix in MIXES, mix
     seg_words = spec.n_words // n_segments
     capacity = keys_by_seg.shape[1]
     kern = functools.partial(_add_partitioned_kernel, spec=spec,
-                             seg_words=seg_words, capacity=capacity)
+                             seg_words=seg_words, capacity=capacity, mix=mix)
     return pl.pallas_call(
         kern,
         grid=(n_segments,),

@@ -1,4 +1,8 @@
-"""Analytic FLOPs / HBM-bytes / collective-bytes models per (arch, shape).
+"""Analytic FLOPs / HBM-bytes / collective-bytes models per (arch, shape)
+— the TRANSFORMER macro-model side of the repo's performance tooling.
+(The filter kernels' first-principles cost model is
+``repro.perfmodel.model``; the two share the generic report helpers in
+``repro.roofline.report_utils``.)
 
 Why this exists: the CPU backend's ``cost_analysis()`` counts a while-loop
 body ONCE (not x trip count), so any scanned-layers model under-reports

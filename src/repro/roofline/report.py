@@ -1,36 +1,21 @@
-"""Aggregate dry-run JSON reports into the EXPERIMENTS.md tables.
+"""Aggregate TRANSFORMER dry-run JSON reports into the EXPERIMENTS.md
+tables (compile stats, collective counts, macro-model rooflines). The
+filter kernels have their own performance-model reporting in
+``repro.perfmodel`` + ``benchmarks/fig4_frontier``; the generic helpers
+both sides share live in :mod:`repro.roofline.report_utils`.
 
     PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
 """
 from __future__ import annotations
 
 import argparse
-import glob
-import json
-import os
 from typing import Dict, List
 
+from repro.roofline.report_utils import fmt_bytes, fmt_float, load_reports
 
-def load_reports(d: str) -> List[Dict]:
-    out = []
-    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
-        with open(f) as fh:
-            out.append(json.load(fh))
-    return out
-
-
-def _fmt_bytes(b):
-    if b is None:
-        return "-"
-    for unit in ("B", "KB", "MB", "GB", "TB"):
-        if abs(b) < 1024:
-            return f"{b:.1f}{unit}"
-        b /= 1024
-    return f"{b:.1f}PB"
-
-
-def _s(x, digits=4):
-    return f"{x:.{digits}f}" if isinstance(x, (int, float)) else "-"
+# Back-compat aliases (test_dryrun and older callers import these names).
+_fmt_bytes = fmt_bytes
+_s = fmt_float
 
 
 def dryrun_table(reports: List[Dict], mesh: str) -> str:
