@@ -40,26 +40,26 @@ def percentile(samples, q: float) -> float:
     definition: the smallest sample s.t. at least q% of samples are <= it.
     Interpolating estimators (numpy's default) invent values between the
     two largest samples — exactly where p999 lives — so latency reporting
-    uses rank statistics on actual observations."""
-    a = np.sort(np.asarray(samples, np.float64).reshape(-1))
-    if a.size == 0:
-        raise ValueError("percentile of an empty sample set")
-    if not 0.0 <= q <= 100.0:
-        raise ValueError(f"q must be in [0, 100]; got {q}")
-    rank = int(np.ceil(q / 100.0 * a.size)) - 1
-    return float(a[max(rank, 0)])
+    uses rank statistics on actual observations. Thin wrapper over the
+    single shared implementation in ``repro.telemetry.nearest_rank``
+    (bench and service report tails from one definition)."""
+    from repro.telemetry import nearest_rank
+    return nearest_rank(samples, q)
 
 
 def latency_summary(samples, unit: float = 1e6) -> dict:
     """{p50, p99, p999, mean, max, n} of a latency sample set, scaled by
-    ``unit`` (seconds -> µs by default) — the replay harness's report row."""
-    a = np.asarray(samples, np.float64).reshape(-1)
-    return {"n": int(a.size),
-            "p50": round(percentile(a, 50.0) * unit, 3),
-            "p99": round(percentile(a, 99.0) * unit, 3),
-            "p999": round(percentile(a, 99.9) * unit, 3),
-            "mean": round(float(a.mean()) * unit, 3),
-            "max": round(float(a.max()) * unit, 3)}
+    ``unit`` (seconds -> µs by default) — the replay harness's report row.
+    Built on the telemetry :class:`~repro.telemetry.Histogram` so the
+    bench report and the service's ``service.latency`` summaries share
+    one implementation (empty input raises, as ``percentile`` always
+    did)."""
+    from repro.telemetry import Histogram
+    h = Histogram("bench.latency", ())
+    h.observe_many(samples)
+    if h.n == 0:
+        raise ValueError("percentile of an empty sample set")
+    return h.summary(unit=unit)
 
 
 class Csv:

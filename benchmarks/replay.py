@@ -17,8 +17,15 @@ bulk path can't:
   policy;
 * **recovery** — a :class:`ServiceDriver` run with an injected
   mid-stream failure, reporting restore-to-caught-up wall time and
-  asserting the replayed filter is **bit-exact** with an uninterrupted
-  twin run (the DESIGN.md §14 invariant, measured not assumed).
+  asserting the replayed filter AND its deterministic telemetry are
+  **bit-exact** with an uninterrupted twin run (the DESIGN.md §14/§17
+  invariants, measured not assumed);
+* **telemetry artifacts** — each throughput replay exports its span
+  trace (JSONL) and a Prometheus text snapshot to ``--telemetry-dir``
+  (the CI bench-smoke upload), asserting every flush span carries the
+  perfmodel OpCost prediction and the drift gauges are live; a second,
+  telemetry-disabled run feeds the warn-only overhead gate (enabled
+  must sit within 5% of disabled on walls >= 10ms).
 
 The trace is a pure function of ``--seed`` (zipfian tenant draw +
 per-step op mix), so runs are comparable across machines and PRs.
@@ -30,6 +37,7 @@ per-step op mix), so runs are comparable across machines and PRs.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -41,6 +49,11 @@ from repro.service import (AdmissionPolicy, FilterService, MaintenanceConfig,
                            MaintenanceLoop, ServiceConfig, ServiceDriver,
                            ServiceDriverConfig)
 from repro.runtime.fault_tolerance import SimulatedFailure
+from repro.telemetry import TelemetryConfig
+
+# walls below this are noise for the telemetry overhead comparison
+OVERHEAD_FLOOR_S = 10e-3
+OVERHEAD_TOLERANCE = 1.05
 
 # engine name -> make_filter_bank kwargs (one Bloom-family, one cuckoo in
 # the default set — the CI acceptance pair; countingbf adds remove ops)
@@ -85,15 +98,16 @@ def make_stream(seed: int, n_tenants: int, burst: int, alpha: float,
     return stream_fn
 
 
-def replay_throughput(csv: Csv, engine: str, *, n_tenants: int, steps: int,
-                      burst: int, alpha: float, max_batch: int,
-                      seed: int) -> None:
-    """Real-clock replay: latency percentiles, Mops/s, shed rate."""
+def _drive_throughput(engine: str, *, telemetry_on: bool, n_tenants: int,
+                      steps: int, burst: int, alpha: float, max_batch: int,
+                      seed: int):
+    """One real-clock replay of the seeded trace; returns (svc, wall_s)."""
     filt = api.make_filter_bank(n_tenants, **ENGINES[engine])
     svc = FilterService(
         filt,
         ServiceConfig(max_batch=max_batch, flush_deadline=2e-3,
-                      admission=AdmissionPolicy(queue_limit=8 * max_batch)))
+                      admission=AdmissionPolicy(queue_limit=8 * max_batch),
+                      telemetry=TelemetryConfig(enabled=telemetry_on)))
     mix = {"add": 0.45, "contains": 0.45, "remove": 0.10}
     stream = make_stream(seed, n_tenants, burst, alpha, mix,
                          svc.filt.engine.supports_remove)
@@ -107,33 +121,107 @@ def replay_throughput(csv: Csv, engine: str, *, n_tenants: int, steps: int,
     for op, keys, tenants in stream(0):
         svc.submit_many(op, keys, tenants)
     svc.drain()
-    for lat in svc.latencies.values():
-        lat.clear()
+    # the periodic admission health refresh jits load_factor/dense_words
+    # on first use — warm it here or the first in-window refresh pays the
+    # compile (hundreds of ms, which would masquerade as tail latency or
+    # telemetry overhead)
+    svc.admission.refresh(svc.filt)
+    svc.reset_latencies()
     t0 = time.perf_counter()
     for step in range(1, steps + 1):
         for op, keys, tenants in stream(step):
             svc.submit_many(op, keys, tenants)
         svc.pump()
     svc.drain()
-    wall = time.perf_counter() - t0
+    return svc, time.perf_counter() - t0
+
+
+def _export_telemetry(svc, engine: str, telemetry_dir: str) -> None:
+    """Write the replay's trace JSONL + Prometheus snapshot and assert
+    the acceptance surface: every flush span annotated with the OpCost
+    prediction, drift gauges live."""
+    flushes = svc.telemetry.tracer.spans("service.flush")
+    if not flushes:
+        raise AssertionError(f"replay/{engine}: no flush spans traced")
+    missing = [s for s in flushes if "predicted_us" not in s]
+    if missing:
+        raise AssertionError(
+            f"replay/{engine}: {len(missing)}/{len(flushes)} flush spans "
+            f"lack an OpCost prediction (perfmodel coverage regressed)")
+    prom = svc.telemetry.prometheus_text()
+    if "perfmodel_drift_ratio" not in prom:
+        raise AssertionError(
+            f"replay/{engine}: drift gauge missing from the Prometheus "
+            f"snapshot")
+    os.makedirs(telemetry_dir, exist_ok=True)
+    trace_path = os.path.join(telemetry_dir, f"replay_{engine}_trace.jsonl")
+    prom_path = os.path.join(telemetry_dir, f"replay_{engine}_metrics.prom")
+    n = svc.telemetry.write_trace_jsonl(trace_path)
+    svc.telemetry.write_prometheus(prom_path)
+    print(f"# telemetry: {n} spans -> {trace_path}; metrics -> {prom_path}",
+          flush=True)
+
+
+def replay_throughput(csv: Csv, engine: str, *, n_tenants: int, steps: int,
+                      burst: int, alpha: float, max_batch: int, seed: int,
+                      telemetry_dir=None) -> None:
+    """Real-clock replay: latency percentiles, Mops/s, shed rate, plus
+    the telemetry artifacts and the warn-only overhead gate."""
+    # The first drive in a process is slower for reasons unrelated to
+    # telemetry (allocator/runtime warmth beyond what the in-drive warmup
+    # covers), so a single on-vs-off pair is ordering-biased.  Run a
+    # discarded disabled drive first, then measure on/off back to back.
+    _, _discard = _drive_throughput(
+        engine, telemetry_on=False, n_tenants=n_tenants, steps=steps,
+        burst=burst, alpha=alpha, max_batch=max_batch, seed=seed)
+    svc, wall = _drive_throughput(
+        engine, telemetry_on=True, n_tenants=n_tenants, steps=steps,
+        burst=burst, alpha=alpha, max_batch=max_batch, seed=seed)
     h = svc.health()
     lat = latency_summary(svc.all_latencies())
-    done = h["flushed_ops"]
+    done = h["service.flushed_ops"]
     csv.add(f"replay/{engine}/latency", lat["p50"],
             f"p99={lat['p99']:.1f}us p999={lat['p999']:.1f}us n={lat['n']}")
     csv.add(f"replay/{engine}/throughput", wall / max(done, 1) * 1e6,
-            f"Mops/s={done / wall / 1e6:.3f} shed={h['shed_rate']:.3f} "
-            f"pad={h['padded_slots'] / max(h['flushes'], 1):.1f}/flush",
+            f"Mops/s={done / wall / 1e6:.3f} "
+            f"shed={h['admission.shed_rate']:.3f} "
+            f"pad={h['service.padded_slots'] / max(h['service.flushes'], 1):.1f}"
+            f"/flush",
             n_ops=done)
+    if telemetry_dir is not None:
+        _export_telemetry(svc, engine, telemetry_dir)
+    # overhead gate (warn-only): tracing + drift must be nearly free.
+    # Single-pair comparisons at these wall times are noise-dominated
+    # (same-setting walls swing 20%+ run to run on a shared CPU runner),
+    # so take the min over three drives per setting, and only warn when
+    # the on/off ratio exceeds both the tolerance AND the same-setting
+    # spread — a gate that can't resolve 5% shouldn't cry wolf at 5%.
+    walls_on, walls_off = [wall], []
+    for on in (False, True, False, True, False):
+        _, w = _drive_throughput(
+            engine, telemetry_on=on, n_tenants=n_tenants, steps=steps,
+            burst=burst, alpha=alpha, max_batch=max_batch, seed=seed)
+        (walls_on if on else walls_off).append(w)
+    wall, wall_off = min(walls_on), min(walls_off)
+    ratio = wall / max(wall_off, 1e-12)
+    noise = max(max(walls_on) / wall, max(walls_off) / wall_off)
+    csv.add(f"replay/{engine}/telemetry_overhead", ratio,
+            f"on={wall * 1e3:.1f}ms off={wall_off * 1e3:.1f}ms "
+            f"noise={noise:.3f}x")
+    if (wall_off >= OVERHEAD_FLOOR_S and ratio > OVERHEAD_TOLERANCE
+            and ratio > noise):
+        print(f"# WARN replay/{engine}: telemetry overhead {ratio:.3f}x "
+              f"exceeds {OVERHEAD_TOLERANCE}x and the run-to-run noise "
+              f"{noise:.3f}x (on={wall * 1e3:.1f}ms "
+              f"off={wall_off * 1e3:.1f}ms)", flush=True)
 
 
 def replay_recovery(csv: Csv, engine: str, *, n_tenants: int, steps: int,
                     burst: int, alpha: float, max_batch: int, seed: int,
                     ckpt_root: str) -> None:
     """Twin-run recovery drill: fail mid-stream, restore, assert the
-    replayed filter is bit-exact with an uninterrupted run."""
-    import os
-
+    replayed filter — and its deterministic telemetry — is bit-exact
+    with an uninterrupted run."""
     mix = {"add": 0.6, "contains": 0.4}
 
     def run(tag: str, fail_at):
@@ -158,7 +246,7 @@ def replay_recovery(csv: Csv, engine: str, *, n_tenants: int, steps: int,
                             failure_hook=hook)
         return drv.run(steps), drv
 
-    clean, _ = run("clean", None)
+    clean, drv_clean = run("clean", None)
     failed, drv = run("failed", max(2 * steps // 3, 1))
     exact = bool(jnp.array_equal(clean.words, failed.words)) and (
         clean.state is None or bool(jnp.array_equal(clean.state,
@@ -167,15 +255,30 @@ def replay_recovery(csv: Csv, engine: str, *, n_tenants: int, steps: int,
         raise AssertionError(
             f"replay/{engine}: recovered filter diverged from the "
             f"uninterrupted twin run — recovery is NOT bit-exact")
+    # deterministic telemetry must replay bit-exactly too (§17): counters,
+    # histograms — everything but the wall-clock report metrics
+    tel_clean = drv_clean.service.telemetry.registry.snapshot_state(
+        deterministic_only=True)
+    tel_failed = drv.service.telemetry.registry.snapshot_state(
+        deterministic_only=True)
+    if tel_clean != tel_failed:
+        diff = [(a.get("name"), a.get("labels"))
+                for a, b in zip(tel_clean["metrics"], tel_failed["metrics"])
+                if a != b]
+        raise AssertionError(
+            f"replay/{engine}: deterministic telemetry diverged across "
+            f"recovery (first diffs: {diff[:4]}) — counters are NOT "
+            f"bit-exact")
     rec = drv.recovery_times
     csv.add(f"replay/{engine}/recovery", (rec[0] if rec else 0.0) * 1e6,
-            f"bit_exact=1 restarts={sum(1 for e in drv.events if e['kind'] == 'failure')}")
+            f"bit_exact=1 telemetry_exact=1 "
+            f"restarts={sum(1 for e in drv.events if e['kind'] == 'failure')}")
 
 
 def run(csv: Csv, *, smoke: bool = False, engines=("sbf", "cuckoo"),
         n_tenants: int = 8, steps: int = 100, burst: int = 48,
         alpha: float = 1.1, max_batch: int = 64, seed: int = 7,
-        ckpt_root=None) -> None:
+        ckpt_root=None, telemetry_dir=None) -> None:
     import tempfile
     if smoke:
         steps, burst, max_batch = 12, 24, 32
@@ -183,7 +286,7 @@ def run(csv: Csv, *, smoke: bool = False, engines=("sbf", "cuckoo"),
     for engine in engines:
         replay_throughput(csv, engine, n_tenants=n_tenants, steps=steps,
                           burst=burst, alpha=alpha, max_batch=max_batch,
-                          seed=seed)
+                          seed=seed, telemetry_dir=telemetry_dir)
         replay_recovery(csv, engine, n_tenants=n_tenants,
                         steps=max(steps // 4, 6), burst=burst, alpha=alpha,
                         max_batch=max_batch, seed=seed, ckpt_root=root)
@@ -202,6 +305,9 @@ def main(argv=None):
                     help="zipf skew of the tenant draw")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--telemetry-dir", default="replay_telemetry",
+                    help="where to write the span-trace JSONL + Prometheus "
+                         "snapshot per engine (the CI artifact)")
     args = ap.parse_args(argv)
     engines = args.engines.split(",")
     unknown = set(engines) - set(ENGINES)
@@ -212,7 +318,8 @@ def main(argv=None):
     csv.header()
     run(csv, smoke=args.smoke, engines=engines, n_tenants=args.tenants,
         steps=args.steps, burst=args.burst, alpha=args.alpha,
-        max_batch=args.max_batch, seed=args.seed)
+        max_batch=args.max_batch, seed=args.seed,
+        telemetry_dir=args.telemetry_dir)
     return 0
 
 

@@ -161,6 +161,9 @@ def main(argv=None) -> None:
     ap.add_argument("--compare-floor", type=float, default=COMPARE_FLOOR_US,
                     help="baseline records faster than this (us) are "
                          "noise-dominated and skipped by the gate")
+    ap.add_argument("--telemetry-dir", default="replay_telemetry",
+                    help="where the replay bench writes its span-trace "
+                         "JSONL + Prometheus snapshot (CI artifact)")
     args = ap.parse_args(argv)
 
     csv = Csv()
@@ -187,7 +190,7 @@ def main(argv=None) -> None:
         if "amq_compare" in only:
             amq_compare.run(csv, smoke=True)
         if "replay" in only:
-            replay.run(csv, smoke=True)
+            replay.run(csv, smoke=True, telemetry_dir=args.telemetry_dir)
         if "fig4_frontier" in only:
             fig4_frontier.run(csv, smoke=True)
         model_sanity(csv.records)
@@ -210,7 +213,8 @@ def main(argv=None) -> None:
         "window": lambda: window.run(csv),
         "bank": lambda: bank.run(csv),
         "amq_compare": lambda: amq_compare.run(csv),
-        "replay": lambda: replay.run(csv),
+        "replay": lambda: replay.run(csv,
+                                     telemetry_dir=args.telemetry_dir),
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -54,10 +54,10 @@ def main():
     cycles_g = [cycle_len(o) for o in outs_g]
     print(f"[with guard] outputs: {outs_g[0][:12]}... cycle lengths {cycles_g}")
     st = guarded.stats()
-    print(f"guard stats: {st['guard_observed']:.0f} n-grams recorded, "
-          f"{st['guard_penalized']:.0f} candidates penalized, "
-          f"filter fill {st['guard_fill']:.4f} "
-          f"(~{st['guard_approx_ngrams']:.0f} distinct n-grams, "
+    print(f"guard stats: {st['guard.observed']:.0f} n-grams recorded, "
+          f"{st['guard.penalized']:.0f} candidates penalized, "
+          f"filter fill {st['guard.fill_fraction']:.4f} "
+          f"(~{st['guard.approx_ngrams']:.0f} distinct n-grams, "
           f"engine {guard.filt.backend!r})")
     broke = sum(1 for a, b in zip(cycles, cycles_g) if b == 0 or b > a)
     print(f"repetition reduced/broken on {broke}/{B} sequences")

@@ -69,9 +69,10 @@ def main(argv=None):
               f"{guard.stats.decays} decays "
               f"(engine {guard.filt.backend!r})")
         health = {k: v for k, v in engine.stats().items()
-                  if k not in ("guard_observed", "guard_penalized")}
+                  if k not in ("guard.observed", "guard.penalized",
+                               "guard.decays")}
         print(f"[serve] guard health: " + ", ".join(
-            f"{k.removeprefix('guard_')}={v:.4g}"
+            f"{k.removeprefix('guard.')}={v:.4g}"
             for k, v in health.items()))
     print(f"[serve] sample: {outs[0][:12]}")
     return 0

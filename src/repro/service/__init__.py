@@ -18,6 +18,11 @@ with a request-level serving story:
   live bank resharding and lossless in-place capacity growth (quotient
   engine); the cross-mesh moves live in ``repro.runtime.elastic``.
 
+Every service carries a ``repro.telemetry`` bundle: a deterministic
+metrics registry (namespaced ``health()`` keys, checkpointed counters),
+span tracing of the submit/flush pipeline, and the §16 perfmodel drift
+monitor annotating every flush (DESIGN.md §17).
+
 See DESIGN.md §14 for the architecture and its recovery invariants, and
 ``benchmarks/replay.py`` for the traffic-replay harness that measures it.
 """

@@ -79,14 +79,27 @@ class AdmissionController:
     ``snapshot_state``/``restore_state`` round-trip everything a replayed
     stream's decisions depend on (the measurement counters ride along for
     continuity of dashboards, but only ``unhealthy``/``_seen_failures``
-    are semantically load-bearing)."""
+    are semantically load-bearing).
 
-    def __init__(self, policy: AdmissionPolicy, n_tenants: int):
+    When constructed with a telemetry ``registry`` the controller also
+    maintains labeled counters ``admission.shed{reason=,tenant=}`` (the
+    per-tenant blast-radius view — which tenant is being refused, and by
+    which gate) and ``admission.admitted``; the aggregate
+    ``shed_counts`` dict stays authoritative for policy, the numpy
+    ``shed_by_tenant`` matrix is the checkpoint carrier, and the labeled
+    counters are re-derived from it on restore."""
+
+    def __init__(self, policy: AdmissionPolicy, n_tenants: int,
+                 registry=None):
         self.policy = policy
         self.n_tenants = int(n_tenants)
+        self.registry = registry
         self.unhealthy = np.zeros(self.n_tenants, bool)
         self._seen_failures = np.zeros(self.n_tenants, np.int64)
         self.shed_counts: Dict[str, int] = {r: 0 for r in SHED_REASONS}
+        # rows = tenants, cols = SHED_REASONS order
+        self.shed_by_tenant = np.zeros(
+            (self.n_tenants, len(SHED_REASONS)), np.int64)
         self.admitted = 0
 
     # -- health ---------------------------------------------------------------
@@ -106,6 +119,20 @@ class AdmissionController:
         self.unhealthy = flags.reshape(-1).astype(bool)
 
     # -- the gate -------------------------------------------------------------
+    def _record_shed(self, reason: str, tenants: np.ndarray,
+                     mask: np.ndarray) -> None:
+        n = int(mask.sum())
+        if not n:
+            return
+        self.shed_counts[reason] += n
+        col = SHED_REASONS.index(reason)
+        per = np.bincount(tenants[mask], minlength=self.n_tenants)
+        self.shed_by_tenant[:, col] += per
+        if self.registry is not None:
+            for t in np.nonzero(per)[0]:
+                self.registry.counter("admission.shed", reason=reason,
+                                      tenant=int(t)).inc(int(per[t]))
+
     def admit_many(self, op: str, tenants: np.ndarray, pending_total: int,
                    pending_per_tenant: np.ndarray) -> np.ndarray:
         """FIFO-order admission for one submission batch; returns an
@@ -115,21 +142,23 @@ class AdmissionController:
         ok = np.ones(tenants.shape[0], bool)
         if op in ("add", "remove") and self.unhealthy.any():
             bad = self.unhealthy[tenants] & (op == "add")
-            self.shed_counts["health"] += int(bad.sum())
+            self._record_shed("health", tenants, bad)
             ok &= ~bad
         if p.tenant_quota is not None:
             rank = np.full(tenants.shape[0], np.iinfo(np.int64).max)
             rank[ok] = _rank_within(tenants[ok])
             over = ok & (pending_per_tenant[tenants] + rank
                          >= p.tenant_quota)
-            self.shed_counts["quota"] += int(over.sum())
+            self._record_shed("quota", tenants, over)
             ok &= ~over
         free = max(p.queue_limit - pending_total, 0)
         idx = np.cumsum(ok) - 1          # running index among accepted
         over_q = ok & (idx >= free)
-        self.shed_counts["queue"] += int(over_q.sum())
+        self._record_shed("queue", tenants, over_q)
         ok &= ~over_q
         self.admitted += int(ok.sum())
+        if self.registry is not None:
+            self.registry.counter("admission.admitted").inc(int(ok.sum()))
         return ok
 
     @property
@@ -141,6 +170,7 @@ class AdmissionController:
         return {"unhealthy": self.unhealthy.astype(int).tolist(),
                 "seen_failures": self._seen_failures.tolist(),
                 "shed_counts": dict(self.shed_counts),
+                "shed_by_tenant": self.shed_by_tenant.tolist(),
                 "admitted": self.admitted}
 
     def restore_state(self, state: dict) -> None:
@@ -148,8 +178,29 @@ class AdmissionController:
         self._seen_failures = np.asarray(state["seen_failures"], np.int64)
         self.shed_counts = {r: int(state["shed_counts"].get(r, 0))
                             for r in SHED_REASONS}
+        if "shed_by_tenant" in state:     # absent in pre-§17 checkpoints
+            self.shed_by_tenant = np.asarray(state["shed_by_tenant"],
+                                             np.int64)
+        else:
+            self.shed_by_tenant = np.zeros(
+                (self.n_tenants, len(SHED_REASONS)), np.int64)
         self.admitted = int(state["admitted"])
         if self.unhealthy.shape[0] != self.n_tenants:
             raise ValueError(
                 f"admission snapshot covers {self.unhealthy.shape[0]} "
                 f"tenants; this service has {self.n_tenants}")
+        if self.shed_by_tenant.shape != (self.n_tenants,
+                                         len(SHED_REASONS)):
+            raise ValueError(
+                f"shed_by_tenant shape {self.shed_by_tenant.shape} != "
+                f"({self.n_tenants}, {len(SHED_REASONS)})")
+        if self.registry is not None:
+            # re-derive the labeled counters (set_total is monotone: a
+            # telemetry restore may already have installed these values)
+            for col, reason in enumerate(SHED_REASONS):
+                for t in np.nonzero(self.shed_by_tenant[:, col])[0]:
+                    self.registry.counter(
+                        "admission.shed", reason=reason, tenant=int(t)
+                    ).set_total(int(self.shed_by_tenant[t, col]))
+            self.registry.counter("admission.admitted").set_total(
+                self.admitted)

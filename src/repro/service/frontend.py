@@ -28,6 +28,18 @@ The service is deliberately single-threaded and clock-parameterized: the
 replay harness drives it with the real clock for honest latency numbers,
 while the recovery driver drives it with a virtual step clock so a
 replayed stream makes bit-identical decisions (DESIGN.md §14).
+
+**Telemetry** (DESIGN.md §17): the service owns one
+:class:`repro.telemetry.Telemetry` bundle. Deterministic counters and
+the service-clock latency histograms live in its metrics registry —
+namespaced (``service.flushes``, ``admission.shed{reason=,tenant=}``)
+so filter health and service counters can merge into one ``health()``
+dict without key collisions — and ride in every flush-barrier
+checkpoint, bit-exactly. The flush pipeline is traced as nested spans
+(``service.flush`` wrapping ``pad -> launch -> sync -> results``) on the
+service clock, and each flush span is annotated with the perfmodel's
+OpCost prediction; the drift monitor turns those annotations into
+rolling measured-vs-predicted gauges.
 """
 from __future__ import annotations
 
@@ -40,8 +52,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.service.admission import AdmissionController, AdmissionPolicy
+from repro.telemetry import Telemetry, TelemetryConfig
 
 OPS = ("add", "contains", "remove")
+
+# Legacy counter name -> registry metric name (the pre-telemetry flat
+# dict keys, kept as a deprecated read view for one release).
+_LEGACY_COUNTERS = ("submitted", "flushes", "size_flushes",
+                    "deadline_flushes", "flushed_ops", "padded_slots")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +67,7 @@ class ServiceConfig:
     max_batch: int = 256               # static flush shape (pad-to-tile)
     flush_deadline: Optional[float] = 2e-3   # seconds on the service clock
     admission: AdmissionPolicy = AdmissionPolicy()
+    telemetry: TelemetryConfig = TelemetryConfig()
 
 
 class _Pending:
@@ -126,22 +145,43 @@ class FilterService:
         self.filt = filt
         self.cfg = cfg
         self.clock = clock
+        # the tracer reads the clock through this indirection so the
+        # driver's post-construction ``service.clock`` rebind (virtual
+        # step clock) is picked up by span timestamps too
+        self.telemetry = Telemetry(cfg.telemetry,
+                                   clock=lambda: self.clock())
         self.n_tenants = filt.bank_shape[0]
-        self.admission = AdmissionController(cfg.admission, self.n_tenants)
+        self.admission = AdmissionController(
+            cfg.admission, self.n_tenants,
+            registry=self.telemetry.registry)
         self.pending: Dict[str, _Pending] = {op: _Pending() for op in OPS}
         self.pending_per_tenant = np.zeros(self.n_tenants, np.int64)
         self.results: Dict[int, bool] = {}
-        self.latencies: Dict[str, List[float]] = {op: [] for op in OPS}
-        self.counters = {"submitted": 0, "flushes": 0, "size_flushes": 0,
-                         "deadline_flushes": 0, "flushed_ops": 0,
-                         "padded_slots": 0}
         self._seq = 0
         self._supports_remove = filt.engine.supports_remove
+        # pre-register the hot-path metrics (one dict lookup per use)
+        reg = self.telemetry.registry
+        self._c_submitted = reg.counter("service.submitted")
+        self._c_flushes = reg.counter("service.flushes")
+        self._c_trigger = {t: reg.counter(f"service.{t}_flushes")
+                          for t in ("size", "deadline")}
+        self._c_flushed_ops = reg.counter("service.flushed_ops")
+        self._c_padded = reg.counter("service.padded_slots")
+        self._h_latency = {op: reg.histogram("service.latency", op=op)
+                           for op in OPS}
 
     # -- intake ---------------------------------------------------------------
     @property
     def pending_total(self) -> int:
         return sum(p.count for p in self.pending.values())
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        """DEPRECATED flat counter view (pre-§17 names). Reads from the
+        telemetry registry; mutate through telemetry, not this dict."""
+        reg = self.telemetry.registry
+        return {name: reg.counter(f"service.{name}").value
+                for name in _LEGACY_COUNTERS}
 
     def submit(self, op: str, key, tenant: int = 0,
                now: Optional[float] = None) -> int:
@@ -170,21 +210,27 @@ class FilterService:
             raise ValueError(f"tenant ids must be in [0, {self.n_tenants}); "
                              f"got range [{tenants.min()}, {tenants.max()}]")
         now = self.clock() if now is None else now
-        self.counters["submitted"] += int(keys.shape[0])
-        ok = self.admission.admit_many(op, tenants, self.pending_total,
-                                       self.pending_per_tenant)
-        seqs = np.full(keys.shape[0], -1, np.int64)
-        n_ok = int(ok.sum())
-        if n_ok:
-            seqs[ok] = self._seq + np.arange(n_ok)
-            self._seq += n_ok
-            self.pending[op].append(
-                keys[ok].astype(np.uint32),
-                tenants[ok].astype(np.int32),
-                np.full(n_ok, now, np.float64), seqs[ok])
-            np.add.at(self.pending_per_tenant, tenants[ok], 1)
-            while self.pending[op].count >= self.cfg.max_batch:
-                self._flush_op(op, trigger="size")
+        tracer = self.telemetry.tracer
+        with tracer.span("service.submit", op=op,
+                         n=int(keys.shape[0])) as sp:
+            self._c_submitted.inc(int(keys.shape[0]))
+            with tracer.span("service.admit", op=op):
+                ok = self.admission.admit_many(op, tenants,
+                                               self.pending_total,
+                                               self.pending_per_tenant)
+            seqs = np.full(keys.shape[0], -1, np.int64)
+            n_ok = int(ok.sum())
+            sp.set(admitted=n_ok, shed=int(keys.shape[0]) - n_ok)
+            if n_ok:
+                seqs[ok] = self._seq + np.arange(n_ok)
+                self._seq += n_ok
+                self.pending[op].append(
+                    keys[ok].astype(np.uint32),
+                    tenants[ok].astype(np.int32),
+                    np.full(n_ok, now, np.float64), seqs[ok])
+                np.add.at(self.pending_per_tenant, tenants[ok], 1)
+                while self.pending[op].count >= self.cfg.max_batch:
+                    self._flush_op(op, trigger="size")
         return seqs
 
     # -- flushing -------------------------------------------------------------
@@ -214,37 +260,60 @@ class FilterService:
         return n
 
     def _flush_op(self, op: str, trigger: str) -> None:
-        """Execute one fixed-shape batch of ``op`` (FIFO head, padded)."""
+        """Execute one fixed-shape batch of ``op`` (FIFO head, padded).
+
+        Traced as the span pipeline ``service.flush`` > ``pad`` >
+        ``launch`` > ``sync`` > ``results``; the flush span carries the
+        perfmodel OpCost annotation for its exact padded configuration.
+        Launch+sync wall time is measured on the REAL clock for the
+        drift monitor even when the service clock is virtual — drift is
+        a report metric, not replayed service state."""
         mb = self.cfg.max_batch
-        keys, tenants, t_enq, seq = self.pending[op].take(mb)
-        take = keys.shape[0]
-        kb = np.zeros((mb, 2), np.uint32)
-        tb = np.zeros((mb,), np.int32)
-        vb = np.zeros((mb,), bool)
-        kb[:take] = keys
-        tb[:take] = tenants
-        vb[:take] = True
-        kj, tj = jnp.asarray(kb), jnp.asarray(tb)
-        if op == "contains":
-            hits = self.filt.contains(kj, tenants=tj)
-            hits = np.asarray(hits)[:take]
-            self.results.update(zip(seq.tolist(), hits.tolist()))
-        elif op == "add":
-            self.filt = self.filt.add(kj, tenants=tj, valid=jnp.asarray(vb))
-            jax.block_until_ready(self.filt.words)
-        else:
-            self.filt = self.filt.remove(kj, tenants=tj,
-                                         valid=jnp.asarray(vb))
-            jax.block_until_ready(self.filt.words)
-        t_done = self.clock()
-        self.latencies[op].extend((t_done - t_enq).tolist())
-        np.subtract.at(self.pending_per_tenant, tenants, 1)
-        self.counters["flushes"] += 1
-        self.counters[f"{trigger}_flushes"] += 1
-        self.counters["flushed_ops"] += take
-        self.counters["padded_slots"] += mb - take
-        if self.counters["flushes"] % self.cfg.admission.health_every == 0:
-            self.admission.refresh(self.filt)
+        tracer = self.telemetry.tracer
+        with tracer.span("service.flush", op=op, trigger=trigger) as sp:
+            keys, tenants, t_enq, seq = self.pending[op].take(mb)
+            take = keys.shape[0]
+            sp.set(take=int(take), padded=int(mb - take))
+            with tracer.span("service.flush.pad", op=op):
+                kb = np.zeros((mb, 2), np.uint32)
+                tb = np.zeros((mb,), np.int32)
+                vb = np.zeros((mb,), bool)
+                kb[:take] = keys
+                tb[:take] = tenants
+                vb[:take] = True
+                kj, tj = jnp.asarray(kb), jnp.asarray(tb)
+            t0_real = time.perf_counter()
+            if op == "contains":
+                with tracer.span("service.flush.launch", op=op):
+                    hits = self.filt.contains(kj, tenants=tj)
+                with tracer.span("service.flush.sync", op=op):
+                    hits = np.asarray(hits)[:take]
+            else:
+                with tracer.span("service.flush.launch", op=op):
+                    if op == "add":
+                        self.filt = self.filt.add(kj, tenants=tj,
+                                                  valid=jnp.asarray(vb))
+                    else:
+                        self.filt = self.filt.remove(kj, tenants=tj,
+                                                     valid=jnp.asarray(vb))
+                with tracer.span("service.flush.sync", op=op):
+                    jax.block_until_ready(self.filt.words)
+            measured_s = time.perf_counter() - t0_real
+            with tracer.span("service.flush.results", op=op):
+                if op == "contains":
+                    self.results.update(zip(seq.tolist(), hits.tolist()))
+                t_done = self.clock()
+                self._h_latency[op].observe_many(t_done - t_enq)
+                np.subtract.at(self.pending_per_tenant, tenants, 1)
+            self._c_flushes.inc()
+            self._c_trigger[trigger].inc()
+            self._c_flushed_ops.inc(take)
+            self._c_padded.inc(mb - take)
+            if self.telemetry.drift is not None:
+                sp.set(**self.telemetry.drift.observe(self.filt, op, mb,
+                                                      measured_s))
+            if self._c_flushes.value % self.cfg.admission.health_every == 0:
+                self.admission.refresh(self.filt)
 
     # -- results / observability ----------------------------------------------
     def take_results(self) -> Dict[int, bool]:
@@ -252,31 +321,76 @@ class FilterService:
         return out
 
     def health(self) -> dict:
-        """Filter health + service counters, one dashboardable dict."""
+        """One namespaced, JSON-able operational snapshot: filter health
+        under ``filter.*``, service counters and latency summaries under
+        ``service.*``, admission under ``admission.*``, drift gauges
+        under ``perfmodel.*`` — no key collisions by construction (the
+        pre-§17 surface merged raw counter names into the filter-health
+        dict; :meth:`legacy_health` keeps that shape as a deprecated
+        view)."""
+        out = {f"filter.{k}": v for k, v in self.filt.health().items()}
+        out.update(self.telemetry.registry.snapshot())
+        out["service.pending"] = self.pending_total
+        sub = self._c_submitted.value
+        out["admission.shed_rate"] = (
+            (self.admission.shed_total / sub) if sub else 0.0)
+        return out
+
+    def legacy_health(self) -> dict:
+        """DEPRECATED pre-§17 health dict (raw filter-health keys with
+        flat counters merged on top — the key-collision surface). Kept
+        as a read-only view for one release; use :meth:`health`."""
+        import warnings
+        warnings.warn("FilterService.legacy_health() is deprecated; use "
+                      "health() (namespaced telemetry snapshot)",
+                      DeprecationWarning, stacklevel=2)
         out = self.filt.health()
         out.update(self.counters)
         out["pending"] = self.pending_total
         out["admitted"] = self.admission.admitted
         out["shed"] = dict(self.admission.shed_counts)
-        sub = self.counters["submitted"]
+        sub = self._c_submitted.value
         out["shed_rate"] = (self.admission.shed_total / sub) if sub else 0.0
         return out
 
+    def latency_summary(self, op: Optional[str] = None,
+                        unit: float = 1e6) -> dict:
+        """Nearest-rank tail summary ({n, p50, p99, p999, mean, max},
+        seconds scaled by ``unit``) from the telemetry histograms — one
+        op's, or all ops pooled (the replay harness's report row)."""
+        if op is not None:
+            return self._h_latency[op].summary(unit=unit)
+        from repro.telemetry import Histogram
+        pooled = Histogram("service.latency.all", ())
+        for o in OPS:
+            pooled.observe_many(self._h_latency[o].samples)
+        return pooled.summary(unit=unit)
+
     def all_latencies(self) -> np.ndarray:
-        return np.asarray([l for op in OPS for l in self.latencies[op]])
+        return np.asarray([l for op in OPS
+                           for l in self._h_latency[op].samples])
+
+    def reset_latencies(self) -> None:
+        """Zero the latency histograms (benchmark warmup exclusion)."""
+        for h in self._h_latency.values():
+            h.reset()
 
     # -- recovery plumbing ----------------------------------------------------
     def snapshot_state(self) -> dict:
         """JSON-able cursor of everything a deterministic replay needs
         besides the filter itself. Only meaningful at a flush barrier
         (pending queues empty — ``drain()`` first); in-flight requests are
-        deliberately NOT checkpointed, they are re-fed by replay."""
+        deliberately NOT checkpointed, they are re-fed by replay. The
+        telemetry registry (counters, histograms) rides along bit-exactly;
+        the ``counters`` dict is the deprecated flat view, written for
+        old readers."""
         if self.pending_total:
             raise RuntimeError(
                 f"snapshot_state() at a non-barrier: {self.pending_total} "
                 f"requests pending — drain() first")
         return {"seq": self._seq, "counters": dict(self.counters),
-                "admission": self.admission.snapshot_state()}
+                "admission": self.admission.snapshot_state(),
+                "telemetry": self.telemetry.snapshot_state()}
 
     def restore_state(self, filt, state: dict) -> None:
         """Install a checkpointed filter + cursor; pending queues reset
@@ -287,7 +401,23 @@ class FilterService:
                 f"shape {self.filt.bank_shape}")
         self.filt = filt
         self._seq = int(state["seq"])
-        self.counters = {k: int(v) for k, v in state["counters"].items()}
+        if "telemetry" in state:
+            self.telemetry.restore_state(state["telemetry"])
+        else:                      # pre-§17 checkpoint: flat counters only
+            reg = self.telemetry.registry
+            for k, v in state.get("counters", {}).items():
+                reg.counter(f"service.{k}").set_total(int(v))
+        # re-bind the pre-registered metric objects to the restored
+        # registry contents (restore_state replaced the instances)
+        reg = self.telemetry.registry
+        self._c_submitted = reg.counter("service.submitted")
+        self._c_flushes = reg.counter("service.flushes")
+        self._c_trigger = {t: reg.counter(f"service.{t}_flushes")
+                          for t in ("size", "deadline")}
+        self._c_flushed_ops = reg.counter("service.flushed_ops")
+        self._c_padded = reg.counter("service.padded_slots")
+        self._h_latency = {op: reg.histogram("service.latency", op=op)
+                           for op in OPS}
         self.admission.restore_state(state["admission"])
         for p in self.pending.values():
             p.clear()

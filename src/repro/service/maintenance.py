@@ -65,16 +65,25 @@ class MaintenanceLoop:
     def tick(self, service, step: int) -> None:
         """One maintenance step (call after each stream step). ``step`` is
         the NEXT stream step to execute — the value a restore resumes at —
-        and is what checkpoints are labeled with."""
+        and is what checkpoints are labeled with. Each maintenance event
+        increments its tick-driven (hence deterministic) telemetry
+        counter and is traced as a ``maintenance.*`` span."""
         self._ticks += 1
         cfg = self.cfg
+        reg = service.telemetry.registry
+        tracer = service.telemetry.tracer
+        reg.counter("maintenance.ticks").inc()
         if cfg.advance_every and self._ticks % cfg.advance_every == 0:
-            service.drain()     # inserts racing an advance would straddle
-            service.filt = service.filt.advance()   # age classes
+            with tracer.span("maintenance.advance", step=step):
+                service.drain()  # inserts racing an advance would straddle
+                service.filt = service.filt.advance()   # age classes
+            reg.counter("maintenance.advances").inc()
             self.events.append({"kind": "advance", "step": step})
         if cfg.decay_every and self._ticks % cfg.decay_every == 0:
-            service.drain()
-            service.filt = service.filt.decay()
+            with tracer.span("maintenance.decay", step=step):
+                service.drain()
+                service.filt = service.filt.decay()
+            reg.counter("maintenance.decays").inc()
             self.events.append({"kind": "decay", "step": step})
         if cfg.resize_every and self._ticks % cfg.resize_every == 0:
             self._maybe_resize(service, step)
@@ -100,20 +109,28 @@ class MaintenanceLoop:
             return                     # at the ceiling: shedding takes over
         from repro.service.resharding import grow_capacity
         grow_capacity(service, new_m_bits=target)
+        service.telemetry.registry.counter("maintenance.resizes").inc()
         self.events.append({"kind": "resize", "step": step,
                             "load": round(load, 4),
                             "m_bits": service.filt.spec.m_bits})
 
     def checkpoint(self, service, step: int) -> None:
-        """Flush-barrier checkpoint: drain, snapshot filter + cursors."""
-        service.drain()
-        self.wait()             # at most one async write in flight
-        extra = {"service": service.snapshot_state(),
-                 "maintenance": self.snapshot_state()}
-        self._pending_save = ckpt.save_filter(
-            self.cfg.ckpt_dir, step, service.filt,
-            sync=not self.cfg.async_checkpoint, keep=self.cfg.keep,
-            extra=extra)
+        """Flush-barrier checkpoint: drain, snapshot filter + cursors.
+        The checkpoint counter increments BEFORE the snapshot is built so
+        the checkpoint being written already counts itself — a restored
+        twin and a clean twin then agree on the counter at every step."""
+        with service.telemetry.tracer.span("maintenance.checkpoint",
+                                           step=step):
+            service.drain()
+            self.wait()         # at most one async write in flight
+            service.telemetry.registry.counter(
+                "maintenance.checkpoints").inc()
+            extra = {"service": service.snapshot_state(),
+                     "maintenance": self.snapshot_state()}
+            self._pending_save = ckpt.save_filter(
+                self.cfg.ckpt_dir, step, service.filt,
+                sync=not self.cfg.async_checkpoint, keep=self.cfg.keep,
+                extra=extra)
         self.events.append({"kind": "checkpoint", "step": step})
 
     def wait(self) -> None:
@@ -141,4 +158,8 @@ def restore_service(service, maintenance: Optional[MaintenanceLoop],
     service.restore_state(filt, extra["service"])
     if maintenance is not None and "maintenance" in extra:
         maintenance.restore_state(extra["maintenance"])
+    # restores are a fact about THIS process, not the replayed stream —
+    # non-deterministic by definition (the clean twin never restores)
+    service.telemetry.registry.counter(
+        "service.restores", deterministic=False).inc()
     return saved_step

@@ -99,9 +99,12 @@ def grow_capacity(service, *, factor: int = 2,
         raise ValueError(
             f"grow_capacity cannot shrink ({filt.spec.m_bits} -> {target} "
             f"bits): use Filter.resize() directly for deliberate shrinks")
-    service.drain()             # in-flight batches must not straddle specs
-    service.filt = service.filt.resize(target)
-    service.admission.refresh(service.filt)
+    with service.telemetry.tracer.span("resharding.grow_capacity",
+                                       m_bits=target):
+        service.drain()         # in-flight batches must not straddle specs
+        service.filt = service.filt.resize(target)
+        service.admission.refresh(service.filt)
+    service.telemetry.registry.counter("resharding.grow_capacity").inc()
     return service.filt.spec.m_bits
 
 
@@ -111,23 +114,30 @@ def reshard_service(service, *, bank: Optional[int] = None, mesh=None,
 
     ``bank=B2`` grows the tenant axis; ``mesh=`` moves a (shardable) bank
     onto a new mesh via the elastic path. Admission state is rebuilt for
-    the new tenant count: existing tenants keep their health flags, new
+    the new tenant count: existing tenants keep their health flags (and
+    per-tenant shed history — telemetry counters are continuous across a
+    reshard, since the new controller shares the service's registry), new
     tenants start healthy."""
-    service.drain()
-    filt = service.filt
-    if bank is not None:
-        filt = grow_bank(filt, bank)
-    if mesh is not None:
-        from repro.runtime.elastic import reshard_filter_bank
-        filt = reshard_filter_bank(filt, mesh, axis=axis)
-    old = service.admission
-    service.filt = filt
-    service.n_tenants = filt.bank_shape[0]
-    ctl = AdmissionController(old.policy, service.n_tenants)
-    n_keep = min(old.n_tenants, service.n_tenants)
-    ctl.unhealthy[:n_keep] = old.unhealthy[:n_keep]
-    ctl._seen_failures[:n_keep] = old._seen_failures[:n_keep]
-    ctl.shed_counts = dict(old.shed_counts)
-    ctl.admitted = old.admitted
-    service.admission = ctl
-    service.pending_per_tenant = np.zeros(service.n_tenants, np.int64)
+    with service.telemetry.tracer.span("resharding.reshard",
+                                       bank=bank or 0):
+        service.drain()
+        filt = service.filt
+        if bank is not None:
+            filt = grow_bank(filt, bank)
+        if mesh is not None:
+            from repro.runtime.elastic import reshard_filter_bank
+            filt = reshard_filter_bank(filt, mesh, axis=axis)
+        old = service.admission
+        service.filt = filt
+        service.n_tenants = filt.bank_shape[0]
+        ctl = AdmissionController(old.policy, service.n_tenants,
+                                  registry=old.registry)
+        n_keep = min(old.n_tenants, service.n_tenants)
+        ctl.unhealthy[:n_keep] = old.unhealthy[:n_keep]
+        ctl._seen_failures[:n_keep] = old._seen_failures[:n_keep]
+        ctl.shed_counts = dict(old.shed_counts)
+        ctl.shed_by_tenant[:n_keep] = old.shed_by_tenant[:n_keep]
+        ctl.admitted = old.admitted
+        service.admission = ctl
+        service.pending_per_tenant = np.zeros(service.n_tenants, np.int64)
+    service.telemetry.registry.counter("resharding.reshards").inc()

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.models.model import Model
 from repro.serving.ngram_guard import NGramGuard
+from repro.telemetry import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -35,36 +36,62 @@ def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
 class Engine:
     def __init__(self, model: Model, params, batch: int, max_len: int,
                  guard: Optional[NGramGuard] = None,
-                 sample: Callable = greedy_sample):
+                 sample: Callable = greedy_sample,
+                 registry: Optional[MetricsRegistry] = None):
         self.model = model
         self.params = params
         self.batch = batch
         self.max_len = max_len
         self.guard = guard
         self.sample = sample
+        # the serving dashboard surface: pass the service's registry to
+        # merge guard metrics into one Prometheus snapshot, or let the
+        # engine own a private one
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos))
 
     def stats(self) -> Dict[str, float]:
-        """Serving-health counters; guard filter health via the Filter API
-        (``Filter.health()`` — fill drives when to rotate the repetition
-        filter, cuckoo ``insert_failures``/windowed ring counters surface
-        the engine-specific failure modes)."""
-        out: Dict[str, float] = {}
+        """Namespaced serving-health snapshot (``guard.*`` keys), synced
+        into the engine's telemetry registry: guard counters as counters,
+        guard filter health via the Filter API as gauges (fill drives
+        when to rotate the repetition filter, cuckoo ``insert_failures``/
+        windowed ring counters surface the engine-specific failure
+        modes). :meth:`stats_legacy` keeps the pre-§17 flat ``guard_*``
+        dict as a deprecated view."""
         if self.guard is not None:
-            out["guard_observed"] = float(self.guard.stats.observed)
-            out["guard_penalized"] = float(self.guard.stats.penalized)
+            reg = self.registry
+            reg.counter("guard.observed").set_total(
+                int(self.guard.stats.observed))
+            reg.counter("guard.penalized").set_total(
+                int(self.guard.stats.penalized))
+            reg.counter("guard.decays").set_total(
+                int(self.guard.stats.decays))
             h = self.guard.filt.health()
             if "fill_fraction" in h:
-                out["guard_fill"] = h["fill_fraction"]
+                reg.gauge("guard.fill_fraction").set(h["fill_fraction"])
             if "load_factor" in h:
-                out["guard_load_factor"] = h["load_factor"]
-                out["guard_insert_failures"] = float(h["insert_failures"])
+                reg.gauge("guard.load_factor").set(h["load_factor"])
+                reg.gauge("guard.insert_failures").set(
+                    float(h["insert_failures"]))
             if "head" in h:
-                out["guard_generations"] = float(h["generations"])
-                out["guard_head"] = float(np.max(h["head"]))
-            out["guard_approx_ngrams"] = h["approx_count"]
-        return out
+                reg.gauge("guard.generations").set(float(h["generations"]))
+                reg.gauge("guard.head").set(float(np.max(h["head"])))
+            reg.gauge("guard.approx_ngrams").set(float(h["approx_count"]))
+        return self.registry.snapshot(prefix="guard.")
+
+    def stats_legacy(self) -> Dict[str, float]:
+        """DEPRECATED pre-§17 flat ``guard_*`` stats dict; use
+        :meth:`stats` (namespaced telemetry snapshot)."""
+        import warnings
+        warnings.warn("Engine.stats_legacy() is deprecated; use stats() "
+                      "(namespaced telemetry snapshot)",
+                      DeprecationWarning, stacklevel=2)
+        st = self.stats()
+        legacy_names = {"guard.fill_fraction": "guard_fill"}
+        return {legacy_names.get(k, k.replace(".", "_")): float(v)
+                for k, v in st.items()}
 
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Process requests in batch-sized waves (same prompt lengths padded)."""

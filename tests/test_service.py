@@ -129,7 +129,7 @@ def test_queue_bound_sheds_excess():
     assert (seqs >= 0).sum() == 50
     assert (seqs < 0).sum() == 30
     assert svc.admission.shed_counts["queue"] == 30
-    assert svc.health()["shed_rate"] == pytest.approx(30 / 80)
+    assert svc.health()["admission.shed_rate"] == pytest.approx(30 / 80)
 
 
 def test_tenant_quota_sheds_hot_tenant():
@@ -344,7 +344,7 @@ def _driver_run(variant, tmpdir, fail_at=None, steps=9):
 
 @pytest.mark.parametrize("variant", ["sbf", "cuckoo"])
 def test_recovery_bit_exact(variant, tmp_path):
-    clean, _ = _driver_run(variant, tmp_path / "clean")
+    clean, drv_clean = _driver_run(variant, tmp_path / "clean")
     failed, drv = _driver_run(variant, tmp_path / "failed", fail_at=7)
     kinds = [e["kind"] for e in drv.events]
     assert kinds.count("failure") == 1 and "restore" in kinds
@@ -352,6 +352,16 @@ def test_recovery_bit_exact(variant, tmp_path):
     if clean.state is not None:
         assert jnp.array_equal(clean.state, failed.state)
     assert len(drv.recovery_times) == 1 and drv.recovery_times[0] > 0
+    # §17: deterministic telemetry (counters, virtual-clock latency
+    # histograms) replays bit-exactly alongside the filter words; the
+    # wall-clock report metrics (drift gauges, service.restores) are
+    # excluded by the deterministic_only view
+    reg_c = drv_clean.service.telemetry.registry
+    reg_f = drv.service.telemetry.registry
+    assert (reg_c.snapshot_state(deterministic_only=True)
+            == reg_f.snapshot_state(deterministic_only=True))
+    assert reg_f.counter("service.restores",
+                         deterministic=False).value == 1
 
 
 def test_driver_max_restarts(tmp_path):
@@ -385,11 +395,99 @@ def test_filter_health_keys():
     assert h["generations"] == 3 and h["head"] == [0] * T
 
 
-def test_service_health_merges_counters():
+def test_service_health_is_namespaced():
+    """The §17 fix for the key-collision hazard: filter health and service
+    counters live in disjoint namespaces of one flat dict."""
     svc = FilterService(_bank(), ServiceConfig(max_batch=16))
     keys, tenants = _requests(16, seed=14)
     svc.submit_many("add", keys, tenants)
     h = svc.health()
+    for k in ("filter.fill_fraction", "service.flushes",
+              "admission.shed_rate", "service.pending",
+              "admission.admitted"):
+        assert k in h
+    # no raw (un-namespaced) keys survive — the collision class is gone
+    assert "fill_fraction" not in h and "flushes" not in h
+    # every key carries exactly one namespace prefix
+    assert all("." in k for k in h)
+
+
+def test_service_legacy_health_view():
+    svc = FilterService(_bank(), ServiceConfig(max_batch=16))
+    keys, tenants = _requests(16, seed=14)
+    svc.submit_many("add", keys, tenants)
+    with pytest.warns(DeprecationWarning):
+        h = svc.legacy_health()
     for k in ("fill_fraction", "flushes", "shed_rate", "pending",
               "shed", "admitted"):
         assert k in h
+    assert h["flushes"] == svc.counters["flushes"]
+
+
+def test_flush_spans_carry_perfmodel_prediction():
+    svc = FilterService(_bank(), ServiceConfig(max_batch=16))
+    keys, tenants = _requests(32, seed=15)
+    svc.submit_many("add", keys, tenants)
+    svc.drain()
+    flushes = svc.telemetry.tracer.spans("service.flush")
+    assert flushes
+    for sp in flushes:
+        assert sp["predicted_us"] > 0 and sp["ceiling_us"] > 0
+        assert sp["regime"] in ("vmem", "hbm")
+    # children nest under the flush span (ids are deterministic)
+    kids = [s for s in svc.telemetry.tracer.spans()
+            if s["name"].startswith("service.flush.")]
+    flush_ids = {s["span"] for s in flushes}
+    assert kids and all(k["parent"] in flush_ids for k in kids)
+
+
+def test_per_tenant_shed_counters():
+    svc = FilterService(_bank(), ServiceConfig(
+        max_batch=1 << 10, flush_deadline=None,
+        admission=AdmissionPolicy(tenant_quota=5)))
+    keys = np.ones((20, 2), np.uint32)
+    svc.submit_many("add", keys, np.zeros(20, np.int64))    # tenant 0 hot
+    svc.submit_many("add", keys[:3], np.full(3, 1))         # tenant 1 cold
+    assert svc.admission.shed_by_tenant[0].sum() == 15
+    assert svc.admission.shed_by_tenant[1].sum() == 0
+    c = svc.telemetry.registry.counter("admission.shed",
+                                       reason="quota", tenant=0)
+    assert c.value == 15
+    assert c.key == "admission.shed{reason=quota,tenant=0}"
+
+
+def test_counter_continuity_across_snapshot_restore():
+    svc = FilterService(_bank(), ServiceConfig(max_batch=16,
+                                               flush_deadline=None))
+    keys, tenants = _requests(48, seed=16)
+    svc.submit_many("add", keys, tenants)
+    svc.drain()
+    state = svc.snapshot_state()
+    svc2 = FilterService(_bank(), ServiceConfig(max_batch=16,
+                                                flush_deadline=None))
+    svc2.restore_state(svc.filt, state)
+    assert (svc2.telemetry.registry.snapshot_state()
+            == svc.telemetry.registry.snapshot_state())
+    # restored counters keep counting from the restored totals
+    svc2.submit_many("add", keys[:16], tenants[:16])
+    svc2.drain()
+    assert svc2.counters["flushed_ops"] == svc.counters["flushed_ops"] + 16
+
+
+def test_counter_continuity_across_reshard_and_grow():
+    svc = FilterService(_bank(), ServiceConfig(
+        max_batch=1 << 10, flush_deadline=None,
+        admission=AdmissionPolicy(tenant_quota=5)))
+    keys = np.ones((20, 2), np.uint32)
+    svc.submit_many("add", keys, np.zeros(20, np.int64))
+    shed_before = svc.admission.shed_by_tenant.copy()
+    flushes_before = svc.counters["flushes"]
+    reshard_service(svc, bank=8)
+    assert svc.admission.shed_by_tenant.shape == (8, 3)
+    assert (svc.admission.shed_by_tenant[:T] == shed_before).all()
+    # the registry is shared across the reshard: counters are continuous
+    assert svc.telemetry.registry.counter(
+        "admission.shed", reason="quota", tenant=0).value == 15
+    assert svc.counters["flushes"] >= flushes_before
+    assert svc.telemetry.registry.counter(
+        "resharding.reshards").value == 1
